@@ -1,0 +1,90 @@
+"""Figs 7+8: instruction reduction & speedup across the ablation ladder.
+
+For every benchmark and every cumulative configuration (base, +Uni-HW,
++Uni-Ann, +Uni-Func, +ZiCond, +Recon):
+  * run the interpreter on identical inputs,
+  * verify outputs against the numpy reference (correctness gate, §5),
+  * record dynamic instructions (Fig 7 metric: base_instrs/instrs,
+    higher = better) and SimX-model cycles (Fig 8 metric: base_cycles/
+    cycles).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import interp
+from repro.core.passes.pipeline import ABLATION_LADDER, run_pipeline
+from repro.core.simx import CycleModel
+from repro.volt_bench import BENCHES
+
+# Fig 7/8 use the OpenCL suite (the CUDA hw/sw pairs are Fig 9's)
+FIG7_BENCHES = ["vecadd", "saxpy", "dotproduct", "transpose", "reduce0",
+                "psum", "psort", "sfilter", "sgemm", "blackscholes", "bfs",
+                "pathfinder", "kmeans", "nearn", "stencil", "spmv",
+                "cfd_like", "srad_flag", "gc_like"]
+
+
+def run(seed: int = 7, benches: List[str] = FIG7_BENCHES) -> Dict:
+    model = CycleModel()
+    results: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for name in benches:
+        b = BENCHES[name]
+        rng = np.random.default_rng(seed)
+        bufs0, scalars, params = b.make(rng)
+        expect = b.ref(bufs0, scalars)
+        per_cfg = {}
+        for cfg in ABLATION_LADDER:
+            mod = b.handle.build(None)
+            ck = run_pipeline(mod, b.handle.name, cfg)
+            bufs = {k: v.copy() for k, v in bufs0.items()}
+            st = interp.launch(ck.fn, bufs, params, scalar_args=scalars)
+            for k in bufs:
+                assert np.allclose(bufs[k], expect[k], atol=b.atol,
+                                   rtol=1e-3), \
+                    f"{name}/{cfg.label}: buffer {k} mismatch"
+            per_cfg[cfg.label] = {
+                "instrs": st.instrs,
+                "cycles": model.cycles(st),
+                "mem_requests": st.mem_requests,
+            }
+        results[name] = per_cfg
+    return results
+
+
+def render(results: Dict) -> str:
+    labels = [c.label for c in ABLATION_LADDER]
+    lines = ["# Fig 7 — instruction reduction factor (base instrs / config instrs)"]
+    hdr = "| bench | " + " | ".join(labels) + " |"
+    lines += [hdr, "|" + "---|" * (len(labels) + 1)]
+    for name, per in results.items():
+        base = per["base"]["instrs"]
+        row = [f"{base / per[l]['instrs']:.3f}" for l in labels]
+        lines.append(f"| {name} | " + " | ".join(row) + " |")
+    lines.append("")
+    lines.append("# Fig 8 — speedup (base cycles / config cycles)")
+    lines += [hdr, "|" + "---|" * (len(labels) + 1)]
+    for name, per in results.items():
+        base = per["base"]["cycles"]
+        row = [f"{base / per[l]['cycles']:.3f}" for l in labels]
+        lines.append(f"| {name} | " + " | ".join(row) + " |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    t0 = time.time()
+    results = run()
+    print(render(results))
+    # CSV contract: name,us_per_call,derived
+    for name, per in results.items():
+        full = per["base+hw+ann+func+zic+rec"]
+        print(f"divergence_opt/{name},"
+              f"{(time.time() - t0) * 1e6 / len(results):.1f},"
+              f"instr_red={per['base']['instrs'] / full['instrs']:.3f};"
+              f"speedup={per['base']['cycles'] / full['cycles']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

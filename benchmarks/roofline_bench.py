@@ -1,0 +1,25 @@
+"""Roofline summary benchmark: reads dry-run artifacts and prints the
+per-cell three-term analysis (one row per paper-table cell)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+
+def main() -> None:
+    art = Path("artifacts/dryrun")
+    if not art.exists() or not list(art.glob("*__pod.json")):
+        print("roofline/none,0,missing=run 'python -m repro.launch.dryrun"
+              " --all' first")
+        return
+    from repro.launch.roofline import load_rows
+    for mesh in ("pod", "multipod"):
+        rows = load_rows(art, mesh)
+        for r in rows:
+            dom_s = {"compute": r.compute_s, "memory": r.memory_s,
+                     "collective": r.collective_s}[r.dominant]
+            print(f"roofline/{r.arch}/{r.shape}/{mesh},0,"
+                  f"dom={r.dominant};t={dom_s:.3e};useful={r.useful_ratio:.2f}")
+
+
+if __name__ == "__main__":
+    main()

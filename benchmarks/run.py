@@ -1,0 +1,36 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Outputs ``name,us_per_call,derived`` CSV lines (plus human-readable
+markdown tables above them).  Sections:
+
+  divergence_opt : Fig 7 (instruction reduction) + Fig 8 (speedups)
+  isa_ext        : Fig 9 (vote/shuffle/aggregated-atomic ISA extensions)
+  sharedmem      : Fig 10 (shared-memory mapping under cache configs)
+  compile_time   : SS5.2 compile-time overhead geomean
+  kernels        : Pallas kernel vs jnp-oracle timings (CPU interpret)
+  roofline       : per (arch x shape x mesh) three-term roofline rows
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (compile_time, divergence_opt, isa_ext,
+                            kernels_bench, roofline_bench, sharedmem)
+    sections = [
+        ("divergence_opt", divergence_opt.main),
+        ("isa_ext", isa_ext.main),
+        ("sharedmem", sharedmem.main),
+        ("compile_time", compile_time.main),
+        ("kernels", kernels_bench.main),
+        ("roofline", roofline_bench.main),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in sections:
+        if only and name != only:
+            continue
+        print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+        fn()
+
+
+if __name__ == "__main__":
+    main()

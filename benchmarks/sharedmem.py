@@ -1,0 +1,59 @@
+"""Fig 10 — Case Study 2: shared-memory mapping (per-core local memory vs
+global memory) across cache configurations.
+
+The same shared-memory kernels run once; the cycle model is evaluated
+under both mappings and two L2 assumptions (the paper's cache sweep):
+local-memory mapping wins for barrier-heavy shared-memory kernels, and
+the gap narrows with a larger cache (lower global_line_cost).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import interp
+from repro.core.passes.pipeline import ABLATION_LADDER, run_pipeline
+from repro.core.simx import CycleModel
+from repro.volt_bench import BENCHES
+
+SHARED_BENCHES = ["reduce0", "psum", "shuffle_sw", "vote_sw"]
+FULL = ABLATION_LADDER[-1]
+
+CONFIGS = {
+    "local": CycleModel(shared_in_local=True),
+    "global(noL2)": CycleModel(shared_in_local=False, global_line_cost=12.0),
+    "global(L2)": CycleModel(shared_in_local=False, global_line_cost=6.0),
+}
+
+
+def run(seed: int = 13) -> Dict[str, Dict[str, float]]:
+    out = {}
+    for name in SHARED_BENCHES:
+        b = BENCHES[name]
+        rng = np.random.default_rng(seed)
+        bufs0, scalars, params = b.make(rng)
+        mod = b.handle.build(None)
+        ck = run_pipeline(mod, b.handle.name, FULL)
+        bufs = {k: v.copy() for k, v in bufs0.items()}
+        st = interp.launch(ck.fn, bufs, params, scalar_args=scalars)
+        out[name] = {k: m.cycles(st) for k, m in CONFIGS.items()}
+    return out
+
+
+def main() -> None:
+    res = run()
+    print("# Fig 10 — shared-memory mapping cycles (lower = better)")
+    cols = list(CONFIGS)
+    print("| bench | " + " | ".join(cols) + " |")
+    print("|" + "---|" * (len(cols) + 1))
+    for name, v in res.items():
+        print(f"| {name} | " + " | ".join(f"{v[c]:.0f}" for c in cols)
+              + " |")
+    for name, v in res.items():
+        print(f"sharedmem/{name},0,local_vs_global="
+              f"{v['global(noL2)'] / v['local']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

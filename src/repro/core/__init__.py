@@ -1,0 +1,13 @@
+"""repro.core — the VOLT compiler (paper-faithful reproduction).
+
+Public API:
+    frontends.opencl / frontends.cuda   @kernel / @device decorators
+    passes.PassConfig, passes.run_pipeline, ABLATION_LADDER
+    interp.launch / interp.reference_launch / LaunchParams
+    backends.compile_jax                vectorized JAX lowering
+    backends.emit_asm                   Vortex-flavored assembly
+    runtime.Runtime                     host APIs incl. Case Study 2
+    simx.CycleModel                     cycle model for Figs 8/10
+"""
+from . import graph, interp, simx, vir  # noqa: F401
+from .vir import Module, Function, IRBuilder, Op, Ty, verify  # noqa: F401

@@ -1,0 +1,2 @@
+from .jax_backend import JaxKernel, compile_jax  # noqa: F401
+from .asm import emit_asm, static_counts  # noqa: F401

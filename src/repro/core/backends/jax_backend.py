@@ -1,0 +1,733 @@
+"""JAX back-end: lowers divergence-managed VIR to vectorized, masked JAX.
+
+This is the TPU-native replacement for Vortex's hardware divergence
+machinery (DESIGN.md §2): the compile-time walker below IS the IPDOM stack.
+
+  * a warp/workgroup executes as a lane axis of width W;
+  * ``vx_split``/``vx_join`` regions lower to *linearized* predicated code:
+    both sides are traced, slot and buffer states merge via
+    ``jnp.where(cond_mask, then_state, else_state)``;
+  * ``vx_pred`` loops lower to ``lax.while_loop`` carrying
+    (slots-written, buffers-written, active-mask); the loop runs while any
+    lane remains active, the entry mask is restored at the exit — exactly
+    the Fig 2b semantics, evaluated at trace time;
+  * uniform branches are linearized too in the baseline; the beyond-paper
+    ``scalarize_uniform`` flag lowers them to ``lax.cond`` on lane 0 so
+    only one side executes (see EXPERIMENTS.md §Perf);
+  * warp collectives: vote -> masked reductions, shfl -> lane gather,
+    atomics -> conflict-ordered lane folds (prefix-combine per address).
+
+The produced function is pure: ``(buffers, scalars) -> buffers`` and jits
+cleanly; kernels/simt_exec wraps it in a pallas_call whose grid is the
+workgroup dimension.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..vir import (AddrSpace, Block, Const, Function, GlobalVar, Instr,
+                   Module, Op, Param, Reg, Slot, Ty, Value, BINOPS, UNOPS)
+from .. import graph
+from ..interp import LaunchParams
+
+_TY_DTYPE = {Ty.I32: jnp.int32, Ty.F32: jnp.float32, Ty.BOOL: jnp.bool_}
+
+
+class LowerError(Exception):
+    pass
+
+
+# --------------------------------------------------------------------------
+# state: slots / buffers / mask (functional)
+# --------------------------------------------------------------------------
+
+@dataclass
+class _State:
+    slots: Dict[int, jnp.ndarray]          # id(Slot) -> (W,)
+    bufs: Dict[str, jnp.ndarray]           # buffer name -> (N,)
+    mask: jnp.ndarray                      # (W,) bool
+
+    def copy(self) -> "_State":
+        return _State(dict(self.slots), dict(self.bufs), self.mask)
+
+
+def _np_jax_binop(op: Op, a, b):
+    if op is Op.ADD: return a + b
+    if op is Op.SUB: return a - b
+    if op is Op.MUL: return a * b
+    if op is Op.DIV:
+        if jnp.issubdtype(a.dtype, jnp.integer):
+            return jnp.where(b != 0, a // jnp.where(b == 0, 1, b), 0)
+        return jnp.where(b != 0, a / jnp.where(b == 0, 1, b), 0.0)
+    if op is Op.MOD: return jnp.where(b != 0, a % jnp.where(b == 0, 1, b), 0)
+    if op is Op.AND:
+        return a & b
+    if op is Op.OR: return a | b
+    if op is Op.XOR: return a ^ b
+    if op is Op.SHL: return a << b
+    if op is Op.SHR: return a >> b
+    if op is Op.MIN: return jnp.minimum(a, b)
+    if op is Op.MAX: return jnp.maximum(a, b)
+    if op is Op.POW: return jnp.power(a.astype(jnp.float32), b)
+    if op is Op.EQ: return a == b
+    if op is Op.NE: return a != b
+    if op is Op.LT: return a < b
+    if op is Op.LE: return a <= b
+    if op is Op.GT: return a > b
+    if op is Op.GE: return a >= b
+    raise LowerError(f"binop {op}")
+
+
+def _np_jax_unop(op: Op, a):
+    if op is Op.NEG: return -a
+    if op is Op.NOT: return ~a
+    if op is Op.ABS: return jnp.abs(a)
+    if op is Op.SQRT: return jnp.sqrt(jnp.maximum(a, 0)).astype(jnp.float32)
+    if op is Op.EXP: return jnp.exp(a).astype(jnp.float32)
+    if op is Op.LOG: return jnp.log(jnp.where(a > 0, a, 1)).astype(jnp.float32)
+    if op is Op.SIN: return jnp.sin(a).astype(jnp.float32)
+    if op is Op.COS: return jnp.cos(a).astype(jnp.float32)
+    if op is Op.ITOF: return a.astype(jnp.float32)
+    if op is Op.FTOI: return a.astype(jnp.int32)
+    if op is Op.POPC:
+        return jax.lax.population_count(a.astype(jnp.uint32)).astype(jnp.int32)
+    if op is Op.FFS:
+        au = a.astype(jnp.uint32)
+        low = au & (~au + jnp.uint32(1))
+        idx = 32 - jax.lax.clz(low).astype(jnp.int32)
+        return jnp.where(au == 0, 0, idx)
+    raise LowerError(f"unop {op}")
+
+
+# --------------------------------------------------------------------------
+# Codegen walker
+# --------------------------------------------------------------------------
+
+class _FnLowering:
+    """Lowers one function body (trace-time recursive walker)."""
+
+    def __init__(self, fn: Function, W: int,
+                 intr: Dict[Tuple[str, int], jnp.ndarray],
+                 argmap: Dict[int, Any],
+                 scalarize_uniform: bool = False,
+                 buf_offsets: Optional[Dict[str, Any]] = None) -> None:
+        self.fn = fn
+        self.W = W
+        self.intr = intr
+        self.argmap = argmap   # id(Param) -> jnp vector | buffer-name | GlobalVar
+        self.env: Dict[int, jnp.ndarray] = {}
+        self.scalarize_uniform = scalarize_uniform
+        # tile-windowed buffers (pallas simt_exec): name -> traced offset
+        # subtracted from every access index
+        self.buf_offsets = buf_offsets or {}
+        self.loops = graph.natural_loops(fn)
+        self.headers = {id(l.header): l for l in self.loops}
+        self.pdom = graph.postdominators(fn)
+        self.ret_val: Optional[jnp.ndarray] = None
+
+    # -- values --------------------------------------------------------------
+    def val(self, v: Value) -> jnp.ndarray:
+        if isinstance(v, Const):
+            return jnp.full((self.W,), v.value,
+                            dtype=_TY_DTYPE.get(v.ty, jnp.float32))
+        if isinstance(v, Reg):
+            return self.env[id(v)]
+        if isinstance(v, Param):
+            a = self.argmap.get(id(v))
+            if a is None:
+                raise LowerError(f"unbound param {v.name}")
+            if isinstance(a, (str, GlobalVar)):
+                raise LowerError(f"pointer param {v.name} used as value")
+            return a
+        raise LowerError(f"cannot lower value {v!r}")
+
+    def buf_name(self, ptr: Value) -> str:
+        if isinstance(ptr, Param):
+            a = self.argmap.get(id(ptr))
+            if isinstance(a, str):
+                return a
+            if isinstance(a, GlobalVar):
+                return f"@{a.name}"
+            raise LowerError(f"pointer param {ptr.name} not bound to buffer")
+        if isinstance(ptr, GlobalVar):
+            return f"@{ptr.name}"
+        raise LowerError(f"bad pointer {ptr!r}")
+
+    # -- analyses for loop carries --------------------------------------------
+    def _loop_written(self, loop: graph.Loop) -> Tuple[Set[int], Set[str]]:
+        slots: Set[int] = set()
+        bufs: Set[str] = set()
+        for b in loop.blocks:
+            for i in b.instrs:
+                if i.op is Op.SLOT_STORE:
+                    slots.add(id(i.operands[0]))
+                elif i.op in (Op.STORE, Op.ATOMIC):
+                    p = i.operands[0] if i.op is Op.STORE else i.operands[1]
+                    bufs.add(self.buf_name(p))
+                elif i.op is Op.CALL:
+                    callee: Function = i.operands[0]
+                    cs, cb = _fn_writes(callee)
+                    # pointer params of callee map to our buffers
+                    for k, a in zip(callee.params, i.operands[1:]):
+                        if k.ty is Ty.PTR and k.name in cb:
+                            bufs.add(self.buf_name(a))
+                    if "@shared" in cb:
+                        pass
+                # loads matter only for reads; reads of un-carried bufs are
+                # closed over, which is consistent since nothing writes them
+        # all slots referenced in the loop participate in the carry (the
+        # condition chain re-reads them)
+        for b in loop.blocks:
+            for i in b.instrs:
+                if i.op is Op.SLOT_LOAD:
+                    slots.add(id(i.operands[0]))
+        return slots, bufs
+
+    # -- the walker ------------------------------------------------------------
+    def walk(self, block: Block, pos: int, st: _State,
+             stop_block: Optional[Block]) -> Tuple[str, Any, _State]:
+        """Run until RET ('ret'), a foreign JOIN ('join', (block,pos)), or
+        the stop block ('stop', (block,0))."""
+        while True:
+            if stop_block is not None and block is stop_block and pos == 0:
+                return ("stop", (block, 0), st)
+            i = block.instrs[pos]
+            op = i.op
+
+            if op is Op.BR:
+                block, pos = i.operands[0], 0
+                continue
+            if op is Op.RET:
+                if i.operands:
+                    self.ret_val = self.val(i.operands[0])
+                return ("ret", None, st)
+            if op is Op.JOIN:
+                return ("join", (block, pos), st)
+
+            if op is Op.SPLIT:
+                st = self._lower_split(block, pos, i, st)
+                ip = i.attrs.get("ipdom")
+                if ip is None:
+                    raise LowerError("vx_split without ipdom annotation")
+                block, pos = ip, 0
+                continue
+
+            if op is Op.PRED:
+                st, exit_block = self._lower_pred_loop(block, pos, i, st)
+                block, pos = exit_block, 0
+                continue
+
+            if op is Op.CBR:
+                loop = self.headers.get(id(block))
+                if loop is not None and any(
+                        not loop.contains(s) for s in block.successors()):
+                    st, exit_block = self._lower_uniform_loop(block, pos, i,
+                                                              st, loop)
+                    block, pos = exit_block, 0
+                    continue
+                st, cont = self._lower_uniform_branch(block, pos, i, st)
+                block, pos = cont, 0
+                continue
+
+            if op is Op.TMC_SAVE:
+                self.env[id(i.result)] = st.mask
+                pos += 1
+                continue
+            if op is Op.TMC_RESTORE:
+                st = st.copy()
+                st.mask = self.env[id(i.operands[0])]
+                pos += 1
+                continue
+
+            st = self._lower_simple(i, st)
+            pos += 1
+
+    # -- split/join diamond -----------------------------------------------------
+    def _lower_split(self, block: Block, pos: int, split: Instr,
+                     st: _State) -> _State:
+        cbr = block.instrs[pos + 1]
+        if cbr.op is not Op.CBR:
+            raise LowerError("vx_split not followed by branch")
+        sp = self.val(split.operands[0]).astype(jnp.bool_)
+        if split.attrs.get("negate", False):
+            sp = ~sp
+        then_bb, else_bb = cbr.operands[1], cbr.operands[2]
+        tok = id(split.result)
+
+        # Linear threading = the hardware serialization order: the taken
+        # side runs first under mask&p, then the else side CONTINUES on the
+        # resulting state under mask&~p (so it observes then-side memory
+        # writes, like Vortex's IPDOM re-dispatch). Slot/buffer stores are
+        # mask-predicated, so disjoint lane sets cannot clobber each other.
+        entry_mask = st.mask
+        st1 = st.copy()
+        st1.mask = entry_mask & sp
+        kind, where_, st1 = self.walk(then_bb, 0, st1, None)
+        self._expect_join(kind, where_, tok)
+
+        st2 = st1.copy()
+        st2.mask = entry_mask & ~sp
+        kind, where_, st2 = self.walk(else_bb, 0, st2, None)
+        self._expect_join(kind, where_, tok)
+
+        out = st2.copy()
+        out.mask = entry_mask          # vx_join: reconverge
+        return out
+
+    def _expect_join(self, kind: str, where_: Any, tok: int) -> None:
+        if kind != "join":
+            raise LowerError(f"side walk ended with {kind}, expected join")
+        jb, jp = where_
+        j = jb.instrs[jp]
+        if id(j.operands[0]) != tok:
+            raise LowerError("join token mismatch during lowering "
+                             "(structurization bug)")
+
+    # -- loops --------------------------------------------------------------------
+    def _loop_carry_pack(self, st: _State, slot_ids: List[int],
+                         buf_names: List[str]) -> Tuple:
+        W = self.W
+        slot_vals = []
+        for sid in slot_ids:
+            v = st.slots.get(sid)
+            if v is None:
+                slot = next(s for s in self.fn.slots if id(s) == sid)
+                v = jnp.zeros((W,), dtype=_TY_DTYPE[slot.ty])
+            slot_vals.append(v)
+        return (tuple(slot_vals), tuple(st.bufs[b] for b in buf_names),
+                st.mask)
+
+    def _run_header(self, header: Block, st: _State) -> jnp.ndarray:
+        """Execute header prefix (pure) and return the branch/pred cond."""
+        term = header.instrs[-1]
+        for i in header.instrs[:-1]:
+            if i.op in (Op.STORE, Op.ATOMIC, Op.BARRIER):
+                raise LowerError("side-effecting op in loop header")
+            if i.op is Op.SPLIT:
+                continue
+            st = self._lower_simple(i, st)
+        return self.val(term.operands[0]).astype(jnp.bool_), st
+
+    def _lower_loop_common(self, header: Block, term: Instr, st: _State,
+                           loop: graph.Loop, divergent: bool,
+                           inside: Block, outside: Block) -> Tuple[_State, Block]:
+        slot_ids_set, buf_set = self._loop_written(loop)
+        slot_ids = sorted(slot_ids_set)
+        buf_names = sorted(buf_set)
+        negate = term.attrs.get("negate", False)
+
+        snap_env = dict(self.env)
+
+        def unpack(carry) -> _State:
+            slots_t, bufs_t, mask = carry
+            s = st.copy()
+            for sid, v in zip(slot_ids, slots_t):
+                s.slots[sid] = v
+            for nm, v in zip(buf_names, bufs_t):
+                s.bufs[nm] = v
+            s.mask = mask
+            return s
+
+        def cond_fn(carry):
+            self.env = dict(snap_env)
+            s = unpack(carry)
+            c, s2 = self._run_header(header, s)
+            if negate:
+                c = ~c
+            return (c & s2.mask).any()
+
+        def body_fn(carry):
+            self.env = dict(snap_env)
+            s = unpack(carry)
+            c, s = self._run_header(header, s)
+            if negate:
+                c = ~c
+            if divergent:
+                s = s.copy()
+                s.mask = s.mask & c
+            kind, where_, s = self.walk(inside, 0, s, header)
+            if kind != "stop":
+                raise LowerError(f"loop body walk ended with {kind}")
+            return self._loop_carry_pack(s, slot_ids, buf_names)
+
+        init = self._loop_carry_pack(st, slot_ids, buf_names)
+        out = jax.lax.while_loop(cond_fn, body_fn, init)
+        self.env = dict(snap_env)
+        final = unpack(out)
+        final.mask = st.mask            # entry mask restored (vx_pred / exit)
+        return final, outside
+
+    def _lower_pred_loop(self, block: Block, pos: int, pred: Instr,
+                         st: _State) -> Tuple[_State, Block]:
+        loop = self.headers.get(id(block))
+        if loop is None:
+            raise LowerError("vx_pred outside loop header")
+        inside, outside = pred.operands[2], pred.operands[3]
+        return self._lower_loop_common(block, pred, st, loop, True,
+                                       inside, outside)
+
+    def _lower_uniform_loop(self, block: Block, pos: int, cbr: Instr,
+                            st: _State, loop: graph.Loop
+                            ) -> Tuple[_State, Block]:
+        then_bb, else_bb = cbr.operands[1], cbr.operands[2]
+        if loop.contains(then_bb):
+            inside, outside = then_bb, else_bb
+            neg = False
+        else:
+            inside, outside = else_bb, then_bb
+            neg = True
+        fake = Instr(cbr.op, cbr.operands, None,
+                     {**cbr.attrs, "negate": neg})
+        fake.parent = block
+        return self._lower_loop_common(block, fake, st, loop, False,
+                                       inside, outside)
+
+    # -- uniform (un-split) branch --------------------------------------------------
+    def _lower_uniform_branch(self, block: Block, pos: int, cbr: Instr,
+                              st: _State) -> Tuple[_State, Block]:
+        merge = self.pdom.immediate(block)
+        if merge is None:
+            raise LowerError("uniform branch without IPDOM")
+        c = self.val(cbr.operands[0]).astype(jnp.bool_)
+        then_bb, else_bb = cbr.operands[1], cbr.operands[2]
+
+        if self.scalarize_uniform:
+            return self._scalarized_branch(then_bb, else_bb, c, st,
+                                           merge), merge
+
+        # Baseline: linearize with masks (cond uniform over active lanes, so
+        # one side's effective mask is empty — its stores are no-ops).
+        # Beyond-paper scalarization (lax.cond): see _scalarized_branch.
+        entry_mask = st.mask
+        st1 = st.copy()
+        st1.mask = entry_mask & c
+        kind, _, st1 = self.walk(then_bb, 0, st1, merge)
+        if kind != "stop":
+            raise LowerError(f"uniform-branch then side ended with {kind}")
+        st2 = st1.copy()
+        st2.mask = entry_mask & ~c
+        kind, _, st2 = self.walk(else_bb, 0, st2, merge)
+        if kind != "stop":
+            raise LowerError(f"uniform-branch else side ended with {kind}")
+        out = st2.copy()
+        out.mask = entry_mask
+        return out, merge
+
+    def _scalarized_branch(self, then_bb, else_bb, c, st, merge) -> _State:
+        """Beyond-paper: a uniform branch lowers to lax.cond — exactly one
+        side executes at run time (Vortex takes uniform branches as real
+        branches; the linearized baseline pays both sides)."""
+        # consensus predicate over active lanes (analysis guarantees
+        # agreement; inactive lanes may hold garbage)
+        pred = jnp.where(st.mask.any(), (c & st.mask).any(), False)
+        snap_env = dict(self.env)
+
+        def probe(bb):
+            self.env = dict(snap_env)
+            kind, _, s2 = self.walk(bb, 0, st.copy(), merge)
+            if kind != "stop":
+                raise LowerError(f"scalarized side ended with {kind}")
+            return s2
+
+        pt, pe = probe(then_bb), probe(else_bb)
+        slot_ids = sorted(set(pt.slots) | set(pe.slots))
+        buf_names = sorted(set(pt.bufs) | set(pe.bufs))
+
+        def seed(s: _State) -> _State:
+            s = s.copy()
+            for sid in slot_ids:
+                if sid not in s.slots:
+                    slot = next(x for x in self.fn.slots if id(x) == sid)
+                    s.slots[sid] = jnp.zeros((self.W,),
+                                             dtype=_TY_DTYPE[slot.ty])
+            return s
+
+        st0 = seed(st)
+
+        def side_fn(bb):
+            def f(operand):
+                slots_t, bufs_t = operand
+                self.env = dict(snap_env)
+                s = st0.copy()
+                for sid, v in zip(slot_ids, slots_t):
+                    s.slots[sid] = v
+                for nm, v in zip(buf_names, bufs_t):
+                    s.bufs[nm] = v
+                kind, _, s2 = self.walk(bb, 0, s, merge)
+                if kind != "stop":
+                    raise LowerError("scalarized side did not converge")
+                s2 = seed(s2)
+                return (tuple(s2.slots[sid] for sid in slot_ids),
+                        tuple(s2.bufs[nm] for nm in buf_names))
+            return f
+
+        operand = (tuple(st0.slots[sid] for sid in slot_ids),
+                   tuple(st0.bufs[nm] for nm in buf_names))
+        slots_t, bufs_t = jax.lax.cond(pred, side_fn(then_bb),
+                                       side_fn(else_bb), operand)
+        self.env = dict(snap_env)
+        out = st0.copy()
+        for sid, v in zip(slot_ids, slots_t):
+            out.slots[sid] = v
+        for nm, v in zip(buf_names, bufs_t):
+            out.bufs[nm] = v
+        return out
+
+    # -- straight-line ops ----------------------------------------------------------
+    def _lower_simple(self, i: Instr, st: _State) -> _State:
+        op = i.op
+        W = self.W
+        if op is Op.SLOT_LOAD:
+            s = i.operands[0]
+            v = st.slots.get(id(s))
+            if v is None:
+                v = jnp.zeros((W,), dtype=_TY_DTYPE[s.ty])
+            self.env[id(i.result)] = v
+            return st
+        if op is Op.SLOT_STORE:
+            s, v = i.operands
+            nv = self.val(v)
+            st = st.copy()
+            old = st.slots.get(id(s))
+            if old is None:
+                old = jnp.zeros((W,), dtype=nv.dtype)
+            st.slots[id(s)] = jnp.where(st.mask, nv, old)
+            return st
+        if op is Op.LOAD:
+            nm = self.buf_name(i.operands[0])
+            buf = st.bufs[nm]
+            ix = self.val(i.operands[1]).astype(jnp.int32)
+            if nm in self.buf_offsets:
+                ix = ix - self.buf_offsets[nm]
+            ix = jnp.clip(ix, 0, buf.shape[0] - 1)
+            self.env[id(i.result)] = buf[ix]
+            return st
+        if op is Op.STORE:
+            nm = self.buf_name(i.operands[0])
+            buf = st.bufs[nm]
+            ix = self.val(i.operands[1]).astype(jnp.int32)
+            if nm in self.buf_offsets:
+                ix = ix - self.buf_offsets[nm]
+            oob = (ix < 0) | (ix >= buf.shape[0])
+            ix = jnp.clip(ix, 0, buf.shape[0] - 1)
+            v = self.val(i.operands[2]).astype(buf.dtype)
+            # mask-predicated scatter: inactive lanes are routed to an
+            # out-of-bounds index and dropped (a "write-old-value-back"
+            # scheme would clobber active writes on index collisions);
+            # tile-windowed accesses also drop out-of-window lanes
+            safe_ix = jnp.where(st.mask & ~oob, ix, buf.shape[0])
+            st = st.copy()
+            st.bufs[nm] = buf.at[safe_ix].set(v, mode="drop")
+            return st
+        if op is Op.ATOMIC:
+            kind = i.operands[0]
+            nm = self.buf_name(i.operands[1])
+            buf = st.bufs[nm]
+            ix = jnp.clip(self.val(i.operands[2]).astype(jnp.int32), 0,
+                          buf.shape[0] - 1)
+            v = self.val(i.operands[3]).astype(buf.dtype)
+            mask = st.mask
+            # returns-old with lane-ordered conflict resolution:
+            # old_i = buf[ix_i] + sum_{j<i, ix_j==ix_i, active_j} v_j
+            same = (ix[None, :] == ix[:, None])
+            lower = jnp.tril(jnp.ones((W, W), dtype=bool), k=-1)
+            contrib = jnp.where(same & lower & mask[None, :], v[None, :], 0)
+            safe_ix = jnp.where(mask, ix, buf.shape[0])
+            if kind == "add":
+                prefix = contrib.sum(axis=1)
+                old = buf[ix] + prefix.astype(buf.dtype)
+                st = st.copy()
+                st.bufs[nm] = buf.at[safe_ix].add(v, mode="drop")
+            elif kind in ("max", "min"):
+                fold = jnp.maximum if kind == "max" else jnp.minimum
+                neutral = buf[ix]
+                run = jnp.where(same & lower & mask[None, :], v[None, :],
+                                neutral[:, None])
+                old = fold(neutral, run.max(axis=1) if kind == "max"
+                           else run.min(axis=1))
+                old = jnp.where((same & lower & mask[None, :]).any(axis=1),
+                                old, neutral)
+                st = st.copy()
+                st.bufs[nm] = (buf.at[safe_ix].max(v, mode="drop")
+                               if kind == "max"
+                               else buf.at[safe_ix].min(v, mode="drop"))
+            elif kind == "xchg":
+                old = buf[ix]
+                st = st.copy()
+                st.bufs[nm] = buf.at[safe_ix].set(v, mode="drop")
+            else:
+                raise LowerError(f"atomic {kind} unsupported in JAX backend")
+            if i.result is not None:
+                self.env[id(i.result)] = old
+            return st
+        if op is Op.INTR:
+            key = (i.operands[0], i.operands[1])
+            if key not in self.intr:
+                raise LowerError(f"intrinsic {key} not provided")
+            self.env[id(i.result)] = self.intr[key]
+            return st
+        if op is Op.VOTE:
+            mode = i.operands[0]
+            v = self.val(i.operands[1]).astype(jnp.bool_)
+            act = v & st.mask
+            if mode == "any":
+                r = jnp.broadcast_to(act.any(), (W,))
+            elif mode == "all":
+                r = jnp.broadcast_to((v | ~st.mask).all(), (W,))
+            elif mode == "ballot":
+                bits = (act.astype(jnp.int32) << jnp.arange(W, dtype=jnp.int32)
+                        ) if W <= 31 else act.astype(jnp.int32)
+                r = jnp.broadcast_to(bits.sum(), (W,))
+            else:
+                raise LowerError(f"vote {mode}")
+            self.env[id(i.result)] = r
+            return st
+        if op is Op.SHFL:
+            v = self.val(i.operands[0])
+            src = self.val(i.operands[1]).astype(jnp.int32) % W
+            self.env[id(i.result)] = v[src]
+            return st
+        if op is Op.BARRIER:
+            return st   # lockstep within the vectorized workgroup
+        if op is Op.PRINT:
+            return st
+        if op is Op.CALL:
+            return self._lower_call(i, st)
+        if op in (Op.SELECT, Op.CMOV):
+            c = self.val(i.operands[0]).astype(jnp.bool_)
+            self.env[id(i.result)] = jnp.where(c, self.val(i.operands[1]),
+                                               self.val(i.operands[2]))
+            return st
+        if op in BINOPS:
+            self.env[id(i.result)] = _np_jax_binop(
+                op, self.val(i.operands[0]), self.val(i.operands[1]))
+            return st
+        if op in UNOPS:
+            self.env[id(i.result)] = _np_jax_unop(op, self.val(i.operands[0]))
+            return st
+        raise LowerError(f"unhandled op in JAX lowering: {op}")
+
+    def _lower_call(self, i: Instr, st: _State) -> _State:
+        callee: Function = i.operands[0]
+        argmap: Dict[int, Any] = {}
+        for p, a in zip(callee.params, i.operands[1:]):
+            if p.ty is Ty.PTR:
+                argmap[id(p)] = self.buf_name(a)
+            else:
+                argmap[id(p)] = self.val(a)
+        sub = _FnLowering(callee, self.W, self.intr, argmap,
+                          self.scalarize_uniform)
+        sub_st = _State({}, st.bufs, st.mask)
+        kind, _, out_st = sub.walk(callee.entry, 0, sub_st, None)
+        if kind != "ret":
+            raise LowerError(f"callee walk ended with {kind}")
+        st = st.copy()
+        st.bufs = out_st.bufs
+        if i.result is not None:
+            rv = sub.ret_val
+            if rv is None:
+                rv = jnp.zeros((self.W,), dtype=jnp.float32)
+            self.env[id(i.result)] = rv
+        return st
+
+
+def _fn_writes(fn: Function) -> Tuple[Set[str], Set[str]]:
+    slots: Set[str] = set()
+    bufs: Set[str] = set()
+    for i in fn.instructions():
+        if i.op is Op.STORE:
+            p = i.operands[0]
+            bufs.add(getattr(p, "name", "?"))
+        elif i.op is Op.ATOMIC:
+            p = i.operands[1]
+            bufs.add(getattr(p, "name", "?"))
+    return slots, bufs
+
+
+# --------------------------------------------------------------------------
+# Public API
+# --------------------------------------------------------------------------
+
+@dataclass
+class JaxKernel:
+    fn: Callable            # (buffers: dict, scalars: dict) -> buffers dict
+    wg_fn: Callable         # (group_id, buffers, scalars) -> buffers dict
+    params: LaunchParams
+
+
+def compile_jax(kernel_fn: Function, params: LaunchParams,
+                module: Optional[Module] = None,
+                scalarize_uniform: bool = False) -> JaxKernel:
+    """Compile a divergence-managed VIR kernel to a jitted JAX function.
+
+    The vector width is one workgroup (params.wg_threads lanes); the grid
+    loop is a lax.fori_loop — the 'thread-schedule code' of paper §4.2,
+    living in the generated host function.
+    """
+    W = params.wg_threads
+    if params.warps_per_wg != 1:
+        # the JAX backend vectorizes a full workgroup; multi-warp groups are
+        # supported because barriers are lockstep no-ops under this model
+        pass
+
+    shared_bufs: Dict[str, Tuple[int, Any]] = {}
+    for g in kernel_fn.shared:
+        shared_bufs[f"@{g.name}"] = (g.size, _TY_DTYPE[g.elem_ty])
+    if module is not None:
+        for g in module.globals.values():
+            shared_bufs.setdefault(f"@{g.name}", (g.size, _TY_DTYPE[g.elem_ty]))
+
+    def wg_fn(gx, buffers: Dict[str, jnp.ndarray],
+              scalars: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        lanes = jnp.arange(W, dtype=jnp.int32)
+        lx = lanes % params.local_size
+        ly = lanes // params.local_size
+        full = lambda v: jnp.full((W,), v, dtype=jnp.int32)
+        intr = {
+            ("local_id", 0): lx, ("local_id", 1): ly,
+            ("lane_id", 0): lanes % params.warp_size,
+            ("group_id", 0): full(0) + gx, ("group_id", 1): full(0),
+            ("global_id", 0): gx * params.local_size + lx,
+            ("global_id", 1): ly,
+            ("local_size", 0): full(params.local_size),
+            ("local_size", 1): full(params.local_size_y),
+            ("num_groups", 0): full(params.grid),
+            ("num_groups", 1): full(params.grid_y),
+            ("global_size", 0): full(params.grid * params.local_size),
+            ("global_size", 1): full(params.grid_y * params.local_size_y),
+            ("num_threads", 0): full(params.warp_size),
+            ("num_warps", 0): full(params.warps_per_wg),
+            ("warp_id", 0): lanes // params.warp_size,
+            ("core_id", 0): full(0) + gx % 4,
+            ("grid_dim", 0): full(params.grid),
+        }
+        argmap: Dict[int, Any] = {}
+        for p in kernel_fn.params:
+            if p.ty is Ty.PTR:
+                argmap[id(p)] = p.name
+            else:
+                argmap[id(p)] = jnp.broadcast_to(
+                    scalars[p.name].astype(_TY_DTYPE[p.ty]), (W,))
+        low = _FnLowering(kernel_fn, W, intr, argmap, scalarize_uniform)
+        bufs = dict(buffers)
+        for nm, (size, dt) in shared_bufs.items():
+            bufs[nm] = jnp.zeros((size,), dtype=dt)   # fresh per workgroup
+        st = _State({}, bufs, jnp.ones((W,), dtype=jnp.bool_))
+        kind, _, out = low.walk(kernel_fn.entry, 0, st, None)
+        if kind != "ret":
+            raise LowerError(f"kernel walk ended with {kind}")
+        return {k: v for k, v in out.bufs.items() if k in buffers}
+
+    def run(buffers: Dict[str, jnp.ndarray],
+            scalars: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        def step(g, bufs):
+            return wg_fn(g, bufs, scalars)
+        return jax.lax.fori_loop(0, params.grid, step, dict(buffers))
+
+    return JaxKernel(jax.jit(run), wg_fn, params)

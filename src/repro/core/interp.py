@@ -1,0 +1,895 @@
+"""Warp-level VIR interpreter with a hardware-faithful IPDOM stack.
+
+This is the repo's SimX stand-in (paper §5): deterministic execution of the
+*transformed* IR (post divergence-management), per-warp dynamic instruction
+counts, and memory-coalescing statistics that feed the cycle model in
+simx.py.
+
+Execution model (mirrors Fig 1/Fig 2 semantics):
+  * a warp is W lanes executing in lockstep under a thread mask;
+  * ``vx_split``/``vx_join`` drive a two-phase IPDOM stack: split pushes
+    {saved mask, else-PC, else-mask}, the taken side runs first, the join
+    re-materializes the else side, the second join pop restores the mask;
+  * ``vx_pred`` masks out lanes whose loop predicate fails; when no lane
+    remains the entry mask (saved by ``tmc_save``) is restored and control
+    leaves the loop without taking the back edge;
+  * uniform branches are taken by active-lane consensus — if the lanes
+    disagree, the uniformity analysis was wrong and we raise (this is the
+    soundness oracle the property tests rely on);
+  * barriers suspend the warp until all warps of the workgroup arrive
+    (generator-based co-routines, deterministic round-robin).
+
+A separate *scalar reference executor* runs the untransformed IR one thread
+at a time — the oracle for SIMT-semantics tests.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .vir import (AddrSpace, Block, Const, Function, GlobalVar, Instr,
+                  Module, Op, Param, Reg, Slot, Ty, Value)
+
+
+class ExecError(Exception):
+    pass
+
+
+class UniformityViolation(ExecError):
+    """A branch the compiler claimed uniform diverged at run time."""
+
+
+CACHE_LINE_ELEMS = 16   # 64-byte lines of 4-byte elements
+
+
+@dataclass
+class LaunchParams:
+    grid: int = 1                 # workgroups (x)
+    local_size: int = 32          # threads per workgroup (x)
+    warp_size: int = 32
+    grid_y: int = 1
+    local_size_y: int = 1
+    fuel: int = 20_000_000
+    # GPU semantics: out-of-bounds LOADS read garbage without trapping
+    # (which is what makes CMOV speculation legal on real hardware);
+    # set strict_oob_loads for debugging kernels.
+    strict_oob_loads: bool = False
+
+    @property
+    def wg_threads(self) -> int:
+        return self.local_size * self.local_size_y
+
+    @property
+    def warps_per_wg(self) -> int:
+        return max(1, (self.wg_threads + self.warp_size - 1) // self.warp_size)
+
+
+@dataclass
+class ExecStats:
+    instrs: int = 0                       # dynamic, per-warp issue count
+    by_op: Counter = field(default_factory=Counter)
+    mem_requests: int = 0                 # coalesced line requests
+    mem_insts: int = 0                    # load/store instructions issued
+    shared_requests: int = 0
+    atomic_serial: int = 0                # contended-RMW serialization depth
+    prints: List[str] = field(default_factory=list)
+    max_ipdom_depth: int = 0
+
+    def merge(self, o: "ExecStats") -> None:
+        self.instrs += o.instrs
+        self.by_op.update(o.by_op)
+        self.mem_requests += o.mem_requests
+        self.mem_insts += o.mem_insts
+        self.shared_requests += o.shared_requests
+        self.atomic_serial += o.atomic_serial
+        self.prints.extend(o.prints)
+        self.max_ipdom_depth = max(self.max_ipdom_depth, o.max_ipdom_depth)
+
+
+# --------------------------------------------------------------------------
+# numpy op dispatch
+# --------------------------------------------------------------------------
+
+def _np_binop(op: Op, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        if op is Op.ADD: return a + b
+        if op is Op.SUB: return a - b
+        if op is Op.MUL: return a * b
+        if op is Op.DIV:
+            if np.issubdtype(np.asarray(a).dtype, np.integer):
+                return np.where(b != 0, a // np.where(b == 0, 1, b), 0)
+            return np.where(b != 0, a / np.where(b == 0, 1, b), 0.0)
+        if op is Op.MOD:
+            return np.where(b != 0, a % np.where(b == 0, 1, b), 0)
+        if op is Op.AND:
+            return a & b if a.dtype != np.float32 else a.astype(bool) & b.astype(bool)
+        if op is Op.OR: return a | b
+        if op is Op.XOR: return a ^ b
+        if op is Op.SHL: return a << b
+        if op is Op.SHR: return a >> b
+        if op is Op.MIN: return np.minimum(a, b)
+        if op is Op.MAX: return np.maximum(a, b)
+        if op is Op.POW: return np.power(a.astype(np.float32), b)
+        if op is Op.EQ: return a == b
+        if op is Op.NE: return a != b
+        if op is Op.LT: return a < b
+        if op is Op.LE: return a <= b
+        if op is Op.GT: return a > b
+        if op is Op.GE: return a >= b
+    raise ExecError(f"bad binop {op}")
+
+
+def _np_unop(op: Op, a: np.ndarray) -> np.ndarray:
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        if op is Op.NEG: return -a
+        if op is Op.NOT:
+            return ~a if a.dtype == np.bool_ else ~a
+        if op is Op.ABS: return np.abs(a)
+        if op is Op.SQRT: return np.sqrt(np.maximum(a, 0)).astype(np.float32)
+        if op is Op.EXP: return np.exp(a).astype(np.float32)
+        if op is Op.LOG: return np.log(np.where(a > 0, a, 1)).astype(np.float32)
+        if op is Op.SIN: return np.sin(a).astype(np.float32)
+        if op is Op.COS: return np.cos(a).astype(np.float32)
+        if op is Op.ITOF: return a.astype(np.float32)
+        if op is Op.FTOI: return a.astype(np.int32)
+        if op is Op.POPC:
+            return np.bitwise_count(a.astype(np.uint32)).astype(np.int32)
+        if op is Op.FFS:
+            # 1-based index of least-significant set bit; 0 if none
+            au = a.astype(np.uint32)
+            low = (au & (~au + np.uint32(1))).astype(np.uint64)
+            out = np.zeros_like(a, dtype=np.int32)
+            nz = au != 0
+            out[nz] = np.log2(low[nz]).astype(np.int32) + 1
+            return out
+    raise ExecError(f"bad unop {op}")
+
+
+_TY_DTYPE = {Ty.I32: np.int32, Ty.F32: np.float32, Ty.BOOL: np.bool_}
+
+
+def _const_vec(c: Const, w: int) -> np.ndarray:
+    return np.full((w,), c.value, dtype=_TY_DTYPE.get(c.ty, np.float32))
+
+
+# --------------------------------------------------------------------------
+# Device memory
+# --------------------------------------------------------------------------
+
+class DeviceMemory:
+    """Buffers for params (by name), module globals, and per-wg shared."""
+
+    def __init__(self, buffers: Dict[str, np.ndarray],
+                 globals_mem: Optional[Dict[str, np.ndarray]] = None) -> None:
+        self.buffers = buffers
+        self.globals_mem = globals_mem or {}
+        self.shared: Dict[int, np.ndarray] = {}   # id(GlobalVar) -> array
+
+    def resolve(self, ptr: Value, argmap: Dict[int, Any]) -> Tuple[np.ndarray, bool]:
+        """-> (array, is_shared)"""
+        if isinstance(ptr, Param):
+            v = argmap.get(id(ptr))
+            if isinstance(v, np.ndarray):
+                return v, False
+            if isinstance(v, (Param, GlobalVar)):
+                return self.resolve(v, argmap)
+            raise ExecError(f"pointer param {ptr.name} not bound")
+        if isinstance(ptr, GlobalVar):
+            if ptr.space is AddrSpace.SHARED:
+                arr = self.shared.get(id(ptr))
+                if arr is None:
+                    arr = np.zeros(ptr.size, dtype=_TY_DTYPE[ptr.elem_ty])
+                    self.shared[id(ptr)] = arr
+                return arr, True
+            arr = self.globals_mem.get(ptr.name)
+            if arr is None:
+                arr = np.zeros(ptr.size, dtype=_TY_DTYPE[ptr.elem_ty])
+                self.globals_mem[ptr.name] = arr
+            return arr, False
+        raise ExecError(f"cannot resolve pointer {ptr!r}")
+
+
+# --------------------------------------------------------------------------
+# Warp executor (generator; yields at barriers)
+# --------------------------------------------------------------------------
+
+class _WarpCtx:
+    def __init__(self, W: int, intr: Dict[Tuple[str, int], np.ndarray],
+                 strict_loads: bool = False) -> None:
+        self.W = W
+        self.intr = intr
+        self.strict_loads = strict_loads
+
+
+def _exec_warp(fn: Function, argmap: Dict[int, Any], mask0: np.ndarray,
+               ctx: _WarpCtx, mem: DeviceMemory, stats: ExecStats,
+               fuel: List[int]) -> Generator[str, None, np.ndarray]:
+    W = ctx.W
+    strict_loads = ctx.strict_loads
+    env: Dict[int, np.ndarray] = {}
+    slots: Dict[int, np.ndarray] = {}
+    tokens: Dict[int, np.ndarray] = {}
+    mask = mask0.copy()
+    stack: List[Dict[str, Any]] = []
+    pending_split: Optional[Instr] = None
+
+    def val(v: Value) -> np.ndarray:
+        if isinstance(v, Const):
+            return _const_vec(v, W)
+        if isinstance(v, Reg):
+            return env[id(v)]
+        if isinstance(v, Param):
+            a = argmap.get(id(v))
+            if isinstance(a, np.ndarray) and a.ndim == 1 and len(a) == W:
+                return a
+            raise ExecError(f"unbound param {v.name}")
+        raise ExecError(f"cannot evaluate {v!r}")
+
+    block = fn.entry
+    idx = 0
+    while True:
+        fuel[0] -= 1
+        if fuel[0] <= 0:
+            raise ExecError("out of fuel (possible infinite loop)")
+        i = block.instrs[idx]
+        op = i.op
+        if mask.any():
+            stats.instrs += 1
+            stats.by_op[op.value] += 1
+
+        # ---- terminators -------------------------------------------------
+        if op is Op.BR:
+            block, idx = i.operands[0], 0
+            pending_split = None
+            continue
+        if op is Op.CBR:
+            c = val(i.operands[0]).astype(bool)
+            then_bb, else_bb = i.operands[1], i.operands[2]
+            if pending_split is not None:
+                sp = pending_split
+                pending_split = None
+                neg = sp.attrs.get("negate", False)
+                # hardware partitions lanes by the SPLIT's own predicate —
+                # if a late pass inverted the branch without repairing the
+                # split (Fig 5a hazard), the wrong lanes activate here.
+                sp_val = val(sp.operands[0]).astype(bool)
+                cc = ~sp_val if neg else sp_val
+                then_mask = mask & cc
+                else_mask = mask & ~cc
+                entry = {"tok": id(sp.result), "saved": mask.copy(),
+                         "else_pc": None, "else_mask": None}
+                if then_mask.any() and else_mask.any():
+                    entry["else_pc"] = else_bb
+                    entry["else_mask"] = else_mask
+                    stack.append(entry)
+                    stats.max_ipdom_depth = max(stats.max_ipdom_depth,
+                                                len(stack))
+                    mask = then_mask
+                    block, idx = then_bb, 0
+                elif then_mask.any():
+                    stack.append(entry)
+                    mask = then_mask
+                    block, idx = then_bb, 0
+                else:
+                    stack.append(entry)
+                    mask = else_mask
+                    block, idx = else_bb, 0
+                continue
+            # un-split branch: must be uniform over active lanes
+            if mask.any():
+                act = c[mask]
+                if act.any() != act.all():
+                    raise UniformityViolation(
+                        f"divergent un-managed branch in %{block.label} "
+                        f"of @{fn.name}")
+                taken = bool(act[0])
+            else:
+                taken = True
+            block, idx = (then_bb if taken else else_bb), 0
+            continue
+        if op is Op.PRED:
+            c = val(i.operands[0]).astype(bool)
+            if i.attrs.get("negate", False):
+                c = ~c
+            tok = i.operands[1]
+            inside, outside = i.operands[2], i.operands[3]
+            new_mask = mask & c
+            if new_mask.any():
+                mask = new_mask
+                block, idx = inside, 0
+            else:
+                mask = tokens[id(tok)].copy()
+                block, idx = outside, 0
+            continue
+        if op is Op.RET:
+            if stack:
+                raise ExecError("RET with non-empty IPDOM stack")
+            if i.operands:
+                return val(i.operands[0])
+            return np.zeros(W, dtype=np.float32)
+
+        # ---- divergence-management non-terminators -------------------------
+        if op is Op.SPLIT:
+            pending_split = i
+            idx += 1
+            continue
+        if op is Op.JOIN:
+            tok = i.operands[0]
+            if not stack or stack[-1]["tok"] != id(tok):
+                raise ExecError("vx_join token mismatch at runtime")
+            top = stack.pop()
+            if top["else_pc"] is not None:
+                stack.append({"tok": top["tok"], "saved": top["saved"],
+                              "else_pc": None, "else_mask": None})
+                mask = top["else_mask"]
+                block, idx = top["else_pc"], 0
+            else:
+                mask = top["saved"]
+                idx += 1
+            continue
+        if op is Op.TMC_SAVE:
+            tokens[id(i.result)] = mask.copy()
+            idx += 1
+            continue
+        if op is Op.TMC_RESTORE:
+            mask = tokens[id(i.operands[0])].copy()
+            idx += 1
+            continue
+
+        # ---- ordinary instructions (execute under mask) ---------------------
+        if op is Op.BARRIER:
+            yield "barrier"
+            idx += 1
+            continue
+        if op is Op.SLOT_LOAD:
+            s = i.operands[0]
+            arr = slots.get(id(s))
+            if arr is None:
+                arr = np.zeros(W, dtype=_TY_DTYPE[s.ty])
+                slots[id(s)] = arr
+            env[id(i.result)] = arr.copy()
+            idx += 1
+            continue
+        if op is Op.SLOT_STORE:
+            s, v = i.operands
+            arr = slots.get(id(s))
+            nv = val(v)
+            if arr is None:
+                arr = np.zeros(W, dtype=nv.dtype)
+            slots[id(s)] = np.where(mask, nv, arr)
+            idx += 1
+            continue
+        if op is Op.LOAD:
+            buf, _shared = mem.resolve(i.operands[0], argmap)
+            ix = val(i.operands[1]).astype(np.int64)
+            if mask.any():
+                a_ix = ix[mask]
+                if strict_loads and ((a_ix < 0).any()
+                                     or (a_ix >= len(buf)).any()):
+                    raise ExecError(
+                        f"OOB load in @{fn.name}: idx={a_ix} size={len(buf)}")
+                a_ix = np.clip(a_ix, 0, len(buf) - 1)
+                lines = np.unique(a_ix // CACHE_LINE_ELEMS)
+                if _shared:
+                    stats.shared_requests += len(lines)
+                else:
+                    stats.mem_requests += len(lines)
+                stats.mem_insts += 1
+            safe = np.clip(ix, 0, len(buf) - 1)
+            env[id(i.result)] = buf[safe]
+            idx += 1
+            continue
+        if op is Op.STORE:
+            buf, _shared = mem.resolve(i.operands[0], argmap)
+            ix = val(i.operands[1]).astype(np.int64)
+            v = val(i.operands[2])
+            if mask.any():
+                a_ix = ix[mask]
+                if (a_ix < 0).any() or (a_ix >= len(buf)).any():
+                    raise ExecError(
+                        f"OOB store in @{fn.name}: idx={a_ix} size={len(buf)}")
+                lines = np.unique(a_ix // CACHE_LINE_ELEMS)
+                if _shared:
+                    stats.shared_requests += len(lines)
+                else:
+                    stats.mem_requests += len(lines)
+                stats.mem_insts += 1
+                buf[a_ix] = v[mask].astype(buf.dtype)
+            idx += 1
+            continue
+        if op is Op.ATOMIC:
+            kind = i.operands[0]
+            buf, _shared = mem.resolve(i.operands[1], argmap)
+            ix = val(i.operands[2]).astype(np.int64)
+            v = val(i.operands[3])
+            old = np.zeros(W, dtype=buf.dtype)
+            if mask.any():
+                lanes = np.nonzero(mask)[0]
+                a_ix = ix[lanes]
+                if (a_ix < 0).any() or (a_ix >= len(buf)).any():
+                    raise ExecError(f"OOB atomic in @{fn.name}")
+                stats.mem_requests += len(np.unique(a_ix // CACHE_LINE_ELEMS))
+                stats.mem_insts += 1
+                # contended RMW serializes per address (hardware behavior)
+                stats.atomic_serial += len(lanes)
+                for ln in lanes:     # lane-ordered, deterministic
+                    a = int(ix[ln])
+                    old[ln] = buf[a]
+                    if kind == "add":
+                        buf[a] += v[ln]
+                    elif kind == "max":
+                        buf[a] = max(buf[a], v[ln])
+                    elif kind == "min":
+                        buf[a] = min(buf[a], v[ln])
+                    elif kind == "xchg":
+                        buf[a] = v[ln]
+                    elif kind == "cas":
+                        pass  # cas(ptr, cmp, val) simplified: no-op compare
+                    else:
+                        raise ExecError(f"unknown atomic {kind}")
+            env[id(i.result)] = old
+            idx += 1
+            continue
+        if op is Op.INTR:
+            name, dim = i.operands[0], i.operands[1]
+            key = (name, dim)
+            if key not in ctx.intr:
+                raise ExecError(f"intrinsic {name}.{dim} not provided")
+            env[id(i.result)] = ctx.intr[key]
+            idx += 1
+            continue
+        if op is Op.VOTE:
+            mode = i.operands[0]
+            v = val(i.operands[1]).astype(bool)
+            act = v & mask
+            if mode == "any":
+                r = np.full(W, bool(act.any()))
+            elif mode == "all":
+                r = np.full(W, bool((v | ~mask)[mask].all()) if mask.any()
+                            else True)
+            elif mode == "ballot":
+                bits = 0
+                for ln in range(W):
+                    if mask[ln] and v[ln]:
+                        bits |= (1 << ln)
+                r = np.full(W, bits, dtype=np.int64).astype(np.int32)
+            else:
+                raise ExecError(f"unknown vote mode {mode}")
+            env[id(i.result)] = r
+            idx += 1
+            continue
+        if op is Op.SHFL:
+            v = val(i.operands[0])
+            src = val(i.operands[1]).astype(np.int64) % W
+            env[id(i.result)] = v[src]
+            idx += 1
+            continue
+        if op is Op.PRINT:
+            vals = [val(o)[mask] for o in i.operands if isinstance(o, Value)]
+            stats.prints.append(" ".join(str(x) for x in vals))
+            idx += 1
+            continue
+        if op is Op.CALL:
+            callee: Function = i.operands[0]
+            if not mask.any():     # hardware would not issue the call body
+                if i.result is not None:
+                    env[id(i.result)] = np.zeros(
+                        W, dtype=_TY_DTYPE.get(callee.ret_ty, np.float32))
+                idx += 1
+                continue
+            cargs: Dict[int, Any] = {}
+            for p, a in zip(callee.params, i.operands[1:]):
+                if p.ty is Ty.PTR:
+                    # pointer pass-through (params/globals)
+                    if isinstance(a, (Param, GlobalVar)):
+                        arr, _ = mem.resolve(a, argmap)
+                        cargs[id(p)] = arr
+                    else:
+                        raise ExecError("pointer arg must be param/global")
+                else:
+                    cargs[id(p)] = val(a)
+            r = yield from _exec_warp(callee, cargs, mask, ctx, mem, stats,
+                                      fuel)
+            if i.result is not None:
+                env[id(i.result)] = r
+            idx += 1
+            continue
+        if op is Op.CMOV:
+            c = val(i.operands[0]).astype(bool)
+            a = val(i.operands[1])
+            b2 = val(i.operands[2])
+            env[id(i.result)] = np.where(c, a, b2)
+            idx += 1
+            continue
+        if op is Op.SELECT:
+            c = val(i.operands[0]).astype(bool)
+            env[id(i.result)] = np.where(c, val(i.operands[1]),
+                                         val(i.operands[2]))
+            idx += 1
+            continue
+
+        # generic pure ops
+        from .vir import BINOPS, UNOPS
+        if op in BINOPS:
+            env[id(i.result)] = _np_binop(op, val(i.operands[0]),
+                                          val(i.operands[1]))
+            idx += 1
+            continue
+        if op in UNOPS:
+            env[id(i.result)] = _np_unop(op, val(i.operands[0]))
+            idx += 1
+            continue
+        raise ExecError(f"unhandled op {op}")
+
+
+# --------------------------------------------------------------------------
+# Kernel launch (grid scheduling = the thread-schedule code VOLT's
+# front-end inserts; here it lives in the host runtime)
+# --------------------------------------------------------------------------
+
+def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
+           params: LaunchParams,
+           scalar_args: Optional[Dict[str, Any]] = None,
+           globals_mem: Optional[Dict[str, np.ndarray]] = None
+           ) -> ExecStats:
+    """Execute a compiled kernel over the launch grid; returns stats.
+    Buffers are mutated in place (device memory semantics)."""
+    fn = module_fn
+    scalar_args = scalar_args or {}
+    mem = DeviceMemory(buffers, globals_mem)
+    stats = ExecStats()
+    W = params.warp_size
+    fuel = [params.fuel]
+    n_wg = params.grid * params.grid_y
+
+    for wg_lin in range(n_wg):
+        gx = wg_lin % params.grid
+        gy = wg_lin // params.grid
+        mem.shared = {}   # fresh shared memory per workgroup
+        warps: List[Generator[str, None, np.ndarray]] = []
+        for wrp in range(params.warps_per_wg):
+            lanes = np.arange(W)
+            tid_lin = wrp * W + lanes
+            active = tid_lin < params.wg_threads
+            lx = tid_lin % params.local_size
+            ly = tid_lin // params.local_size
+            intr = {
+                ("local_id", 0): lx.astype(np.int32),
+                ("local_id", 1): ly.astype(np.int32),
+                ("lane_id", 0): lanes.astype(np.int32),
+                ("group_id", 0): np.full(W, gx, np.int32),
+                ("group_id", 1): np.full(W, gy, np.int32),
+                ("global_id", 0): (gx * params.local_size + lx).astype(np.int32),
+                ("global_id", 1): (gy * params.local_size_y + ly).astype(np.int32),
+                ("local_size", 0): np.full(W, params.local_size, np.int32),
+                ("local_size", 1): np.full(W, params.local_size_y, np.int32),
+                ("num_groups", 0): np.full(W, params.grid, np.int32),
+                ("num_groups", 1): np.full(W, params.grid_y, np.int32),
+                ("global_size", 0): np.full(W, params.grid * params.local_size,
+                                            np.int32),
+                ("global_size", 1): np.full(W, params.grid_y *
+                                            params.local_size_y, np.int32),
+                ("num_threads", 0): np.full(W, W, np.int32),
+                ("num_warps", 0): np.full(W, params.warps_per_wg, np.int32),
+                ("warp_id", 0): np.full(W, wrp, np.int32),
+                ("core_id", 0): np.full(W, gx % 4, np.int32),
+                ("grid_dim", 0): np.full(W, params.grid, np.int32),
+            }
+            ctx = _WarpCtx(W, intr, params.strict_oob_loads)
+            argmap: Dict[int, Any] = {}
+            for p in fn.params:
+                if p.ty is Ty.PTR:
+                    if p.name in buffers:
+                        argmap[id(p)] = buffers[p.name]
+                    else:
+                        raise ExecError(f"no buffer bound for {p.name}")
+                else:
+                    v = scalar_args.get(p.name)
+                    if v is None:
+                        raise ExecError(f"no scalar bound for {p.name}")
+                    argmap[id(p)] = np.full(W, v, dtype=_TY_DTYPE[p.ty])
+            warps.append(_exec_warp(fn, argmap, active, ctx, mem, stats,
+                                    fuel))
+
+        # co-routine scheduling: run each warp to its next barrier; barriers
+        # synchronize all warps of the workgroup (vx_barrier local scope)
+        alive = list(range(len(warps)))
+        while alive:
+            at_barrier: List[int] = []
+            done: List[int] = []
+            for wi in alive:
+                try:
+                    ev = next(warps[wi])
+                    assert ev == "barrier"
+                    at_barrier.append(wi)
+                except StopIteration:
+                    done.append(wi)
+            if at_barrier and done:
+                raise ExecError("barrier divergence: some warps exited "
+                                "while others wait")
+            alive = at_barrier
+    return stats
+
+
+# --------------------------------------------------------------------------
+# Scalar reference executor (per-thread oracle on untransformed IR)
+# --------------------------------------------------------------------------
+
+def reference_launch(fn: Function, buffers: Dict[str, np.ndarray],
+                     params: LaunchParams,
+                     scalar_args: Optional[Dict[str, Any]] = None,
+                     globals_mem: Optional[Dict[str, np.ndarray]] = None
+                     ) -> None:
+    """Run each thread as an independent scalar program (CPU-reference
+    semantics, paper §5 'outputs compared against reference CPU
+    implementations'). Threads in a workgroup synchronize at barriers."""
+    scalar_args = scalar_args or {}
+    mem = DeviceMemory(buffers, globals_mem)
+
+    def thread_gen(gx: int, gy: int, lx: int, ly: int
+                   ) -> Generator[str, None, Any]:
+        env: Dict[int, Any] = {}
+        slots: Dict[int, Any] = {}
+
+        def val(v: Value) -> Any:
+            if isinstance(v, Const):
+                return v.value
+            if isinstance(v, Reg):
+                return env[id(v)]
+            if isinstance(v, Param):
+                return argmap[id(v)]
+            raise ExecError(f"cannot evaluate {v!r}")
+
+        argmap: Dict[int, Any] = {}
+        for p in fn.params:
+            if p.ty is Ty.PTR:
+                argmap[id(p)] = buffers[p.name]
+            else:
+                argmap[id(p)] = scalar_args[p.name]
+
+        intr = {
+            ("local_id", 0): lx, ("local_id", 1): ly,
+            ("lane_id", 0): (ly * params.local_size + lx) % params.warp_size,
+            ("group_id", 0): gx, ("group_id", 1): gy,
+            ("global_id", 0): gx * params.local_size + lx,
+            ("global_id", 1): gy * params.local_size_y + ly,
+            ("local_size", 0): params.local_size,
+            ("local_size", 1): params.local_size_y,
+            ("num_groups", 0): params.grid, ("num_groups", 1): params.grid_y,
+            ("global_size", 0): params.grid * params.local_size,
+            ("global_size", 1): params.grid_y * params.local_size_y,
+            ("num_threads", 0): params.warp_size,
+            ("num_warps", 0): params.warps_per_wg,
+            ("warp_id", 0): (ly * params.local_size + lx) // params.warp_size,
+            ("core_id", 0): gx % 4,
+            ("grid_dim", 0): params.grid,
+        }
+
+        import math
+        block = fn.entry
+        idx = 0
+        fuel = params.fuel
+        while True:
+            fuel -= 1
+            if fuel <= 0:
+                raise ExecError("reference out of fuel")
+            i = block.instrs[idx]
+            op = i.op
+            if op is Op.BR:
+                block, idx = i.operands[0], 0
+                continue
+            if op is Op.CBR:
+                block = i.operands[1] if val(i.operands[0]) else i.operands[2]
+                idx = 0
+                continue
+            if op is Op.RET:
+                return val(i.operands[0]) if i.operands else None
+            if op is Op.BARRIER:
+                yield "barrier"
+                idx += 1
+                continue
+            if op is Op.SLOT_LOAD:
+                env[id(i.result)] = slots.get(id(i.operands[0]), 0)
+                idx += 1
+                continue
+            if op is Op.SLOT_STORE:
+                slots[id(i.operands[0])] = val(i.operands[1])
+                idx += 1
+                continue
+            if op is Op.LOAD:
+                buf, _ = mem.resolve(i.operands[0], argmap)
+                a = int(val(i.operands[1]))
+                if a < 0 or a >= len(buf):
+                    raise ExecError(f"OOB reference load idx={a}")
+                env[id(i.result)] = buf[a].item()
+                idx += 1
+                continue
+            if op is Op.STORE:
+                buf, _ = mem.resolve(i.operands[0], argmap)
+                a = int(val(i.operands[1]))
+                if a < 0 or a >= len(buf):
+                    raise ExecError(f"OOB reference store idx={a}")
+                buf[a] = val(i.operands[2])
+                idx += 1
+                continue
+            if op is Op.ATOMIC:
+                kind = i.operands[0]
+                buf, _ = mem.resolve(i.operands[1], argmap)
+                a = int(val(i.operands[2]))
+                v = val(i.operands[3])
+                old = buf[a].item()
+                if kind == "add": buf[a] += v
+                elif kind == "max": buf[a] = max(old, v)
+                elif kind == "min": buf[a] = min(old, v)
+                elif kind == "xchg": buf[a] = v
+                env[id(i.result)] = old
+                idx += 1
+                continue
+            if op is Op.INTR:
+                env[id(i.result)] = intr[(i.operands[0], i.operands[1])]
+                idx += 1
+                continue
+            if op in (Op.VOTE, Op.SHFL):
+                raise ExecError("warp-collective ops have no scalar "
+                                "reference semantics")
+            if op is Op.PRINT:
+                idx += 1
+                continue
+            if op is Op.CALL:
+                callee: Function = i.operands[0]
+                sub_args: Dict[int, Any] = {}
+                for p, a in zip(callee.params, i.operands[1:]):
+                    if p.ty is Ty.PTR and isinstance(a, (Param, GlobalVar)):
+                        arr, _ = mem.resolve(a, argmap)
+                        sub_args[id(p)] = arr
+                    else:
+                        sub_args[id(p)] = val(a)
+                # scalar call: inline-interpret with a fresh env
+                r = yield from _ref_call(callee, sub_args, mem, intr, params)
+                if i.result is not None:
+                    env[id(i.result)] = r
+                idx += 1
+                continue
+            if op in (Op.SELECT, Op.CMOV):
+                env[id(i.result)] = (val(i.operands[1]) if val(i.operands[0])
+                                     else val(i.operands[2]))
+                idx += 1
+                continue
+            from .vir import BINOPS, UNOPS
+            if op in BINOPS:
+                a, b2 = val(i.operands[0]), val(i.operands[1])
+                arr = _np_binop(op, np.asarray(a), np.asarray(b2))
+                env[id(i.result)] = arr.item() if arr.ndim == 0 else arr
+                idx += 1
+                continue
+            if op in UNOPS:
+                arr = _np_unop(op, np.asarray(val(i.operands[0])))
+                env[id(i.result)] = arr.item() if arr.ndim == 0 else arr
+                idx += 1
+                continue
+            raise ExecError(f"unhandled reference op {op}")
+
+    def _ref_call(callee, sub_args, mem_, intr_, params_):
+        # reference scalar call helper (shares thread context)
+        saved = dict(_REF_TLS)
+        _REF_TLS.update({})
+        gen = _ref_exec(callee, sub_args, mem_, intr_, params_)
+        r = yield from gen
+        _REF_TLS.clear()
+        _REF_TLS.update(saved)
+        return r
+
+    _REF_TLS: Dict = {}
+
+    def _ref_exec(callee, sub_args, mem_, intr_, params_):
+        # A reduced scalar interpreter for device functions (no barriers).
+        env: Dict[int, Any] = {}
+        slots: Dict[int, Any] = {}
+
+        def val(v: Value) -> Any:
+            if isinstance(v, Const):
+                return v.value
+            if isinstance(v, Reg):
+                return env[id(v)]
+            if isinstance(v, Param):
+                return sub_args[id(v)]
+            raise ExecError(f"cannot evaluate {v!r}")
+
+        block = callee.entry
+        idx = 0
+        fuel = params_.fuel
+        while True:
+            fuel -= 1
+            if fuel <= 0:
+                raise ExecError("reference out of fuel")
+            i = block.instrs[idx]
+            op = i.op
+            if op is Op.BR:
+                block, idx = i.operands[0], 0
+                continue
+            if op is Op.CBR:
+                block = i.operands[1] if val(i.operands[0]) else i.operands[2]
+                idx = 0
+                continue
+            if op is Op.RET:
+                return val(i.operands[0]) if i.operands else None
+            if op is Op.SLOT_LOAD:
+                env[id(i.result)] = slots.get(id(i.operands[0]), 0)
+                idx += 1
+                continue
+            if op is Op.SLOT_STORE:
+                slots[id(i.operands[0])] = val(i.operands[1])
+                idx += 1
+                continue
+            if op is Op.LOAD:
+                buf = sub_args.get(id(i.operands[0]))
+                if buf is None:
+                    buf, _ = mem_.resolve(i.operands[0], sub_args)
+                a = int(val(i.operands[1]))
+                env[id(i.result)] = buf[a].item()
+                idx += 1
+                continue
+            if op is Op.STORE:
+                buf = sub_args.get(id(i.operands[0]))
+                if buf is None:
+                    buf, _ = mem_.resolve(i.operands[0], sub_args)
+                buf[int(val(i.operands[1]))] = val(i.operands[2])
+                idx += 1
+                continue
+            if op is Op.INTR:
+                env[id(i.result)] = intr_[(i.operands[0], i.operands[1])]
+                idx += 1
+                continue
+            if op in (Op.SELECT, Op.CMOV):
+                env[id(i.result)] = (val(i.operands[1]) if val(i.operands[0])
+                                     else val(i.operands[2]))
+                idx += 1
+                continue
+            if op is Op.CALL:
+                callee2: Function = i.operands[0]
+                sa: Dict[int, Any] = {}
+                for p, a in zip(callee2.params, i.operands[1:]):
+                    sa[id(p)] = val(a)
+                r = yield from _ref_exec(callee2, sa, mem_, intr_, params_)
+                if i.result is not None:
+                    env[id(i.result)] = r
+                idx += 1
+                continue
+            from .vir import BINOPS, UNOPS
+            if op in BINOPS:
+                arr = _np_binop(op, np.asarray(val(i.operands[0])),
+                                np.asarray(val(i.operands[1])))
+                env[id(i.result)] = arr.item() if arr.ndim == 0 else arr
+                idx += 1
+                continue
+            if op in UNOPS:
+                arr = _np_unop(op, np.asarray(val(i.operands[0])))
+                env[id(i.result)] = arr.item() if arr.ndim == 0 else arr
+                idx += 1
+                continue
+            raise ExecError(f"unhandled reference op {op}")
+
+    n_wg = params.grid * params.grid_y
+    for wg_lin in range(n_wg):
+        gx = wg_lin % params.grid
+        gy = wg_lin // params.grid
+        mem.shared = {}
+        gens = []
+        for t in range(params.wg_threads):
+            lx = t % params.local_size
+            ly = t // params.local_size
+            gens.append(thread_gen(gx, gy, lx, ly))
+        alive = list(range(len(gens)))
+        while alive:
+            at_barrier: List[int] = []
+            for ti in alive:
+                try:
+                    ev = next(gens[ti])
+                    at_barrier.append(ti)
+                except StopIteration:
+                    pass
+            alive = at_barrier

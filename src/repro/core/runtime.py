@@ -1,0 +1,122 @@
+"""Host runtime (paper §4.2 host compilation flow + Case Study 2).
+
+The front-end rewrites host-side API calls into operations against this
+device runtime.  We expose both dialect flavors:
+
+  OpenCL-ish:  create_buffer / enqueue_nd_range / read_buffer
+  CUDA-ish:    cuda_malloc / cuda_memcpy / cuda_memcpy_to_symbol /
+               cuda_launch_kernel
+
+Case Study 2 — ``cudaMemcpyToSymbol``: CuPBoP maps CUDA constant memory to
+Vortex global memory but lacks the host API, so constant initialization is
+impossible.  VOLT buffers the host data and *materializes it just before
+kernel launch*, after global addresses are resolved.  ``Runtime.launch``
+below does exactly that (``_pending_symbols``).
+
+Case Study 2 — shared-memory mapping: ``shared_in_local`` selects whether
+__shared__ arrays map to per-core local memory or global memory; it flows
+into the cycle model (simx.CycleModel) and reproduces the Fig 10 trade-off.
+
+The grid computation in ``launch`` is the runtime half of ``vx_wspawn``:
+a single control thread computes #warps/#cores from launch arguments, then
+spawns the grid (here: schedules the interpreter or the JAX backend).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from .interp import ExecStats, LaunchParams, launch as interp_launch
+from .simx import CycleModel
+from .vir import Function, Module, Ty
+
+_TY_DTYPE = {Ty.I32: np.int32, Ty.F32: np.float32, Ty.BOOL: np.bool_}
+
+
+@dataclass
+class Buffer:
+    name: str
+    data: np.ndarray
+
+
+class Runtime:
+    """A Vortex device-runtime stand-in with CUDA/OpenCL host APIs."""
+
+    def __init__(self, *, warp_size: int = 32,
+                 shared_in_local: bool = True) -> None:
+        self.warp_size = warp_size
+        self.buffers: Dict[str, np.ndarray] = {}
+        self.globals_mem: Dict[str, np.ndarray] = {}
+        self._pending_symbols: Dict[str, np.ndarray] = {}
+        self.cycle_model = CycleModel(shared_in_local=shared_in_local)
+        self.last_stats: Optional[ExecStats] = None
+
+    # -- OpenCL-ish -----------------------------------------------------------
+    def create_buffer(self, name: str, data: np.ndarray) -> Buffer:
+        arr = np.array(data, copy=True)
+        self.buffers[name] = arr
+        return Buffer(name, arr)
+
+    def read_buffer(self, name: str) -> np.ndarray:
+        return self.buffers[name]
+
+    def enqueue_nd_range(self, kernel_fn: Function, global_size: int,
+                         local_size: int,
+                         scalar_args: Optional[Dict[str, Any]] = None
+                         ) -> ExecStats:
+        grid = max(1, (global_size + local_size - 1) // local_size)
+        return self.launch(kernel_fn, grid=grid, block=local_size,
+                           scalar_args=scalar_args)
+
+    # -- CUDA-ish ---------------------------------------------------------------
+    def cuda_malloc(self, name: str, size: int,
+                    dtype=np.float32) -> Buffer:
+        arr = np.zeros(size, dtype=dtype)
+        self.buffers[name] = arr
+        return Buffer(name, arr)
+
+    def cuda_memcpy(self, dst: str, src: np.ndarray) -> None:
+        self.buffers[dst][:] = src
+
+    def cuda_memcpy_from(self, src: str) -> np.ndarray:
+        return self.buffers[src].copy()
+
+    def cuda_memcpy_to_symbol(self, module: Module, symbol: str,
+                              data: np.ndarray) -> None:
+        """Deferred constant initialization (Case Study 2): stage host data;
+        it is materialized into the symbol's global storage at launch."""
+        if symbol not in module.globals:
+            raise KeyError(f"no such device symbol {symbol!r}")
+        g = module.globals[symbol]
+        arr = np.asarray(data, dtype=_TY_DTYPE[g.elem_ty])
+        if len(arr) > g.size:
+            raise ValueError(f"symbol {symbol} overflow: {len(arr)} > {g.size}")
+        self._pending_symbols[symbol] = arr
+
+    # -- launch ------------------------------------------------------------------
+    def launch(self, kernel_fn: Function, *, grid: int, block: int,
+               scalar_args: Optional[Dict[str, Any]] = None) -> ExecStats:
+        # materialize staged symbols now that "addresses are resolved"
+        for sym, data in self._pending_symbols.items():
+            buf = self.globals_mem.get(sym)
+            if buf is None or len(buf) < len(data):
+                buf = np.zeros(max(len(data), 1), dtype=data.dtype)
+            buf[:len(data)] = data
+            self.globals_mem[sym] = buf
+        self._pending_symbols.clear()
+
+        params = LaunchParams(grid=grid, local_size=block,
+                              warp_size=self.warp_size)
+        stats = interp_launch(kernel_fn, self.buffers, params,
+                              scalar_args=scalar_args,
+                              globals_mem=self.globals_mem)
+        self.last_stats = stats
+        return stats
+
+    def cycles(self, stats: Optional[ExecStats] = None) -> float:
+        st = stats or self.last_stats
+        if st is None:
+            raise RuntimeError("no kernel has been launched")
+        return self.cycle_model.cycles(st)

@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention forward with divergence-aware block skipping.
+
+The paper's divergence management, lifted to tile granularity (DESIGN.md
+§2): a causal mask partitions the (Q-block, KV-block) grid into
+all-active, mixed, and all-inactive tiles.  All-inactive tiles are the
+"no lane active -> jump to join" fast path of the IPDOM stack; here they
+are skipped by ``@pl.when`` predication — the tile-level ``vx_pred``.
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks); BlockSpecs stage
+(block_q, head_dim) Q tiles and (block_k, head_dim) KV tiles in VMEM; the
+online-softmax accumulators (m, l, acc) are VMEM scratch carried across
+the kv grid dimension.  MXU alignment: block_q/block_k multiples of 128,
+head_dim is the lane dimension.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:                                        # TPU memory spaces
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:                           # pragma: no cover
+    _VMEM = None
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _scratch(shape, dtype):
+    if _VMEM is not None:
+        return _VMEM(shape, dtype)
+    return pl.MemorySpace.ANY(shape, dtype)    # pragma: no cover
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               causal: bool, sm_scale: float, block_q: int, block_k: int,
+               n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # ---- tile-level divergence management ------------------------------------
+    # strictly-above-diagonal tiles have an all-false mask: skip the MXU work
+    tile_active = jnp.logical_or(not causal,
+                                 k_start <= q_start + block_q - 1)
+
+    @pl.when(tile_active)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * sm_scale   # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, -1e30)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(jnp.float32), v).astype(jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q/k/v: (B, H, S, D) -> (B, H, S, D).
+
+    TPU is the target (interpret=False there); this container validates
+    the same kernel body under interpret=True on CPU.
+    """
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk)
+    sm_scale = 1.0 / math.sqrt(D)
+    bh = B * H
+    qr = q.reshape(bh, Sq, D)
+    kr = k.reshape(bh, Sk, D)
+    vr = v.reshape(bh, Sk, D)
+    n_q = Sq // block_q
+    n_k = Sk // block_k
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, sm_scale=sm_scale, block_q=block_q,
+        block_k=block_k, n_kv_blocks=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, Sq, D), q.dtype),
+        scratch_shapes=[
+            _scratch((block_q, 1), jnp.float32),
+            _scratch((block_q, 1), jnp.float32),
+            _scratch((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, D)

@@ -1,0 +1,14 @@
+"""Jitted public wrapper for the flash-attention kernel."""
+import functools
+
+import jax
+
+from .flash_attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, block_q: int = 128,
+                       block_k: int = 128, interpret: bool = True):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret)

@@ -1,0 +1,49 @@
+"""Pallas grouped expert matmul: y[e] = act(x[e] @ wi[e]) @ wo[e].
+
+The dense-as-sparse MoE compute stage (SparseWeaver deployment, paper
+§6.2): after capacity-based dispatch, per-expert token blocks are dense
+(E, C, d) tiles.  Grid = (E, C/block_c); each program stages one
+(block_c, d) token tile + this expert's weights in VMEM and runs two MXU
+matmuls with the SwiGLU nonlinearity fused between them — no HBM round
+trip for the (block_c, 2*ff) hidden tile.
+
+Capacity slots beyond a token run are zero rows (all-lanes-inactive at
+tile level); they flow through harmlessly, the combine scatter drops them.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, wi_ref, wo_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)          # (bc, d)
+    wi = wi_ref[0].astype(jnp.float32)        # (d, 2f)
+    wo = wo_ref[0].astype(jnp.float32)        # (f, d)
+    h = jax.lax.dot(x, wi)                    # (bc, 2f)
+    f = wo.shape[0]
+    g, u = h[:, :f], h[:, f:]
+    h = jax.nn.silu(g) * u
+    o_ref[0] = jax.lax.dot(h, wo).astype(o_ref.dtype)
+
+
+def grouped_expert_ff(x: jnp.ndarray, wi: jnp.ndarray, wo: jnp.ndarray, *,
+                      block_c: int = 128, interpret: bool = True
+                      ) -> jnp.ndarray:
+    """x: (E, C, d); wi: (E, d, 2f); wo: (E, f, d) -> (E, C, d)."""
+    E, C, d = x.shape
+    assert C % block_c == 0, (C, block_c)
+    f = wo.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(E, C // block_c),
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda e, c: (e, c, 0)),
+            pl.BlockSpec((1, d, 2 * f), lambda e, c: (e, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda e, c: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d), lambda e, c: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), x.dtype),
+        interpret=interpret,
+    )(x, wi, wo)

@@ -1,0 +1,12 @@
+import functools
+
+import jax
+
+from .moe_dispatch import grouped_expert_ff
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def grouped_expert_ff_op(x, wi, wo, *, block_c: int = 128,
+                         interpret: bool = True):
+    return grouped_expert_ff(x, wi, wo, block_c=block_c,
+                             interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the grouped expert FF."""
+import jax
+import jax.numpy as jnp
+
+
+def grouped_expert_ff_ref(x, wi, wo):
+    h = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   wi.astype(jnp.float32))
+    f = wo.shape[1]
+    g, u = h[..., :f], h[..., f:]
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h,
+                      wo.astype(jnp.float32)).astype(x.dtype)

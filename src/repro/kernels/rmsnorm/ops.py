@@ -1,0 +1,11 @@
+import functools
+
+import jax
+
+from .rmsnorm import rmsnorm
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block", "interpret"))
+def rmsnorm_op(x, scale, *, eps: float = 1e-6, block: int = 128,
+               interpret: bool = True):
+    return rmsnorm(x, scale, eps=eps, block=block, interpret=interpret)

@@ -1,0 +1,31 @@
+"""Fused RMSNorm Pallas kernel: one VMEM pass computes the fp32 moment and
+applies scale, instead of the 3-pass jnp lowering."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[0].astype(jnp.float32)            # (block, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[0] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+            block: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """x: (N, d) row-normalized; scale: (d,)."""
+    N, d = x.shape
+    assert N % block == 0
+    kern = functools.partial(_kernel, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=(N // block,),
+        in_specs=[pl.BlockSpec((1, block, d), lambda i: (0, i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((1, block, d), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, N, d), x.dtype),
+        interpret=interpret,
+    )(x[None], scale)[0]

@@ -1,0 +1,11 @@
+import functools
+
+import jax
+
+from .selective_scan import selective_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def selective_scan_op(dA, dBx, Cm, *, chunk: int = 64,
+                      interpret: bool = True):
+    return selective_scan(dA, dBx, Cm, chunk=chunk, interpret=interpret)

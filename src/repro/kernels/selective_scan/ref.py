@@ -1,0 +1,22 @@
+"""Sequential-scan oracle for the selective-scan kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dA, dBx, Cm):
+    """dA/dBx: (B, S, d, n); Cm: (B, S, n) -> (B, S, d)."""
+    B, S, d, n = dA.shape
+
+    def step(h, args):
+        a, bx, c = args
+        h = a * h + bx
+        return h, h @ c
+
+    def per_batch(a, bx, c):
+        h0 = jnp.zeros((d, n), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (a.astype(jnp.float32),
+                                        bx.astype(jnp.float32),
+                                        c.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(per_batch)(dA, dBx, Cm).astype(dA.dtype)

@@ -1,0 +1,71 @@
+"""Pallas chunked selective-scan (Mamba SSM) kernel.
+
+Grid = (B, S/chunk) with the grid's minor dimension walking chunks in
+order; the (d_inner, d_state) hidden state lives in VMEM scratch and is
+CARRIED across chunk programs — the (B, S, d_inner, d_state) tensor never
+exists.  Within a chunk the recurrence h_t = dA_t*h + dBx_t is a short
+fori_loop over timesteps on VMEM-resident tiles (chunk is small: the MXU
+work here is elementwise/VPU-bound, the win is memory locality).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:                           # pragma: no cover
+    _VMEM = None
+
+
+def _scratch(shape, dtype):
+    if _VMEM is not None:
+        return _VMEM(shape, dtype)
+    return pl.MemorySpace.ANY(shape, dtype)    # pragma: no cover
+
+
+def _kernel(dA_ref, dBx_ref, C_ref, o_ref, h_scr, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    dA = dA_ref[0].astype(jnp.float32)       # (chunk, d, n)
+    dBx = dBx_ref[0].astype(jnp.float32)     # (chunk, d, n)
+    Cm = C_ref[0].astype(jnp.float32)        # (chunk, n)
+
+    def step(t, carry):
+        h, ys = carry
+        h = dA[t] * h + dBx[t]               # (d, n)
+        y = h @ Cm[t]                        # (d,)
+        ys = ys.at[t].set(y)
+        return (h, ys)
+
+    ys0 = jnp.zeros((chunk, dA.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h_scr[...], ys0))
+    h_scr[...] = h
+    o_ref[0] = ys.astype(o_ref.dtype)
+
+
+def selective_scan(dA: jnp.ndarray, dBx: jnp.ndarray, Cm: jnp.ndarray, *,
+                   chunk: int = 64, interpret: bool = True) -> jnp.ndarray:
+    """dA/dBx: (B, S, d, n); Cm: (B, S, n) -> y (B, S, d)."""
+    B, S, d, n = dA.shape
+    assert S % chunk == 0
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(B, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d, n), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, d, n), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, d), dA.dtype),
+        scratch_shapes=[_scratch((d, n), jnp.float32)],
+        interpret=interpret,
+    )(dA, dBx, Cm)

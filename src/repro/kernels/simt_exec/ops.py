@@ -1,0 +1,22 @@
+"""Public wrapper: compile a @kernel handle through the full VOLT pipeline
+and execute it as a Pallas kernel."""
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from ...core.interp import LaunchParams
+from ...core.passes.pipeline import PassConfig, run_pipeline
+from .simt_exec import pallas_simt_launch
+
+
+def volt_pallas_run(kernel_handle, buffers: Dict[str, jnp.ndarray],
+                    params: LaunchParams,
+                    scalars: Optional[Dict[str, jnp.ndarray]] = None,
+                    config: Optional[PassConfig] = None,
+                    interpret: bool = True) -> Dict[str, jnp.ndarray]:
+    module = kernel_handle.build(None)
+    ck = run_pipeline(module, kernel_handle.name,
+                      config or PassConfig(uni_hw=True, uni_ann=True,
+                                           uni_func=True))
+    return pallas_simt_launch(ck.fn, params, buffers, scalars, module,
+                              interpret=interpret)

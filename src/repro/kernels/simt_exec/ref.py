@@ -1,0 +1,17 @@
+"""Oracle: the scalar per-thread reference executor on the untransformed IR."""
+from typing import Dict, Optional
+
+import numpy as np
+
+from ...core.interp import LaunchParams, reference_launch
+
+
+def volt_reference_run(kernel_handle, buffers: Dict[str, np.ndarray],
+                       params: LaunchParams,
+                       scalars: Optional[Dict] = None
+                       ) -> Dict[str, np.ndarray]:
+    module = kernel_handle.build(None)
+    bufs = {k: np.array(v, copy=True) for k, v in buffers.items()}
+    reference_launch(module.functions[kernel_handle.name], bufs, params,
+                     scalar_args=scalars)
+    return bufs

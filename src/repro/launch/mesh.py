@@ -1,0 +1,34 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (never module-level device state):
+importing this module must not initialize jax devices — the dry-run sets
+XLA_FLAGS before any jax import and then calls this.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (tests use small host-device meshes)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes the batch/FSDP dimension shards over: ('pod','data') when a pod
+    axis exists, else ('data',)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names) or (names[0],)
+
+
+def fsdp_axis(mesh):
+    da = data_axes(mesh)
+    return da if len(da) > 1 else da[0]

@@ -1,0 +1,72 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Patch existing dry-run artifacts with scan-depth-extrapolated costs
+(2 reduced-depth unrolled compiles per cell; the heavyweight main compile
+is reused from the original artifact)."""
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import _depth_extrapolate, VARIANTS
+from repro.launch.mesh import make_production_mesh, make_mesh
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--only-missing", action="store_true", default=True)
+    ap.add_argument("--force", dest="only_missing", action="store_false")
+    ap.add_argument("--glob", default="*.json")
+    ap.add_argument("--attn-exact", action="store_true",
+                    help="unroll the attention KV loop in costing variants "
+                         "(exact block counts; coarser chunk for compile "
+                         "time)")
+    args = ap.parse_args(argv)
+    art = Path(args.artifacts)
+    meshes = {}
+    for f in sorted(art.glob(args.glob)):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        if args.only_missing and isinstance(rec.get("extrapolated"), dict) \
+                and "flops" in rec["extrapolated"]:
+            continue
+        mesh_spec = rec["mesh"]
+        if mesh_spec not in meshes:
+            if mesh_spec == "multipod":
+                meshes[mesh_spec] = make_production_mesh(multi_pod=True)
+            elif mesh_spec == "pod":
+                meshes[mesh_spec] = make_production_mesh()
+            else:
+                dims = tuple(int(x) for x in mesh_spec.split("x"))
+                meshes[mesh_spec] = make_mesh(dims, ("data", "model"))
+        cfg = get_config(rec["arch"])
+        for v in rec.get("variant", "").split("+"):
+            if v:
+                cfg = VARIANTS[v](cfg)
+        kind = SHAPES[rec["shape"]].kind
+        if args.attn_exact:
+            import dataclasses
+            seq = SHAPES[rec["shape"]].seq_len
+            cfg = dataclasses.replace(
+                cfg, attn_unroll_kv=True,
+                attn_chunk=max(cfg.attn_chunk, seq // 16))
+        t0 = time.time()
+        try:
+            ex = _depth_extrapolate(cfg, rec["shape"], meshes[mesh_spec],
+                                    kind)
+        except Exception as e:
+            ex = {"error": f"{type(e).__name__}: {e}"}
+        rec["extrapolated"] = ex
+        f.write_text(json.dumps(rec, indent=1))
+        print(f"[recost] {f.name}: {time.time()-t0:.0f}s "
+              f"flops={ex.get('flops', 0):.3e}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

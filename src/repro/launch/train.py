@@ -1,0 +1,59 @@
+"""Production training launcher.
+
+On a real multi-pod deployment this process runs once per host with
+``jax.distributed.initialize()`` (coordinator from the cluster env) and the
+XLA flags below; here it drives the same code path on CPU devices with a
+reduced config unless --full is passed.
+
+Recommended TPU flags (latency-hiding scheduler -> compute/comm overlap):
+  LIBTPU_INIT_ARGS=--xla_tpu_enable_async_collective_fusion=true
+    --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true
+    --xla_tpu_overlap_compute_collective_tc=true
+    --xla_enable_async_all_gather=true
+"""
+import argparse
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.train.data import DataConfig
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.train_step import StepConfig
+from repro.train.optimizer import AdamWConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--distributed", action="store_true",
+                    help="multi-host: jax.distributed.initialize()")
+    args = ap.parse_args(argv)
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = get_model(cfg)
+    mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch)
+    res = train_loop(model, mesh, data_cfg,
+                     LoopConfig(total_steps=args.steps, ckpt_every=20),
+                     StepConfig(remat=True, opt=AdamWConfig(lr=1e-3)),
+                     args.ckpt_dir)
+    print(f"[train] done: {res.steps_done} steps, "
+          f"final loss {res.losses[-1]:.4f}"
+          + (f" (resumed from {res.resumed_from})" if res.resumed_from
+             else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .registry import get_model, MODEL_FAMILIES  # noqa: F401

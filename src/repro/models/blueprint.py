@@ -1,0 +1,127 @@
+"""Parameter blueprints: shape + dtype + logical sharding axes per leaf.
+
+This is the LM-framework analogue of the paper's centralized uniformity
+analysis (DESIGN.md §3): every parameter declares *logical* axes
+("vocab", "embed", "ff", "heads", "layers", "experts", ...) and a single
+set of rules decides, per mesh, which logical axes are sharded (divergent)
+vs replicated (uniform).  Models never mention mesh axes — the planner is
+the only place that does, which is what keeps the zoo portable across the
+single-pod and multi-pod meshes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+Tree = Any
+
+
+@dataclass(frozen=True)
+class Leaf:
+    """Blueprint of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical name per dim (None = repl)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                 # normal | zeros | ones | small
+    scale_dim: Optional[int] = None      # fan-in dim index for init scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def leaf(shape: Sequence[int], axes: Sequence[Optional[str]],
+         dtype=jnp.bfloat16, init: str = "normal",
+         scale_dim: Optional[int] = None) -> Leaf:
+    return Leaf(tuple(int(s) for s in shape), tuple(axes), dtype, init,
+                scale_dim)
+
+
+def is_leaf(x: Any) -> bool:
+    return isinstance(x, Leaf)
+
+
+def map_blueprint(f: Callable[[Leaf], Any], bp: Tree) -> Tree:
+    return jax.tree.map(f, bp, is_leaf=is_leaf)
+
+
+# -- materialization ----------------------------------------------------------
+
+def abstract_params(bp: Tree) -> Tree:
+    """ShapeDtypeStructs — all the dry-run ever touches (no allocation)."""
+    return map_blueprint(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), bp)
+
+
+def init_params(bp: Tree, key: jax.Array) -> Tree:
+    """Random init (smoke tests / the train example)."""
+    leaves, treedef = jax.tree.flatten(bp, is_leaf=is_leaf)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    out = []
+    for l, k in zip(leaves, keys):
+        if l.init == "zeros":
+            out.append(jnp.zeros(l.shape, l.dtype))
+        elif l.init == "ones":
+            out.append(jnp.ones(l.shape, l.dtype))
+        else:
+            fan_in = (l.shape[l.scale_dim] if l.scale_dim is not None
+                      else (l.shape[-2] if len(l.shape) >= 2 else l.shape[-1]))
+            scale = 1.0 / np.sqrt(max(1, fan_in))
+            out.append((jax.random.normal(k, l.shape, jnp.float32)
+                        * scale).astype(l.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# -- sharding rules (the "uniformity analysis" for parameters) -----------------
+
+# default logical->mesh rules for the production meshes
+#   fsdp axes shard over the data axis (ZeRO-style), tensor axes over model
+DEFAULT_RULES: Dict[str, Optional[Union[str, Tuple[str, ...]]]] = {
+    "layers": None,        # scan dimension: never sharded
+    "period": None,
+    "vocab": "model",
+    "embed": "fsdp",       # row-sharded embeddings / FSDP params
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",    # expert parallelism
+    "expert_ff": None,
+    "d_inner": "model",
+    "state": None,
+    "conv": None,
+}
+
+
+def spec_for(l: Leaf, rules: Dict[str, Any],
+             fsdp_axis: Optional[Union[str, Tuple[str, ...]]] = "data"
+             ) -> PartitionSpec:
+    parts = []
+    for ax in l.axes:
+        m = rules.get(ax) if ax is not None else None
+        if m == "fsdp":
+            m = fsdp_axis
+        parts.append(m)
+    # drop trailing Nones for tidier specs
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PartitionSpec(*parts)
+
+
+def param_specs(bp: Tree, rules: Optional[Dict[str, Any]] = None,
+                fsdp_axis: Optional[Union[str, Tuple[str, ...]]] = "data"
+                ) -> Tree:
+    rules = rules or DEFAULT_RULES
+    return map_blueprint(lambda l: spec_for(l, rules, fsdp_axis), bp)
+
+
+def count_params(bp: Tree) -> int:
+    n = 0
+    for l in jax.tree.leaves(bp, is_leaf=is_leaf):
+        n += int(np.prod(l.shape))
+    return n

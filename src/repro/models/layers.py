@@ -1,0 +1,270 @@
+"""Shared neural layers: norms, rotary embeddings (RoPE + M-RoPE), MLPs,
+GQA attention (naive / chunked-flash / decode-with-cache).
+
+All functions are pure; params are dict pytrees matching blueprint.py
+blueprints.  Compute dtype bf16, accumulation fp32 where it matters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blueprint import leaf
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_bp(d: int):
+    return {"scale": leaf((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, D/2)
+    ang = ang[..., None, :]                          # (..., S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Tuple[int, int, int] = (1, 1, 2),
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: the head-dim frequency bands are partitioned among
+    (temporal, height, width) position streams.
+
+    x: (B, S, H, D); positions3: (3, B, S).
+    ``sections`` are relative band sizes (t:h:w over D/2)."""
+    D = x.shape[-1]
+    half = D // 2
+    tot = sum(sections)
+    bt = half * sections[0] // tot
+    bh = half * sections[1] // tot
+    inv = rope_freqs(D, theta)                      # (half,)
+    # choose position stream per frequency band
+    band = jnp.arange(half)
+    stream = jnp.where(band < bt, 0, jnp.where(band < bt + bh, 1, 2))
+    pos = positions3.astype(jnp.float32)            # (3, B, S)
+    pos_sel = pos[stream]                           # (half, B, S)
+    ang = jnp.moveaxis(pos_sel, 0, -1) * inv        # (B, S, half)
+    ang = ang[..., None, :]                         # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_bp(d: int, ff: int, gated: bool = True):
+    if gated:
+        return {"wi": leaf((d, 2 * ff), ("embed", "ff"), scale_dim=0),
+                "wo": leaf((ff, d), ("ff", "embed"), scale_dim=0)}
+    return {"wi": leaf((d, ff), ("embed", "ff"), scale_dim=0),
+            "wo": leaf((ff, d), ("ff", "embed"), scale_dim=0)}
+
+
+def mlp(p: Params, x: jnp.ndarray, gated: bool = True) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if gated:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# GQA attention
+# --------------------------------------------------------------------------
+
+def attn_bp(d: int, n_heads: int, n_kv: int, head_dim: int):
+    return {
+        "wq": leaf((d, n_heads, head_dim), ("embed", "heads", "head_dim"),
+                   scale_dim=0),
+        "wk": leaf((d, n_kv, head_dim), ("embed", "kv_heads", "head_dim"),
+                   scale_dim=0),
+        "wv": leaf((d, n_kv, head_dim), ("embed", "kv_heads", "head_dim"),
+                   scale_dim=0),
+        "wo": leaf((n_heads, head_dim, d), ("heads", "head_dim", "embed"),
+                   scale_dim=2),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hkv*groups, D)"""
+    if groups == 1:
+        return k
+    B, S, H, D = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, H, groups, D)
+                            ).reshape(B, S, H * groups, D)
+
+
+def attention_naive(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """q: (B,Sq,H,D) k/v: (B,Sk,H,D). Reference implementation (small S)."""
+    D = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(D)
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(Sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(Sk)[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, chunk: int = 512,
+                      skip_masked_blocks: bool = False,
+                      unroll_kv: bool = False) -> jnp.ndarray:
+    """Flash-style online-softmax attention, scanned over KV chunks.
+
+    ``skip_masked_blocks=False`` (baseline): every (Q-chunk, KV-chunk) tile
+    is computed and masked — the linearized SIMT baseline.
+    ``skip_masked_blocks=True`` (divergence-managed, DESIGN.md §3): the
+    strictly-upper causal tiles are skipped *statically* by unrolling over
+    Q chunks with a growing KV slice — the tile-level analogue of the
+    IPDOM all-lanes-inactive fast path.  Halves attention FLOPs.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    if not causal:
+        return attention_naive(q, k, v, causal=False)
+
+    chunk = max(1, min(chunk, Sq, Sk))   # short sequences: single chunk
+    nq = (Sq + chunk - 1) // chunk
+
+    def q_block(qi_start: int, qc: jnp.ndarray, k_all, v_all, kv_len):
+        # online softmax over kv chunks of k_all[:kv_len]
+        nk = (kv_len + chunk - 1) // chunk
+        qpos = qi_start + jnp.arange(qc.shape[1])
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k_all, j * chunk, chunk, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v_all, j * chunk, chunk, axis=1)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, ks).astype(jnp.float32)
+            s = s * scale
+            kpos = j * chunk + jnp.arange(chunk)
+            mask = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] < kv_len)
+            s = jnp.where(mask[None, None], s, -1e30)
+            m2 = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(axis=-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qc.dtype), vs).astype(jnp.float32)
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((B, H, qc.shape[1]), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, qc.shape[1]), jnp.float32)
+        a0 = jnp.zeros((B, H, qc.shape[1], D), jnp.float32)
+        if unroll_kv:
+            # exact-cost mode: scan bodies are counted once by XLA's
+            # cost analysis, so the dry-run costing variants unroll
+            carry = (m0, l0, a0)
+            for j in range(nk):
+                carry, _ = kv_step(carry, jnp.int32(j))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        return jnp.einsum("bhqd->bqhd", out).astype(qc.dtype)
+
+    outs = []
+    for i in range(nq):
+        qs = i * chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, qs, min(chunk, Sq - qs), axis=1)
+        if skip_masked_blocks:
+            kv_len = min(Sk, (i + 1) * chunk)
+            # static slice => skipped tiles never appear in the HLO
+            k_sl = k[:, :kv_len]
+            v_sl = v[:, :kv_len]
+            outs.append(q_block(qs, qc, k_sl, v_sl, kv_len))
+        else:
+            outs.append(q_block(qs, qc, k, v, Sk))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """One-token decode: q (B,1,H,D), caches (B,Smax,Hkv,D)."""
+    B, Smax, Hkv, D = k_cache.shape
+    H = q.shape[2]
+    groups = H // Hkv
+    k = _repeat_kv(k_cache, groups)
+    v = _repeat_kv(v_cache, groups)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / math.sqrt(D)
+    valid = jnp.arange(Smax)[None, :] < cache_len[:, None]    # (B, Smax)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def gqa_attention(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                  *, n_heads: int, n_kv: int, causal: bool = True,
+                  impl: str = "chunked", skip_masked_blocks: bool = False,
+                  rope_theta: float = 10000.0, use_rope: bool = True,
+                  mrope_positions: Optional[jnp.ndarray] = None,
+                  kv_in: Optional[jnp.ndarray] = None,
+                  chunk: int = 512, unroll_kv: bool = False) -> jnp.ndarray:
+    """Full GQA block (projections + rope + attention + out projection).
+    ``kv_in`` switches to cross-attention (keys/values from encoder)."""
+    src = x if kv_in is None else kv_in
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if use_rope and kv_in is None:
+        if mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, theta=rope_theta)
+            k = apply_mrope(k, mrope_positions, theta=rope_theta)
+        else:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+    groups = n_heads // n_kv
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    if impl == "naive":
+        o = attention_naive(q, k, v, causal=causal)
+    else:
+        o = attention_chunked(q, k, v, causal=causal, chunk=chunk,
+                              skip_masked_blocks=skip_masked_blocks,
+                              unroll_kv=unroll_kv)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])

@@ -1,0 +1,92 @@
+"""Mixture-of-Experts FF layer: top-k router + capacity-based sort/gather
+dispatch + grouped expert matmul + weighted scatter combine.
+
+Dispatch is the framework-level mirror of the paper's divergence
+management: token->expert routing is SIMT divergence across experts, and we
+lower it "sparse as dense" (SparseWeaver §6.2) — a dense (E, C, d) compute
+over masked capacity slots, with all-lanes-inactive slots dropped by the
+validity mask.  Experts are sharded over the `model` mesh axis (EP).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blueprint import leaf
+
+Params = Dict[str, Any]
+
+
+def moe_bp(d: int, n_experts: int, d_ff_expert: int):
+    return {
+        "router": leaf((d, n_experts), ("embed", None), scale_dim=0),
+        "wi": leaf((n_experts, d, 2 * d_ff_expert),
+                   ("experts", "embed", "expert_ff"), scale_dim=1),
+        "wo": leaf((n_experts, d_ff_expert, d),
+                   ("experts", "expert_ff", "embed"), scale_dim=1),
+    }
+
+
+def moe_ff(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+           capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Capacity C = ceil(T*k/E * cf).  Overflowing tokens are dropped for the
+    overflowed expert (weight renormalized over surviving experts).
+    """
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((n_experts,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0) / (T * top_k)
+    aux = n_experts * jnp.sum(me * ce)
+
+    C = int(max(1, (T * top_k // n_experts) * capacity_factor))
+
+    # flatten assignments; stable sort by expert id
+    flat_e = gate_idx.reshape(-1)                            # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position within the expert's run (min-scatter init at +inf)
+    idx = jnp.arange(T * top_k)
+    run_start = jnp.full((n_experts,), T * top_k, jnp.int32
+                         ).at[se].min(idx.astype(jnp.int32), mode="drop")
+    pos = idx.astype(jnp.int32) - run_start[se]
+    ok = pos < C
+
+    # dispatch table (E*C,) of token ids; invalid slots point to T (dropped)
+    table = jnp.full((n_experts * C,), T, jnp.int32)
+    slot = se * C + jnp.where(ok, pos, 0)
+    table = table.at[jnp.where(ok, slot, n_experts * C)].set(
+        st_.astype(jnp.int32), mode="drop")
+    wtable = jnp.zeros((n_experts * C,), jnp.float32)
+    wtable = wtable.at[jnp.where(ok, slot, n_experts * C)].set(
+        sw, mode="drop")
+
+    # gather tokens -> (E, C, d); row T is a zero pad
+    xp = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xg = xp[table].reshape(n_experts, C, d)
+
+    # grouped expert matmul (dense-as-sparse)
+    h = jnp.einsum("ecd,edf->ecf", xg, p["wi"])
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])               # (E, C, d)
+
+    # weighted combine back to tokens
+    yflat = (y.reshape(n_experts * C, d).astype(jnp.float32)
+             * wtable[:, None])
+    out = jnp.zeros((T + 1, d), jnp.float32).at[table].add(yflat)[:T]
+    return out.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,148 @@
+"""Model registry: config -> LM instance + per-shape input specs.
+
+``input_specs`` returns ShapeDtypeStructs only (the dry-run never
+allocates); ``input_shardings`` returns the matching PartitionSpecs.  Both
+follow the planner rules in distributed/sharding.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .transformer import LM
+from ..configs.base import ModelConfig, SHAPES, ShapeSpec
+
+MODEL_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+def get_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """Step-function inputs for one (arch x shape) cell."""
+    sh = SHAPES[shape_name]
+    B = batch_override or sh.global_batch
+    S = sh.seq_len
+    model = LM(cfg)
+
+    if sh.kind == "train":
+        out: Dict[str, Any] = {}
+        if cfg.enc_dec:
+            out["tokens"] = _sds((B, S // 2), jnp.int32)
+            out["frontend_embeds"] = _sds((B, S // 2, cfg.d_model),
+                                          jnp.bfloat16)
+        else:
+            out["tokens"] = _sds((B, S), jnp.int32)
+            if cfg.frontend_embeds:
+                out["frontend_embeds"] = _sds((B, min(256, S), cfg.d_model),
+                                              jnp.bfloat16)
+            if cfg.pos == "mrope":
+                out["mrope_positions"] = _sds((3, B, S), jnp.int32)
+        return out
+
+    if sh.kind == "prefill":
+        out = {"tokens": _sds((B, S // 2 if cfg.enc_dec else S), jnp.int32)}
+        if cfg.enc_dec:
+            out["frontend_embeds"] = _sds((B, S // 2, cfg.d_model),
+                                          jnp.bfloat16)
+        return out
+
+    # decode shapes: one new token against a cache of length S
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    out = {
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((B,), jnp.int32),
+        "cache": cache,
+    }
+    if cfg.enc_dec:
+        out["enc_out"] = _sds((B, 4096, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def input_shardings(cfg: ModelConfig, shape_name: str,
+                    data_axes=("data",),
+                    axis_sizes: Optional[Dict[str, int]] = None
+                    ) -> Dict[str, Any]:
+    """PartitionSpecs matching input_specs. Batch shards over the data
+    axes when divisible; batch-1 long-decode shards the KV/sequence dim
+    instead (sequence parallelism)."""
+    axis_sizes = axis_sizes or {"data": 16, "model": 16}
+    sh = SHAPES[shape_name]
+    B = sh.global_batch
+    da = tuple(data_axes)
+    da_size = 1
+    for a in da:
+        da_size *= axis_sizes.get(a, 1)
+    dspec = da if len(da) > 1 else da[0]
+    batch_shardable = B % da_size == 0 and B >= da_size
+    bspec = dspec if batch_shardable else None
+    model_size = axis_sizes.get("model", 1)
+
+    if sh.kind in ("train", "prefill"):
+        out = {"tokens": P(bspec, None)}
+        has_frontend = (cfg.enc_dec if sh.kind == "prefill"
+                        else (cfg.enc_dec or cfg.frontend_embeds))
+        if has_frontend:
+            out["frontend_embeds"] = P(bspec, None, None)
+        if cfg.pos == "mrope" and sh.kind == "train":
+            out["mrope_positions"] = P(None, bspec, None)
+        return out
+
+    # decode: per-layer-kind cache specs from the model
+    model = LM(cfg)
+    if batch_shardable:
+        seq_axes: Any = "model"          # heads unshardable -> SP on model
+    else:
+        seq_axes = tuple(list(da) + ["model"])  # batch-1: SP over all axes
+    cache = model.cache_pspecs(bspec=bspec, seq_axes=seq_axes,
+                               model_size=model_size)
+    out = {
+        "tokens": P(bspec, None),
+        "pos": P(bspec),
+        "cache": cache,
+    }
+    if cfg.enc_dec:
+        out["enc_out"] = P(bspec, None, None)
+    return out
+
+
+def dynamic_rules(cfg: ModelConfig, axis_sizes: Dict[str, int],
+                  base: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Adapt the logical->mesh rules to this (arch, mesh): a logical axis
+    whose size does not divide its mesh axis falls back to replication
+    (e.g. starcoder2's 36 heads on a 16-way model axis, GQA kv=8 heads).
+    This is the per-target seed adjustment of the sharding 'uniformity
+    analysis' (DESIGN.md §3)."""
+    from ..models.blueprint import DEFAULT_RULES
+    rules = dict(base or DEFAULT_RULES)
+    m = axis_sizes.get("model", 1)
+
+    def fits(n: int) -> bool:
+        return n % m == 0
+
+    if not fits(cfg.n_heads):
+        rules["heads"] = None
+    if not fits(cfg.n_kv_heads):
+        rules["kv_heads"] = None
+    if not fits(cfg.padded_vocab):
+        rules["vocab"] = None
+    if cfg.d_ff and not fits(cfg.d_ff):
+        rules["ff"] = None
+    if cfg.family == "ssm" and cfg.d_ff == 0:
+        # xlstm: "ff" axis carries 4*d_model gate blocks
+        if not fits(4 * cfg.d_model):
+            rules["ff"] = None
+    if cfg.moe_experts and not fits(cfg.moe_experts):
+        rules["experts"] = None
+    if not fits(cfg.ssm_d_inner):
+        rules["d_inner"] = None
+    return rules

@@ -1,0 +1,123 @@
+"""Mamba-style selective SSM block (for jamba-1.5).
+
+Training path: depthwise causal conv1d + chunked selective scan — the
+(B, S, d_inner, d_state) tensor is never materialized; a lax.scan over
+sequence chunks carries the (B, d_inner, d_state) hidden state, with an
+associative cumulative product-sum inside each chunk.
+
+Decode path: O(1) recurrent state update per token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blueprint import leaf
+
+Params = Dict[str, Any]
+
+
+def mamba_bp(d: int, d_inner: int, d_state: int = 16, d_conv: int = 4,
+             dt_rank: Optional[int] = None):
+    dt_rank = dt_rank or max(1, d // 16)
+    return {
+        "in_proj": leaf((d, 2 * d_inner), ("embed", "d_inner"), scale_dim=0),
+        "conv_w": leaf((d_conv, d_inner), ("conv", "d_inner"), init="small",
+                       scale_dim=0),
+        "conv_b": leaf((d_inner,), ("d_inner",), init="zeros"),
+        "x_proj": leaf((d_inner, dt_rank + 2 * d_state),
+                       ("d_inner", None), scale_dim=0),
+        "dt_proj": leaf((dt_rank, d_inner), (None, "d_inner"), scale_dim=0),
+        "dt_bias": leaf((d_inner,), ("d_inner",), init="zeros"),
+        "A_log": leaf((d_inner, d_state), ("d_inner", "state"), init="ones"),
+        "D": leaf((d_inner,), ("d_inner",), init="ones"),
+        "out_proj": leaf((d_inner, d), ("d_inner", "embed"), scale_dim=0),
+    }
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   state: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). Returns (y, tail)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    tail = xp[:, -(K - 1):, :]
+    return y + b[None, None, :], tail
+
+
+def _ssm_params(p: Params, xz: jnp.ndarray, d_state: int):
+    d_inner = p["A_log"].shape[0]
+    dt_rank = p["dt_proj"].shape[0]
+    proj = jnp.einsum("bsc,cr->bsr", xz, p["x_proj"]).astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rc->bsc", dt, p["dt_proj"]
+                                    .astype(jnp.float32))
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))     # (C, N)
+    return dt, A, Bm, Cm
+
+
+def mamba_scan_chunked(p: Params, x: jnp.ndarray, *, d_state: int = 16,
+                       chunk: int = 256) -> jnp.ndarray:
+    """Training-time selective scan. x: (B, S, d)."""
+    B, S, d = x.shape
+    xz = jnp.einsum("bsd,dc->bsc", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                # (B, S, C) each
+    xs, _ = _causal_conv1d(xs, p["conv_w"], p["conv_b"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+
+    nchunks = max(1, (S + chunk - 1) // chunk)
+    Cdim = xs.shape[-1]
+
+    def chunk_step(h, ci):
+        xc = jax.lax.dynamic_slice_in_dim(xs, ci * chunk, chunk, axis=1)
+        dt, A, Bm, Cm = _ssm_params(p, xc, d_state)   # dt (B,c,C) Bm/Cm (B,c,N)
+        dA = jnp.exp(dt[..., None] * A[None, None])   # (B,c,C,N)
+        dBx = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+        # in-chunk associative scan: h_t = dA_t h_{t-1} + dBx_t
+
+        def combine(a, b):
+            (ga, xa), (gb, xb) = a, b
+            return (ga * gb, xa * gb + xb)
+
+        g, s = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = g * h[:, None] + s                        # (B,c,C,N)
+        y = jnp.einsum("bcun,bcn->bcu", hs, Cm)        # (B,c,C)
+        h_next = hs[:, -1]
+        return h_next, y
+
+    h0 = jnp.zeros((B, Cdim, d_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, jnp.arange(nchunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunks * chunk, Cdim)[:, :S]
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bsc,cd->bsd", y.astype(x.dtype), p["out_proj"])
+
+
+def mamba_decode_step(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                      *, d_state: int = 16
+                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, 1, d); state: {"conv": (B,K-1,C), "ssm": (B,C,N)}."""
+    xz = jnp.einsum("bsd,dc->bsc", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_tail = _causal_conv1d(xs, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    dt, A, Bm, Cm = _ssm_params(p, xs, d_state)
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])               # (B,C,N)
+    dBx = (dt[:, 0] * xs[:, 0].astype(jnp.float32))[..., None] \
+        * Bm[:, 0, None, :]
+    h = dA * state["ssm"] + dBx
+    y = jnp.einsum("bun,bn->bu", h, Cm[:, 0])[:, None, :]    # (B,1,C)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsc,cd->bsd", y.astype(x.dtype), p["out_proj"])
+    return out, {"conv": conv_tail, "ssm": h}

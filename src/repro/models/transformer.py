@@ -1,0 +1,456 @@
+"""Unified LM assembly for all assigned architectures.
+
+A model is a stack of identical *periods*; a period is a short list of
+heterogeneous layers (attn / mamba / mlstm / slstm, each with dense-FF,
+MoE-FF or no FF).  ``lax.scan`` runs over the period axis with stacked
+params, so the 126-layer/405B configs trace one period once — compile time
+stays bounded for the dry-run.  Encoder-decoder models hold two stacks.
+
+Decode carries a per-period cache pytree (KV pages for attention layers,
+recurrent states for SSM/xLSTM layers) scanned alongside the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from . import xlstm as XL
+from .blueprint import Leaf, abstract_params, init_params, is_leaf, leaf
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# layer descriptors
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str          # attn | attn_cross | mamba | mlstm | slstm
+    ff: str             # dense | moe | none
+
+
+def _stack_bp(bp, n: int):
+    """Add a leading period axis to every blueprint leaf."""
+    return jax.tree.map(
+        lambda l: Leaf((n,) + l.shape, ("layers",) + l.axes, l.dtype,
+                       l.init, None if l.scale_dim is None
+                       else l.scale_dim + 1),
+        bp, is_leaf=is_leaf)
+
+
+class LM:
+    """See configs/base.py:ModelConfig for the knob list."""
+
+    def __init__(self, cfg) -> None:
+        self.cfg = cfg
+        assert cfg.n_layers % len(cfg.layer_pattern()) == 0, \
+            f"{cfg.name}: pattern does not tile n_layers"
+        self.period = cfg.layer_pattern()
+        self.n_periods = cfg.n_layers // len(self.period)
+
+    # -- blueprints -----------------------------------------------------------
+    def _layer_bp(self, kind: LayerKind):
+        c = self.cfg
+        bp: Dict[str, Any] = {"ln1": L.rmsnorm_bp(c.d_model)}
+        if kind.mixer == "attn":
+            bp["attn"] = L.attn_bp(c.d_model, c.n_heads, c.n_kv_heads,
+                                   c.head_dim)
+        elif kind.mixer == "attn_cross":
+            bp["attn"] = L.attn_bp(c.d_model, c.n_heads, c.n_kv_heads,
+                                   c.head_dim)
+            bp["xattn"] = L.attn_bp(c.d_model, c.n_heads, c.n_kv_heads,
+                                    c.head_dim)
+            bp["lnx"] = L.rmsnorm_bp(c.d_model)
+        elif kind.mixer == "mamba":
+            bp["mamba"] = SSM.mamba_bp(c.d_model, c.ssm_d_inner,
+                                       c.ssm_d_state, c.ssm_d_conv)
+        elif kind.mixer == "mlstm":
+            bp["mlstm"] = XL.mlstm_bp(c.d_model, c.n_heads)
+        elif kind.mixer == "slstm":
+            bp["slstm"] = XL.slstm_bp(c.d_model, c.n_heads)
+        else:
+            raise ValueError(kind.mixer)
+        if kind.ff == "dense":
+            bp["ln2"] = L.rmsnorm_bp(c.d_model)
+            bp["mlp"] = L.mlp_bp(c.d_model, c.d_ff, c.gated_mlp)
+        elif kind.ff == "moe":
+            bp["ln2"] = L.rmsnorm_bp(c.d_model)
+            bp["moe"] = MOE.moe_bp(c.d_model, c.moe_experts, c.moe_d_ff)
+            if c.moe_shared_ff:
+                bp["shared_mlp"] = L.mlp_bp(c.d_model, c.moe_d_ff,
+                                            c.gated_mlp)
+        return bp
+
+    def blueprint(self):
+        c = self.cfg
+        period_bp = [self._layer_bp(k) for k in self.period]
+        bp: Dict[str, Any] = {
+            "embed": leaf((c.padded_vocab, c.d_model), ("vocab", "embed"),
+                          scale_dim=1),
+            "stack": _stack_bp(period_bp, self.n_periods),
+            "ln_f": L.rmsnorm_bp(c.d_model),
+        }
+        if not c.tie_embeddings:
+            bp["unembed"] = leaf((c.d_model, c.padded_vocab),
+                                 ("embed", "vocab"), scale_dim=0)
+        if c.enc_dec:
+            enc_kind = LayerKind("attn", "dense")
+            enc_bp = [self._layer_bp(enc_kind) for _ in range(1)]
+            bp["enc_stack"] = _stack_bp(enc_bp, c.enc_layers)
+            bp["enc_ln_f"] = L.rmsnorm_bp(c.d_model)
+        return bp
+
+    # -- one period of layers ---------------------------------------------------
+    def _apply_layer(self, kind: LayerKind, p, x, positions, *,
+                     causal: bool, enc_out=None, mrope=None,
+                     aux: Optional[List] = None):
+        c = self.cfg
+        h = L.rmsnorm(p["ln1"], x)
+        if kind.mixer in ("attn", "attn_cross"):
+            mix = L.gqa_attention(
+                p["attn"], h, positions, n_heads=c.n_heads,
+                n_kv=c.n_kv_heads, causal=causal, impl=c.attn_impl,
+                skip_masked_blocks=c.attn_skip_masked_blocks,
+                rope_theta=c.rope_theta, use_rope=(c.pos != "none"),
+                mrope_positions=mrope, chunk=c.attn_chunk,
+                unroll_kv=c.attn_unroll_kv)
+        elif kind.mixer == "mamba":
+            mix = SSM.mamba_scan_chunked(p["mamba"], h,
+                                         d_state=c.ssm_d_state,
+                                         chunk=c.ssm_chunk)
+        elif kind.mixer == "mlstm":
+            mix = XL.mlstm_chunked(p["mlstm"], h, n_heads=c.n_heads,
+                                   chunk=c.xlstm_chunk)
+        elif kind.mixer == "slstm":
+            mix = XL.slstm_seq(p["slstm"], h)
+        else:
+            raise ValueError(kind.mixer)
+
+        if c.parallel_block and kind.ff == "dense":
+            # Cohere-style: attn and FF read the same normed input
+            ff = L.mlp(p["mlp"], h, c.gated_mlp)
+            return x + mix + ff
+
+        x = x + mix
+        if kind.mixer == "attn_cross" and enc_out is not None:
+            hx = L.rmsnorm(p["lnx"], x)
+            xa = L.gqa_attention(
+                p["xattn"], hx, positions, n_heads=c.n_heads,
+                n_kv=c.n_kv_heads, causal=False, impl="naive",
+                use_rope=False, kv_in=enc_out)
+            x = x + xa
+        if kind.ff == "dense":
+            x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x), c.gated_mlp)
+        elif kind.ff == "moe":
+            h2 = L.rmsnorm(p["ln2"], x)
+            y, a = MOE.moe_ff(p["moe"], h2, n_experts=c.moe_experts,
+                              top_k=c.moe_top_k,
+                              capacity_factor=c.moe_capacity)
+            if c.moe_shared_ff:
+                y = y + L.mlp(p["shared_mlp"], h2, c.gated_mlp)
+            x = x + y
+            if aux is not None:
+                aux.append(a)
+        return x
+
+    def _run_stack(self, stack_params, x, positions, *, kinds, causal,
+                   enc_out=None, mrope=None, remat: bool = False):
+        aux_total = jnp.zeros((), jnp.float32)
+        seq_sp = self.cfg.seq_shard_activations
+
+        def period_fn(carry, pparams):
+            x, auxs = carry
+            aux: List = []
+            for k, kind in enumerate(kinds):
+                x = self._apply_layer(kind, pparams[k], x, positions,
+                                      causal=causal, enc_out=enc_out,
+                                      mrope=mrope, aux=aux)
+                if seq_sp:
+                    # sequence parallelism: pin the residual stream's S dim
+                    # to the model axis between blocks, converting the TP
+                    # all-reduce into reduce-scatter + all-gather
+                    from jax.sharding import PartitionSpec as P
+                    x = jax.lax.with_sharding_constraint(
+                        x, P("data", "model", None))
+            for a in aux:
+                auxs = auxs + a
+            return (x, auxs), None
+
+        fn = period_fn
+        if remat:
+            fn = jax.checkpoint(period_fn,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        if self.cfg.unroll_stack:
+            # python unroll: used by the dry-run costing variants, where
+            # XLA's count-scan-body-once cost model would hide depth
+            carry = (x, aux_total)
+            n = jax.tree.leaves(stack_params)[0].shape[0]
+            for i in range(n):
+                pp = jax.tree.map(lambda a: a[i], stack_params)
+                carry, _ = fn(carry, pp)
+            x, aux_total = carry
+            return x, aux_total
+        (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total), stack_params)
+        return x, aux_total
+
+    # -- training forward ---------------------------------------------------------
+    def loss_fn(self, params, batch, *, remat: bool = True):
+        """batch: tokens (B,S) int32, plus modality extras.  Returns scalar
+        loss (mean NLL + aux)."""
+        c = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(jnp.bfloat16)
+        positions = jnp.arange(S)[None, :]
+        mrope = batch.get("mrope_positions") if c.pos == "mrope" else None
+
+        if c.frontend_embeds:
+            fe = batch["frontend_embeds"].astype(x.dtype)   # (B, Sf, d)
+            Sf = fe.shape[1]
+            x = jnp.concatenate([fe, x[:, Sf:]], axis=1)
+
+        enc_out = None
+        if c.enc_dec:
+            src = batch["frontend_embeds"].astype(jnp.bfloat16)  # (B,Ss,d)
+            spos = jnp.arange(src.shape[1])[None, :]
+            enc_kinds = [LayerKind("attn", "dense")]
+            enc_out, _ = self._run_stack(params["enc_stack"], src, spos,
+                                         kinds=enc_kinds, causal=False,
+                                         remat=remat)
+            enc_out = L.rmsnorm(params["enc_ln_f"], enc_out)
+
+        x, aux = self._run_stack(params["stack"], x, positions,
+                                 kinds=self.period, causal=True,
+                                 enc_out=enc_out, mrope=mrope, remat=remat)
+        x = L.rmsnorm(params["ln_f"], x)
+
+        unembed = (params["embed"].T if c.tie_embeddings
+                   else params["unembed"])
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        valid = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
+
+        if c.loss_chunk and S > c.loss_chunk:
+            n = S // c.loss_chunk
+            xs = x.reshape(B, n, c.loss_chunk, c.d_model)
+            ls = labels.reshape(B, n, c.loss_chunk)
+            vs = valid.reshape(B, n, c.loss_chunk)
+
+            def chunk_loss(carry, args):
+                xc, lc, vc = args        # (B,C,d) (B,C) (B,C)
+                logits = jnp.einsum("bcd,dv->bcv", xc, unembed
+                                    ).astype(jnp.float32)
+                logits = _mask_vocab_pad(logits, c.vocab)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                ll = jnp.take_along_axis(logits, lc[..., None],
+                                         axis=-1)[..., 0]
+                return carry + ((lse - ll) * vc).sum(), None
+
+            tot, _ = jax.lax.scan(
+                chunk_loss, jnp.zeros((), jnp.float32),
+                (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(ls, 1, 0),
+                 jnp.moveaxis(vs, 1, 0)))
+            nll = tot / jnp.maximum(valid.sum(), 1.0)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, unembed).astype(jnp.float32)
+            logits = _mask_vocab_pad(logits, c.vocab)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+            nll = ((lse - ll) * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+        return nll + 0.01 * aux / max(1, self.n_periods)
+
+    # -- decode -----------------------------------------------------------------
+    def _layer_cache_bp(self, kind: LayerKind, B: int, S_max: int):
+        c = self.cfg
+        if kind.mixer in ("attn", "attn_cross"):
+            kv = {"k": jnp.zeros((B, S_max, c.n_kv_heads, c.head_dim),
+                                 jnp.bfloat16),
+                  "v": jnp.zeros((B, S_max, c.n_kv_heads, c.head_dim),
+                                 jnp.bfloat16)}
+            return kv
+        if kind.mixer == "mamba":
+            return {"conv": jnp.zeros((B, c.ssm_d_conv - 1, c.ssm_d_inner),
+                                      jnp.bfloat16),
+                    "ssm": jnp.zeros((B, c.ssm_d_inner, c.ssm_d_state),
+                                     jnp.float32)}
+        if kind.mixer == "mlstm":
+            hd = c.d_model // c.n_heads
+            return {"C": jnp.zeros((B, c.n_heads, hd, hd), jnp.float32),
+                    "n": jnp.zeros((B, c.n_heads, hd), jnp.float32),
+                    "m": jnp.full((B, c.n_heads), -1e30, jnp.float32)}
+        if kind.mixer == "slstm":
+            return XL.slstm_init_state(B, c.d_model)
+        raise ValueError(kind.mixer)
+
+    def init_cache(self, B: int, S_max: int):
+        """Stacked (n_periods, ...) cache pytree."""
+        per = [self._layer_cache_bp(k, B, S_max) for k in self.period]
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_periods,) + x.shape).copy(),
+            per)
+
+    def cache_pspecs(self, *, bspec, seq_axes, model_size: int):
+        """PartitionSpecs matching init_cache, layer-kind aware.
+
+        bspec: mesh axes for the batch dim (None when batch unshardable);
+        seq_axes: axes for the KV sequence dim when heads cannot shard
+        (GQA kv heads not divisible by the model axis -> sequence-shard
+        the cache instead); model_size: size of the model axis.
+        """
+        from jax.sharding import PartitionSpec as P
+        c = self.cfg
+        kv_headable = c.n_kv_heads % model_size == 0
+
+        def kind_spec(kind: LayerKind):
+            if kind.mixer in ("attn", "attn_cross"):
+                if kv_headable:
+                    s = P(None, bspec, None, "model", None)
+                else:
+                    s = P(None, bspec, seq_axes, None, None)
+                return {"k": s, "v": s}
+            if kind.mixer == "mamba":
+                cs = "model" if c.ssm_d_inner % model_size == 0 else None
+                return {"conv": P(None, bspec, None, cs),
+                        "ssm": P(None, bspec, cs, None)}
+            if kind.mixer == "mlstm":
+                return {"C": P(None, bspec, None, None, None),
+                        "n": P(None, bspec, None, None),
+                        "m": P(None, bspec, None)}
+            if kind.mixer == "slstm":
+                ds = "model" if c.d_model % model_size == 0 else None
+                return (P(None, bspec, ds), P(None, bspec, ds),
+                        P(None, bspec, ds), P(None, bspec, ds))
+            raise ValueError(kind.mixer)
+
+        return [kind_spec(k) for k in self.period]
+
+    def decode_step(self, params, cache, tokens, pos, enc_out=None):
+        """tokens: (B,1) int32; pos: (B,) current lengths.
+        Returns (logits (B,1,V), new cache)."""
+        c = self.cfg
+        B = tokens.shape[0]
+        x = params["embed"][tokens].astype(jnp.bfloat16)
+        positions = pos[:, None]
+
+        def period_fn(x, scanned):
+            pparams, pcache = scanned
+            new_caches = []
+            for k, kind in enumerate(self.period):
+                x, nc = self._decode_layer(kind, pparams[k], pcache[k], x,
+                                           positions, pos, enc_out)
+                new_caches.append(nc)
+            return x, new_caches
+
+        if c.unroll_stack:
+            n = jax.tree.leaves(params["stack"])[0].shape[0]
+            new_caches = []
+            for i in range(n):
+                pp = jax.tree.map(lambda a: a[i], params["stack"])
+                cc = jax.tree.map(lambda a: a[i], cache)
+                x, nc = period_fn(x, (pp, cc))
+                new_caches.append(nc)
+            new_cache = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *new_caches)
+        else:
+            x, new_cache = jax.lax.scan(period_fn, x,
+                                        (params["stack"], cache))
+        x = L.rmsnorm(params["ln_f"], x)
+        unembed = (params["embed"].T if c.tie_embeddings
+                   else params["unembed"])
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed).astype(jnp.float32)
+        return _mask_vocab_pad(logits, c.vocab), new_cache
+
+    def _decode_layer(self, kind: LayerKind, p, cache, x, positions, pos,
+                      enc_out):
+        c = self.cfg
+        h = L.rmsnorm(p["ln1"], x)
+        if kind.mixer in ("attn", "attn_cross"):
+            q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])
+            if c.pos != "none":
+                q = L.apply_rope(q, positions, c.rope_theta)
+                k = L.apply_rope(k, positions, c.rope_theta)
+            # per-batch positional insert
+            kc = _insert_at(cache["k"], k, pos)
+            vc = _insert_at(cache["v"], v, pos)
+            o = L.attention_decode(q, kc, vc, pos + 1)
+            mix = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+            new_cache = {"k": kc, "v": vc}
+        elif kind.mixer == "mamba":
+            mix, new_cache = SSM.mamba_decode_step(p["mamba"], h, cache,
+                                                   d_state=c.ssm_d_state)
+        elif kind.mixer == "mlstm":
+            mix, new_cache = XL.mlstm_decode_step(p["mlstm"], h, cache,
+                                                  n_heads=c.n_heads)
+        elif kind.mixer == "slstm":
+            mix, new_cache = XL.slstm_decode_step(p["slstm"], h, cache)
+        else:
+            raise ValueError(kind.mixer)
+
+        x = x + mix
+        if kind.mixer == "attn_cross" and enc_out is not None:
+            hx = L.rmsnorm(p["lnx"], x)
+            xa = L.gqa_attention(p["xattn"], hx, positions,
+                                 n_heads=c.n_heads, n_kv=c.n_kv_heads,
+                                 causal=False, impl="naive", use_rope=False,
+                                 kv_in=enc_out)
+            x = x + xa
+        if kind.ff == "dense":
+            x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x), c.gated_mlp)
+        elif kind.ff == "moe":
+            h2 = L.rmsnorm(p["ln2"], x)
+            y, _ = MOE.moe_ff(p["moe"], h2, n_experts=c.moe_experts,
+                              top_k=c.moe_top_k,
+                              capacity_factor=c.moe_capacity)
+            if c.moe_shared_ff:
+                y = y + L.mlp(p["shared_mlp"], h2, c.gated_mlp)
+            x = x + y
+        return x, new_cache
+
+    # -- prefill ------------------------------------------------------------------
+    def prefill(self, params, tokens):
+        """Full-sequence forward that returns last-position logits (the
+        inference-prefill shape).  KV caches are produced by re-running
+        projections; for the dry-run roofline the dominant cost (attention
+        + FF over S tokens) is captured by this path."""
+        c = self.cfg
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(jnp.bfloat16)
+        positions = jnp.arange(S)[None, :]
+        enc_out = None
+        x, _ = self._run_stack(params["stack"], x, positions,
+                               kinds=self.period, causal=True,
+                               enc_out=enc_out, remat=False)
+        x = L.rmsnorm(params["ln_f"], x)
+        unembed = (params["embed"].T if c.tie_embeddings
+                   else params["unembed"])
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], unembed)
+        return logits.astype(jnp.float32)
+
+
+def _mask_vocab_pad(logits: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Padded vocab columns (Megatron-style padding) get -inf."""
+    V = logits.shape[-1]
+    if V == vocab:
+        return logits
+    keep = jnp.arange(V) < vocab
+    return jnp.where(keep, logits, -1e30)
+
+
+def _insert_at(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray
+               ) -> jnp.ndarray:
+    """cache (B,S,H,D), new (B,1,H,D), pos (B,) -> per-batch scatter."""
+    B, S = cache.shape[0], cache.shape[1]
+    onehot = (jnp.arange(S)[None, :] == pos[:, None])       # (B,S)
+    return jnp.where(onehot[..., None, None],
+                     new.astype(cache.dtype), cache)

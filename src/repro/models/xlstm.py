@@ -1,0 +1,196 @@
+"""xLSTM blocks (for xlstm-1.3b): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan), interleaved 7:1 per the config.
+
+mLSTM training uses the chunkwise form: within a chunk, a gated
+quasi-attention computes intra-chunk contributions; a lax.scan over chunks
+carries the (B, H, Dk, Dv) matrix state and (B, H, Dk) normalizer across
+chunks.  Decode is the O(1) recurrent update.  sLSTM is inherently
+sequential (exponential gating with max-stabilizer state) -> lax.scan over
+time; it decodes in O(1) as well, which is why the long_500k shape runs on
+this architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blueprint import leaf
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_bp(d: int, n_heads: int):
+    hd = d // n_heads
+    return {
+        "wq": leaf((d, n_heads, hd), ("embed", "heads", "head_dim"),
+                   scale_dim=0),
+        "wk": leaf((d, n_heads, hd), ("embed", "heads", "head_dim"),
+                   scale_dim=0),
+        "wv": leaf((d, n_heads, hd), ("embed", "heads", "head_dim"),
+                   scale_dim=0),
+        "wif": leaf((d, n_heads, 2), ("embed", "heads", None), scale_dim=0),
+        "wo": leaf((n_heads, hd, d), ("heads", "head_dim", "embed"),
+                   scale_dim=2),
+        "norm": leaf((d,), ("embed",), init="ones"),
+    }
+
+
+def mlstm_chunked(p: Params, x: jnp.ndarray, *, n_heads: int,
+                  chunk: int = 128) -> jnp.ndarray:
+    """x: (B, S, d)."""
+    B, S, d = x.shape
+    hd = d // n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]) / (hd ** 0.5)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    gates = jnp.einsum("bsd,dhg->bshg", x, p["wif"]).astype(jnp.float32)
+    ig = gates[..., 0]                     # (B,S,H) input gate (log-space)
+    fg = jax.nn.log_sigmoid(gates[..., 1])  # (B,S,H) forget gate log
+
+    n = max(1, (S + chunk - 1) // chunk)
+
+    def step(carry, ci):
+        Cst, nst, mst = carry   # (B,H,Dk,Dv), (B,H,Dk), (B,H)
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, ci * chunk, chunk, 1)
+        qc, kc, vc = sl(q), sl(k), sl(v)
+        igc, fgc = sl(ig), sl(fg)                       # (B,c,H)
+        # cumulative log forget within chunk
+        cf = jnp.cumsum(fgc, axis=1)                    # (B,c,H)
+        # stabilizer for the end-of-chunk state update:
+        # contribution of position s decays by (cf_last - cf_s + ig_s)
+        m_intra = jnp.max(cf[:, -1:, :] - cf + igc, axis=1)   # (B,H)
+        m_new = jnp.maximum(mst + cf[:, -1], m_intra)
+        # inter-chunk: state decayed to end of chunk
+        # intra contributions at position t: sum_{s<=t} a(s,t) k_s v_s
+        # a(s,t) = exp(cf_t - cf_s + ig_s - m)
+        dmat = (cf[:, None, :, :] - cf[:, :, None, :]
+                + igc[:, :, None, :])                   # (B,s,t,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        stab = jnp.max(dmat, axis=1)                    # (B,t,H)
+        stab = jnp.maximum(stab, (mst[:, None] + cf))   # include inter
+        w = jnp.exp(dmat - stab[:, None, :, :])         # (B,s,t,H)
+        intra = jnp.einsum("bsth,bshk,bshv->bthkv", w.astype(x.dtype),
+                           kc, vc)
+        inter_decay = jnp.exp(mst[:, None] + cf - stab)  # (B,t,H)
+        num = (jnp.einsum("bthk,bhkv->bthv", qc, Cst.astype(x.dtype))
+               * inter_decay[..., None].astype(x.dtype)
+               + jnp.einsum("bthk,bthkv->bthv", qc, intra))
+        den_intra = jnp.einsum("bsth,bshk,bthk->bth",
+                               w.astype(x.dtype), kc, qc)
+        den_inter = jnp.einsum("bthk,bhk->bth", qc, nst.astype(x.dtype)) \
+            * inter_decay.astype(x.dtype)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+        y = num / den[..., None]
+        # update carried state to end of chunk
+        ch_decay = jnp.exp(mst + cf[:, -1] - m_new)       # (B,H)
+        upd = jnp.einsum("bsh,bshk,bshv->bhkv",
+                         jnp.exp(cf[:, -1:, :] - cf + igc - m_new[:, None]),
+                         kc.astype(jnp.float32), vc.astype(jnp.float32))
+        C_new = Cst * ch_decay[..., None, None] + upd
+        n_upd = jnp.einsum("bsh,bshk->bhk",
+                           jnp.exp(cf[:, -1:, :] - cf + igc - m_new[:, None]),
+                           kc.astype(jnp.float32))
+        n_new = nst * ch_decay[..., None] + n_upd
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B, n_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, n_heads, hd), jnp.float32)
+    m0 = jnp.full((B, n_heads), -1e30, jnp.float32)
+    _, ys = jax.lax.scan(step, (C0, n0, m0), jnp.arange(n))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n * chunk, n_heads, hd)[:, :S]
+    return jnp.einsum("bshk,hkd->bsd", y.astype(x.dtype), p["wo"])
+
+
+def mlstm_decode_step(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                      *, n_heads: int
+                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B,1,d); state: C (B,H,Dk,Dv), n (B,H,Dk), m (B,H)."""
+    B, _, d = x.shape
+    hd = d // n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0] / (hd ** 0.5)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])[:, 0]
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])[:, 0]
+    gates = jnp.einsum("bsd,dhg->bshg", x, p["wif"]).astype(jnp.float32)[:, 0]
+    ig = gates[..., 0]
+    fg = jax.nn.log_sigmoid(gates[..., 1])
+    m_new = jnp.maximum(state["m"] + fg, ig)
+    dec = jnp.exp(state["m"] + fg - m_new)
+    inp = jnp.exp(ig - m_new)
+    C = state["C"] * dec[..., None, None] + \
+        inp[..., None, None] * (k[..., :, None].astype(jnp.float32)
+                                * v[..., None, :].astype(jnp.float32))
+    nvec = state["n"] * dec[..., None] + inp[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh",
+                                         q.astype(jnp.float32), nvec)), 1.0)
+    y = (num / den[..., None]).astype(x.dtype)[:, None]      # (B,1,H,Dv)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return out, {"C": C, "n": nvec, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_bp(d: int, n_heads: int):
+    return {
+        "wx": leaf((d, 4 * d), ("embed", "ff"), scale_dim=0),
+        "wh": leaf((d, 4 * d), ("embed", "ff"), scale_dim=0),
+        "b": leaf((4 * d,), ("ff",), init="zeros"),
+        "wo": leaf((d, d), ("ff", "embed"), scale_dim=0),
+    }
+
+
+def _slstm_cell(p: Params, xt: jnp.ndarray, carry):
+    h, c, n, m = carry
+    z = (jnp.einsum("bd,dk->bk", xt, p["wx"])
+         + jnp.einsum("bd,dk->bk", h, p["wh"])).astype(jnp.float32) \
+        + p["b"].astype(jnp.float32)
+    zi, zf, zz, zo = jnp.split(z, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(lf + m, zi)
+    i = jnp.exp(zi - m_new)
+    f = jnp.exp(lf + m - m_new)
+    zt = jnp.tanh(zz)
+    o = jax.nn.sigmoid(zo)
+    c_new = f * c + i * zt
+    n_new = f * n + i
+    h_new = (o * c_new / jnp.maximum(n_new, 1.0)).astype(xt.dtype)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_seq(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, d) — sequential scan over time."""
+    B, S, d = x.shape
+    h0 = jnp.zeros((B, d), x.dtype)
+    c0 = jnp.zeros((B, d), jnp.float32)
+    n0 = jnp.zeros((B, d), jnp.float32)
+    m0 = jnp.full((B, d), -1e30, jnp.float32)
+
+    def step(carry, xt):
+        carry = _slstm_cell(p, xt, carry)
+        return carry, carry[0]
+
+    _, hs = jax.lax.scan(step, (h0, c0, n0, m0), jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)                       # (B,S,d)
+    return jnp.einsum("bsd,dk->bsk", y, p["wo"])
+
+
+def slstm_decode_step(p: Params, x: jnp.ndarray, state
+                      ) -> Tuple[jnp.ndarray, Any]:
+    carry = _slstm_cell(p, x[:, 0], state)
+    out = jnp.einsum("bd,dk->bk", carry[0], p["wo"])[:, None]
+    return out, carry
+
+
+def slstm_init_state(B: int, d: int, dtype=jnp.bfloat16):
+    return (jnp.zeros((B, d), dtype), jnp.zeros((B, d), jnp.float32),
+            jnp.zeros((B, d), jnp.float32), jnp.full((B, d), -1e30,
+                                                     jnp.float32))

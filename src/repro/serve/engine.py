@@ -1,0 +1,95 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+Requests enter a queue; each decode step runs the whole slot batch (one
+token per live slot).  Finished/empty slots are refilled from the queue
+between steps (continuous batching).  Prefill runs the full-sequence
+forward for the incoming prompt and writes its KV into the slot.
+
+This is the host-side 'thread-schedule' of the serving stack — the same
+role VOLT's runtime plays for kernel grids (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, slots: int = 8,
+                 max_seq: int = 512, temperature: float = 0.0) -> None:
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.cache = model.init_cache(slots, max_seq)
+        self.pos = np.zeros((slots,), np.int32)
+        self.last_tok = np.zeros((slots,), np.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, ps: model.decode_step(p, c, t, ps))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                # prefill by stepping the prompt token by token (teacher
+                # forcing through decode_step keeps one compiled program;
+                # a fused prefill kernel is the §Perf variant)
+                self.pos[s] = 0
+                # feed all but the last prompt token; step() feeds the
+                # last one and samples the first new token from its logits
+                for t in req.prompt[:-1]:
+                    tok = jnp.zeros((self.slots, 1), jnp.int32
+                                    ).at[s, 0].set(int(t))
+                    pos = jnp.asarray(self.pos)
+                    _, self.cache = self._decode(self.params, self.cache,
+                                                 tok, pos)
+                    self.pos[s] += 1
+                self.last_tok[s] = int(req.prompt[-1])
+
+    def step(self) -> int:
+        """One continuous-batching decode step; returns #live slots."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        toks = jnp.asarray(self.last_tok.reshape(-1, 1))
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        logits = np.asarray(logits[:, 0, :])
+        nxt = logits.argmax(-1).astype(np.int32)
+        for s in live:
+            req = self.active[s]
+            assert req is not None
+            req.out.append(int(nxt[s]))
+            self.last_tok[s] = nxt[s]
+            self.pos[s] += 1
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_seq - 1:
+                req.done = True
+                self.active[s] = None
+        return len(live)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                return

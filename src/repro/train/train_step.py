@@ -1,0 +1,154 @@
+"""Train/serve step construction with mesh-aware shardings.
+
+``build_train_step`` returns a jit-able ``step(params, opt_state, batch)``
+whose in/out shardings come from the blueprint planner (models/blueprint)
+— the centralized "sharding uniformity analysis" of DESIGN.md §3.
+
+Microbatching (gradient accumulation) is a lax.scan over microbatches: the
+psum for the gradient happens ONCE at the end (XLA overlaps the per-layer
+reduce-scatters with backward compute under FSDP; flags in launch/train.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.blueprint import param_specs, DEFAULT_RULES
+from ..models.registry import input_shardings, dynamic_rules
+from ..launch.mesh import fsdp_axis, data_axes
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class StepConfig:
+    microbatches: int = 1
+    remat: bool = True
+    opt: AdamWConfig = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        if self.opt is None:
+            self.opt = AdamWConfig()
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def param_sharding_tree(model, mesh, rules: Optional[Dict] = None):
+    bp = model.blueprint()
+    rules = rules or dynamic_rules(model.cfg, mesh_axis_sizes(mesh))
+    specs = param_specs(bp, rules, fsdp_axis(mesh))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def opt_state_shardings(param_sh, mesh):
+    return {
+        "step": NamedSharding(mesh, P()),
+        "m": param_sh,
+        "v": param_sh,
+    }
+
+
+def build_train_step(model, mesh, step_cfg: StepConfig,
+                     rules: Optional[Dict] = None):
+    """-> (jitted step, in_shardings info). step(params, opt, batch) ->
+    (params, opt, metrics)."""
+
+    def loss_of(params, batch):
+        return model.loss_fn(params, batch, remat=step_cfg.remat)
+
+    def step(params, opt_state, batch):
+        if step_cfg.microbatches > 1:
+            n = step_cfg.microbatches
+
+            def reshape(x):
+                B = x.shape[0]
+                return x.reshape((n, B // n) + x.shape[1:])
+
+            mb = jax.tree.map(reshape, batch)
+
+            def acc_fn(acc, micro):
+                l, g = jax.value_and_grad(loss_of)(params, micro)
+                return jax.tree.map(jnp.add, acc,
+                                    {"g": g, "l": l}), None
+
+            zero = {"g": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "l": jnp.zeros((), jnp.float32)}
+            acc, _ = jax.lax.scan(acc_fn, zero, mb)
+            grads = jax.tree.map(lambda g: g / n, acc["g"])
+            loss = acc["l"] / n
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        new_params, new_opt, metrics = adamw_update(
+            params, grads, opt_state, step_cfg.opt)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def jit_train_step(model, mesh, step_cfg: StepConfig, shape_name: str,
+                   rules: Optional[Dict] = None, donate: bool = True):
+    """Fully-sharded jitted train step for the dry-run / real runs."""
+    step = build_train_step(model, mesh, step_cfg, rules)
+    psh = param_sharding_tree(model, mesh, rules)
+    osh = opt_state_shardings(psh, mesh)
+    da = data_axes(mesh)
+    bsh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       input_shardings(model.cfg, shape_name, da,
+                                       mesh_axis_sizes(mesh)))
+    out_metrics = {"grad_norm": NamedSharding(mesh, P()),
+                   "lr": NamedSharding(mesh, P()),
+                   "loss": NamedSharding(mesh, P())}
+    return jax.jit(
+        step,
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, out_metrics),
+        donate_argnums=(0, 1) if donate else (),
+    ), (psh, osh, bsh)
+
+
+def jit_prefill_step(model, mesh, shape_name: str,
+                     rules: Optional[Dict] = None):
+    psh = param_sharding_tree(model, mesh, rules)
+    da = data_axes(mesh)
+    bsh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       input_shardings(model.cfg, shape_name, da,
+                                       mesh_axis_sizes(mesh)))
+
+    def prefill(params, batch):
+        return model.prefill(params, batch["tokens"])
+
+    return jax.jit(prefill, in_shardings=(psh, bsh),
+                   out_shardings=NamedSharding(mesh, P(None, "model"))), \
+        (psh, bsh)
+
+
+def jit_decode_step(model, mesh, shape_name: str,
+                    rules: Optional[Dict] = None):
+    """serve_step: one token for every sequence in the batch."""
+    psh = param_sharding_tree(model, mesh, rules)
+    da = data_axes(mesh)
+    ish = input_shardings(model.cfg, shape_name, da,
+                          mesh_axis_sizes(mesh))
+    bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), ish)
+
+    def serve_step(params, batch):
+        enc = batch.get("enc_out")
+        logits, cache = model.decode_step(params, batch["cache"],
+                                          batch["tokens"], batch["pos"],
+                                          enc)
+        return logits, cache
+
+    logits_sh = NamedSharding(mesh, P(None, None, "model"))
+    cache_sh = bsh["cache"]
+    return jax.jit(serve_step, in_shardings=(psh, bsh),
+                   out_shardings=(logits_sh, cache_sh),
+                   donate_argnums=()), (psh, bsh)

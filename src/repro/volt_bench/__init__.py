@@ -1,0 +1,1 @@
+from .suite import BENCHES, Bench, get_bench  # noqa: F401

@@ -1,0 +1,107 @@
+"""Shared test kernels (module-level so inspect.getsource works)."""
+from repro.core.frontends import cuda, opencl
+
+
+@opencl.kernel
+def saxpy(a: "f32", x: "ptr_f32 const", y: "ptr_f32", n: "i32 uniform"):
+    gid = get_global_id(0)
+    if gid < n:
+        y[gid] = a * x[gid] + y[gid]
+
+
+@opencl.kernel
+def loop_break_continue(x: "ptr_f32", out: "ptr_f32", n: "i32 uniform"):
+    gid = get_global_id(0)
+    acc = 0.0
+    for i in range(n):
+        v = x[gid * n + i]
+        if v < 0.0:
+            break
+        if i == 2:
+            continue
+        acc += v
+    out[gid] = acc
+
+
+@opencl.kernel
+def nested_return(x: "ptr_f32", out: "ptr_f32", n: "i32 uniform"):
+    gid = get_global_id(0)
+    v = x[gid]
+    i = 0
+    while i < n:
+        v = v * 0.5
+        if v < 0.1:
+            if gid < n:
+                out[gid] = v
+            return
+        i += 1
+    out[gid] = v + 1.0
+
+
+@opencl.kernel
+def ternary_mix(x: "ptr_f32 const", y: "ptr_f32 const", out: "ptr_f32",
+                n: "i32 uniform"):
+    gid = get_global_id(0)
+    if gid < n:
+        a = x[gid]
+        b = y[gid]
+        out[gid] = (a if a > b else b) + (0.5 * a if a < 0.0 else 0.25 * b)
+
+
+@opencl.kernel
+def shared_reduce(x: "ptr_f32 const", out: "ptr_f32", n: "i32 uniform"):
+    tmp = local_array(f32, 32)
+    lid = get_local_id(0)
+    gid = get_global_id(0)
+    tmp[lid] = x[gid] if gid < n else 0.0
+    barrier()
+    s = get_local_size(0) // 2
+    while s > 0:
+        if lid < s:
+            tmp[lid] = tmp[lid] + tmp[lid + s]
+        barrier()
+        s = s // 2
+    if lid == 0:
+        out[get_group_id(0)] = tmp[0]
+
+
+@opencl.device
+def helper_poly(coefs: "ptr_f32 const", x: "f32", deg: "i32") -> "f32":
+    acc = 0.0
+    for i in range(deg):
+        acc = acc * x + coefs[i]
+    return acc
+
+
+@opencl.kernel(deps=(helper_poly,))
+def uses_helper(coefs: "ptr_f32 const", x: "ptr_f32 const", out: "ptr_f32",
+                deg: "i32 uniform", n: "i32 uniform"):
+    gid = get_global_id(0)
+    if gid < n:
+        out[gid] = helper_poly(coefs, x[gid], deg)
+
+
+@cuda.kernel
+def warp_ops(x: "ptr_f32 const", out: "ptr_f32", ballots: "ptr_i32",
+             n: "i32 uniform"):
+    gid = blockIdx.x * blockDim.x + threadIdx.x
+    lane = __lane_id()
+    v = x[gid] if gid < n else 0.0
+    b = __ballot_sync(-1, v > 0.0)
+    s = v + __shfl_sync(-1, v, lane ^ 1)
+    if gid < n:
+        out[gid] = s
+        ballots[gid] = __popc(b)
+
+
+@opencl.kernel
+def atomics_kernel(x: "ptr_f32 const", hist: "ptr_i32", total: "ptr_f32",
+                   n: "i32 uniform"):
+    gid = get_global_id(0)
+    if gid < n:
+        v = x[gid]
+        bucket = 0
+        if v > 0.0:
+            bucket = 1
+        atomic_add(hist, bucket, 1)
+        atomic_add(total, 0, v)

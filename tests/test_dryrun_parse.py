@@ -1,0 +1,52 @@
+"""Unit tests for the dry-run HLO collective parser and roofline math."""
+import numpy as np
+
+from repro.launch.dryrun import collective_bytes
+from repro.launch.roofline import ring_factor
+
+
+def test_collective_parser_shapes():
+    hlo = """
+  %ag = bf16[16,4096,128]{2,1,0} all-gather(%x), replica_groups=...
+  %ar = f32[1024]{0} all-reduce(%y), to_apply=%sum
+  %t = (bf16[8,8]{1,0}, f32[4]{0}) all-to-all(%a, %b)
+  %cp = u8[32]{0} collective-permute(%z)
+  %rs = bf16[2048]{0} reduce-scatter(%w)
+  %not_a_coll = f32[8]{0} add(%p, %q)
+"""
+    out = collective_bytes(hlo)
+    b = out["bytes"]
+    assert b["all-gather"] == 16 * 4096 * 128 * 2
+    assert b["all-reduce"] == 1024 * 4
+    assert b["all-to-all"] == 8 * 8 * 2 + 4 * 4
+    assert b["collective-permute"] == 32
+    assert b["reduce-scatter"] == 2048 * 2
+    assert out["counts"]["all-gather"] == 1
+    assert out["counts"]["all-reduce"] == 1
+
+
+def test_ring_factors():
+    assert ring_factor("all-reduce", 16) == 2 * 15 / 16
+    assert ring_factor("all-gather", 16) == 15 / 16
+    assert ring_factor("collective-permute", 16) == 1.0
+
+
+def test_scan_body_counted_once_probe():
+    """Documents the XLA behavior that motivates launch/recost.py."""
+    import jax
+    import jax.numpy as jnp
+    A = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def scanned(a):
+        def body(x, _):
+            return x @ a, None
+        y, _ = jax.lax.scan(body, a, None, length=10)
+        return y
+
+    def single(a):
+        return a @ a
+
+    c_scan = jax.jit(scanned).lower(A).compile().cost_analysis()["flops"]
+    c_one = jax.jit(single).lower(A).compile().cost_analysis()["flops"]
+    assert abs(c_scan - c_one) / c_one < 0.05, \
+        "XLA now multiplies scan trip counts: drop launch/recost.py!"

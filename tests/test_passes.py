@@ -1,0 +1,346 @@
+"""Unit tests for middle-end passes: simplify, structurize, uniformity,
+Algorithm 1, Algorithm 2, MIR safety net (Fig 5 hazard injection)."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent / "kernels"))
+
+from repro.core import graph, interp, vir
+from repro.core.vir import (Block, Const, Function, IRBuilder, Instr, Module,
+                            Op, Param, Reg, Ty)
+from repro.core.passes.simplify import run_simplify
+from repro.core.passes.structurize import run_structurize
+from repro.core.passes.uniformity import VortexTTI, run_uniformity
+from repro.core.passes.func_args import run_func_arg_analysis
+from repro.core.passes.pipeline import PassConfig, run_pipeline
+from repro.core.passes.mir_safety import run_mir_safety
+
+import volt_kernels as K
+
+
+# --------------------------------------------------------------------------
+# simplify
+# --------------------------------------------------------------------------
+
+def _const_fn():
+    fn = Function("f", [Param("p", Ty.I32)], Ty.I32)
+    b = IRBuilder(fn)
+    v1 = b.binop(Op.ADD, Const(2), Const(3))
+    v2 = b.binop(Op.MUL, v1, Const(4))
+    v3 = b.binop(Op.ADD, v2, fn.params[0])
+    b.ret(v3)
+    return fn
+
+
+def test_constant_folding():
+    fn = _const_fn()
+    stats = run_simplify(fn)
+    assert stats["constfold"] >= 2
+    ops = [i.op for i in fn.instructions()]
+    assert Op.MUL not in ops   # 2+3=5, 5*4=20 folded away
+
+
+def test_dce_removes_unused():
+    fn = Function("f", [Param("p", Ty.F32)], Ty.VOID)
+    b = IRBuilder(fn)
+    b.unop(Op.SQRT, fn.params[0])    # dead
+    b.ret()
+    run_simplify(fn)
+    assert all(i.op is not Op.SQRT for i in fn.instructions())
+
+
+def test_single_exit():
+    fn = Function("f", [Param("c", Ty.BOOL)], Ty.I32)
+    b = IRBuilder(fn)
+    t = fn.new_block("t")
+    e = fn.new_block("e")
+    b.cbr(fn.params[0], t, e)
+    b.set_block(t)
+    b.ret(Const(1))
+    b.set_block(e)
+    b.ret(Const(2))
+    run_simplify(fn)
+    rets = [i for i in fn.instructions() if i.op is Op.RET]
+    assert len(rets) == 1
+
+
+# --------------------------------------------------------------------------
+# structurize
+# --------------------------------------------------------------------------
+
+def test_frontend_cfg_reducible():
+    mod = K.loop_break_continue.build(None)
+    fn = mod.functions["loop_break_continue"]
+    assert graph.is_reducible(fn)
+
+
+def _irreducible_fn():
+    """entry -> (A | B); A -> B; B -> A (cycle with two entries)."""
+    fn = Function("irr", [Param("c", Ty.BOOL), Param("n", Ty.I32)], Ty.VOID)
+    b = IRBuilder(fn)
+    A = fn.new_block("A")
+    B = fn.new_block("B")
+    X = fn.new_block("X")
+    cnt = fn.new_slot("cnt", Ty.I32)
+    b.slot_store(cnt, Const(0))
+    b.cbr(fn.params[0], A, B)
+    b.set_block(A)
+    c1 = b.slot_load(cnt)
+    b.slot_store(cnt, b.binop(Op.ADD, c1, Const(1)))
+    c2 = b.slot_load(cnt)
+    b.cbr(b.binop(Op.LT, c2, fn.params[1]), B, X)
+    b.set_block(B)
+    c3 = b.slot_load(cnt)
+    b.slot_store(cnt, b.binop(Op.ADD, c3, Const(2)))
+    c4 = b.slot_load(cnt)
+    b.cbr(b.binop(Op.LT, c4, fn.params[1]), A, X)
+    b.set_block(X)
+    b.ret()
+    return fn
+
+
+def test_irreducible_gets_split():
+    fn = _irreducible_fn()
+    assert not graph.is_reducible(fn)
+    stats = run_structurize(fn)
+    assert graph.is_reducible(fn)
+    assert stats["nodes_split"] >= 1
+    vir.verify(fn)
+
+
+def _side_entry_fn():
+    """A -> (B|C); B -> (D|E); C -> D; D,E -> F — D is a shared tail
+    entered from outside B's region (the Fig 6 unstructured case)."""
+    fn = Function("se", [Param("c1", Ty.BOOL), Param("c2", Ty.BOOL),
+                         Param("out", Ty.PTR)], Ty.VOID)
+    fn.params[2].elem_ty = Ty.I32
+    b = IRBuilder(fn)
+    B_, C, D, E, F = (fn.new_block(x) for x in "BCDEF")
+    s = fn.new_slot("s", Ty.I32)
+    b.slot_store(s, Const(0))
+    b.cbr(fn.params[0], B_, C)
+    b.set_block(B_)
+    b.slot_store(s, Const(1))
+    b.cbr(fn.params[1], D, E)
+    b.set_block(C)
+    b.slot_store(s, Const(2))
+    b.br(D)
+    b.set_block(D)
+    v = b.slot_load(s)
+    b.slot_store(s, b.binop(Op.ADD, v, Const(10)))
+    b.br(F)
+    b.set_block(E)
+    b.slot_store(s, Const(3))
+    b.br(F)
+    b.set_block(F)
+    v2 = b.slot_load(s)
+    b.store(fn.params[2], Const(0), v2)
+    b.ret()
+    return fn
+
+
+def test_side_entry_duplicated():
+    fn = _side_entry_fn()
+    stats = run_structurize(fn)
+    assert stats["side_entries_dup"] >= 1
+    # after duplication every branch's region is join-safe:
+    info = run_uniformity(fn, VortexTTI())
+    from repro.core.passes.divmgmt import run_divmgmt
+    # force both branches divergent by faking divergent conditions
+    for blk in fn.blocks:
+        t = blk.terminator
+        if t is not None and t.op is Op.CBR:
+            info.divergent_branches.add(id(t))
+    run_divmgmt(fn, info)
+    vir.verify_split_join(fn)
+
+
+# --------------------------------------------------------------------------
+# uniformity
+# --------------------------------------------------------------------------
+
+def test_uniformity_seeds_and_propagation():
+    mod = K.saxpy.build(None)
+    fn = mod.functions["saxpy"]
+    run_simplify(fn)
+    run_structurize(fn)
+    tti = VortexTTI(uni_hw=True, uni_ann=True)
+    info = run_uniformity(fn, tti)
+    for i in fn.instructions():
+        if i.op is Op.INTR and i.operands[0] == "global_id":
+            assert not info.is_uniform(i.result)
+    # the guard branch gid<n is divergent
+    brs = [i for i in fn.instructions() if i.op is Op.CBR]
+    assert any(info.branch_divergent(b) for b in brs)
+
+
+def test_uniformity_tti_knobs():
+    mod = K.shared_reduce.build(None)
+    fn = mod.functions["shared_reduce"]
+    run_simplify(fn)
+    run_structurize(fn)
+    # local_size CSR: uniform only under uni_hw
+    def loop_cond_uniform(tti):
+        info = run_uniformity(fn, tti)
+        loops = graph.natural_loops(fn)
+        assert loops
+        t = loops[0].header.terminator
+        return not info.branch_divergent(t)
+    assert not loop_cond_uniform(VortexTTI(uni_hw=False, uni_ann=False))
+    assert loop_cond_uniform(VortexTTI(uni_hw=True, uni_ann=False))
+
+
+def test_vote_result_uniform():
+    mod = K.warp_ops.build(None)
+    fn = mod.functions["warp_ops"]
+    run_simplify(fn)
+    run_structurize(fn)
+    info = run_uniformity(fn, VortexTTI())
+    for i in fn.instructions():
+        if i.op is Op.VOTE:
+            assert info.is_uniform(i.result)
+        if i.op is Op.SHFL:
+            assert not info.is_uniform(i.result)
+
+
+def test_algorithm1_function_args():
+    mod = K.uses_helper.build(None)
+    for f in mod.functions.values():
+        run_simplify(f)
+        run_structurize(f)
+    tti = VortexTTI(uni_hw=True, uni_ann=True)
+    run_func_arg_analysis(mod, tti, roots=["uses_helper"])
+    helper = mod.functions["helper_poly"]
+    by_name = {p.name: p for p in helper.params}
+    assert getattr(by_name["deg"], "proved_uniform", False), \
+        "deg is uniform at every call site (annotated kernel param)"
+    assert not getattr(by_name["x"], "proved_uniform", False), \
+        "x is divergent at the call site"
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 + Fig 2 golden shapes
+# --------------------------------------------------------------------------
+
+def test_fig2_if_else_shape():
+    mod = K.saxpy.build(None)
+    ck = run_pipeline(mod, "saxpy", PassConfig())
+    from repro.core.backends.asm import emit_asm
+    asm = emit_asm(ck.fn)
+    # Fig 2a: vx_split ... bnez ... vx_join
+    assert "vx_split" in asm and "vx_join" in asm
+    i_split = asm.index("vx_split")
+    i_join = asm.index("vx_join")
+    assert i_split < i_join
+
+
+def test_fig2_loop_shape():
+    mod = K.loop_break_continue.build(None)
+    ck = run_pipeline(mod, "loop_break_continue", PassConfig())
+    from repro.core.backends.asm import emit_asm
+    asm = emit_asm(ck.fn)
+    assert "vx_pred" in asm
+    assert "vx_tmc.save" in asm and "vx_tmc.restore" in asm
+
+
+# --------------------------------------------------------------------------
+# MIR safety net (Fig 5 hazards)
+# --------------------------------------------------------------------------
+
+def _pipeline_saxpy():
+    mod = K.saxpy.build(None)
+    return run_pipeline(mod, "saxpy", PassConfig())
+
+
+def _first_split_block(fn):
+    for b in fn.blocks:
+        for i in b.instrs:
+            if i.op is Op.SPLIT:
+                return b, i
+    raise AssertionError("no split")
+
+
+def test_hazard_a_branch_inversion_repaired():
+    """Invert the branch after split insertion (Fig 5a): without repair the
+    wrong lanes execute; mir_safety flips the negate flag."""
+    ck = _pipeline_saxpy()
+    b, split = _first_split_block(ck.fn)
+    cbr = b.terminator
+    # invert: negate cond, swap targets (semantically identical branch)
+    notc = Reg(Ty.BOOL, "inv")
+    notin = Instr(Op.NOT, [cbr.operands[0]], notc)
+    b.insert(len(b.instrs) - 2, notin)
+    cbr.operands = [notc, cbr.operands[2], cbr.operands[1]]
+    # run with broken split: wrong lanes -> wrong result
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(128).astype(np.float32)
+    y0 = rng.standard_normal(128).astype(np.float32)
+    params = interp.LaunchParams(grid=4, local_size=32)
+    broken = {"x": x.copy(), "y": y0.copy()}
+    interp.launch(ck.fn, broken, params, scalar_args={"a": 2.0, "n": 100})
+    expect = y0.copy()
+    expect[:100] = 2.0 * x[:100] + y0[:100]
+    assert not np.allclose(broken["y"], expect), "hazard should corrupt"
+    # repair
+    stats = run_mir_safety(ck.fn)
+    assert stats["negate_fixed"] == 1
+    fixed = {"x": x.copy(), "y": y0.copy()}
+    interp.launch(ck.fn, fixed, params, scalar_args={"a": 2.0, "n": 100})
+    np.testing.assert_allclose(fixed["y"], expect, atol=1e-5)
+
+
+def test_hazard_b_predicate_drift_repaired():
+    """Reload the predicate into a fresh vreg on the branch only (Fig 5b);
+    mir_safety re-unifies the split operand with the branch predicate."""
+    ck = _pipeline_saxpy()
+    b, split = _first_split_block(ck.fn)
+    cbr = b.terminator
+    cond = cbr.operands[0]
+    defi = cond.defining
+    assert defi is not None and defi.op in (Op.LT, Op.SLOT_LOAD)
+    if defi.op is not Op.SLOT_LOAD:
+        # route cond through a slot, then drift: two separate reloads
+        slot = ck.fn.new_slot("drift", Ty.BOOL)
+        idx = b.instrs.index(split)
+        st = Instr(Op.SLOT_STORE, [slot, cond])
+        b.insert(idx, st)
+        r1 = Reg(Ty.BOOL, "r1")
+        l1 = Instr(Op.SLOT_LOAD, [slot], r1)
+        b.insert(idx + 1, l1)
+        r2 = Reg(Ty.BOOL, "r2")
+        l2 = Instr(Op.SLOT_LOAD, [slot], r2)
+        b.insert(idx + 2, l2)
+        split.operands[0] = r1
+        cbr.operands[0] = r2
+    stats = run_mir_safety(ck.fn)
+    assert stats["drift_unified"] == 1
+    assert split.operands[0] is cbr.operands[0]
+
+
+def test_hazard_c_late_select_reified():
+    """A divergent SELECT surviving to the late phase is reified with
+    split/join by the safety net (Fig 5c)."""
+    mod = K.saxpy.build(None)
+    ck = run_pipeline(mod, "saxpy", PassConfig())
+    # inject a late divergent select before the terminator of entry
+    fn = ck.fn
+    entry = fn.entry
+    gid = None
+    for i in fn.instructions():
+        if i.op is Op.INTR and i.operands[0] == "global_id":
+            gid = i.result
+    assert gid is not None
+    cond = Reg(Ty.BOOL, "c")
+    sel = Reg(Ty.F32, "s")
+    pos = len(entry.instrs) - 1
+    entry.insert(pos, Instr(Op.LT, [gid, Const(7)], cond))
+    entry.insert(pos + 1, Instr(Op.SELECT,
+                                [cond, Const(1.0, Ty.F32),
+                                 Const(2.0, Ty.F32)], sel))
+    info = run_uniformity(fn, VortexTTI())
+    stats = run_mir_safety(fn, info, VortexTTI())
+    assert stats["late_selects"] == 1
+    vir.verify_split_join(fn)
