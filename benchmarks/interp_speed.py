@@ -1,0 +1,118 @@
+"""Interpreter wall-clock: pre-decoded table-driven executor vs the
+original instruction-at-a-time loop, over the full volt_bench suite.
+
+For every bench the two executors run on identical compiled IR and
+identical inputs; the harness asserts dynamic instruction counts
+(ExecStats.instrs, by_op) and all output buffers are bit-identical before
+reporting the speedup — a perf number on diverging semantics would be
+meaningless.
+
+Emits the usual ``name,us_per_call,derived`` CSV lines plus a
+machine-readable record consumed by benchmarks/run.py for
+``BENCH_perf.json``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import interp
+from repro.core.passes.pipeline import ABLATION_LADDER, run_pipeline
+from repro.volt_bench import BENCHES
+
+FULL = ABLATION_LADDER[-1]
+REPS = 3
+
+
+def _best_of(fn, reps: int = REPS) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(seed: int = 7, benches: Optional[List[str]] = None) -> Dict:
+    names = benches or sorted(BENCHES)
+    out: Dict[str, Dict[str, float]] = {}
+    for name in names:
+        b = BENCHES[name]
+        rng = np.random.default_rng(seed)
+        bufs0, scalars, params = b.make(rng)
+        mod = b.handle.build(None)
+        ck = run_pipeline(mod, b.handle.name, FULL)
+
+        # ---- parity gate (per acceptance criteria: bit-identical
+        # dynamic instruction counts + outputs) -------------------------
+        ref_bufs = {k: v.copy() for k, v in bufs0.items()}
+        st_ref = interp.launch(ck.fn, ref_bufs, params,
+                               scalar_args=scalars, decoded=False)
+        dec_bufs = {k: v.copy() for k, v in bufs0.items()}
+        st_dec = interp.launch(ck.fn, dec_bufs, params,
+                               scalar_args=scalars, decoded=True)
+        assert st_ref.instrs == st_dec.instrs, \
+            f"{name}: instrs {st_ref.instrs} != {st_dec.instrs}"
+        assert st_ref.by_op == st_dec.by_op, f"{name}: by_op diverged"
+        assert (st_ref.mem_requests, st_ref.shared_requests,
+                st_ref.atomic_serial) == \
+               (st_dec.mem_requests, st_dec.shared_requests,
+                st_dec.atomic_serial), f"{name}: memory stats diverged"
+        for k in ref_bufs:
+            np.testing.assert_array_equal(
+                ref_bufs[k], dec_bufs[k],
+                err_msg=f"{name}: buffer {k} diverged")
+
+        # ---- timing ----------------------------------------------------
+        def timed(dec: bool) -> float:
+            def body():
+                bufs = {k: v.copy() for k, v in bufs0.items()}
+                interp.launch(ck.fn, bufs, params, scalar_args=scalars,
+                              decoded=dec)
+            return _best_of(body)
+
+        t_dec = timed(True)
+        t_ref = timed(False)
+        out[name] = {"legacy_ms": t_ref * 1e3, "decoded_ms": t_dec * 1e3,
+                     "speedup": t_ref / t_dec, "instrs": st_dec.instrs}
+    return out
+
+
+def aggregate(results: Dict) -> Dict[str, float]:
+    t_ref = sum(v["legacy_ms"] for v in results.values())
+    t_dec = sum(v["decoded_ms"] for v in results.values())
+    sp = [v["speedup"] for v in results.values()]
+    return {
+        "total_legacy_ms": t_ref,
+        "total_decoded_ms": t_dec,
+        "suite_speedup": t_ref / t_dec,
+        "geomean_speedup": float(np.exp(np.mean(np.log(sp)))),
+        "min_speedup": min(sp),
+        "max_speedup": max(sp),
+    }
+
+
+def main() -> Dict:
+    results = run()
+    agg = aggregate(results)
+    print("# interpreter speed — decoded executor vs instruction-at-a-time")
+    print("| bench | legacy ms | decoded ms | speedup |")
+    print("|---|---|---|---|")
+    for name, v in results.items():
+        print(f"| {name} | {v['legacy_ms']:.1f} | {v['decoded_ms']:.1f} | "
+              f"{v['speedup']:.2f}x |")
+    print(f"\nsuite wall-clock speedup: {agg['suite_speedup']:.2f}x "
+          f"(geomean {agg['geomean_speedup']:.2f}x, "
+          f"min {agg['min_speedup']:.2f}x, max {agg['max_speedup']:.2f}x)")
+    for name, v in results.items():
+        print(f"interp_speed/{name},{v['decoded_ms'] * 1e3:.1f},"
+              f"speedup={v['speedup']:.3f}")
+    print(f"interp_speed/suite,{agg['total_decoded_ms'] * 1e3:.1f},"
+          f"speedup={agg['suite_speedup']:.3f}")
+    return {"per_bench": results, "aggregate": agg}
+
+
+if __name__ == "__main__":
+    main()

@@ -6,30 +6,66 @@ markdown tables above them).  Sections:
   divergence_opt : Fig 7 (instruction reduction) + Fig 8 (speedups)
   isa_ext        : Fig 9 (vote/shuffle/aggregated-atomic ISA extensions)
   sharedmem      : Fig 10 (shared-memory mapping under cache configs)
-  compile_time   : SS5.2 compile-time overhead geomean
+  compile_time   : SS5.2 compile-time overhead geomean + analysis-cache
+                   before/after
+  interp_speed   : decoded-interpreter vs instruction-at-a-time executor
   kernels        : Pallas kernel vs jnp-oracle timings (CPU interpret)
   roofline       : per (arch x shape x mesh) three-term roofline rows
+
+Running the perf sections (interp_speed / compile_time) also writes a
+machine-readable ``BENCH_perf.json`` next to this file with the measured
+speedups, so CI / later sessions can diff regressions:
+
+  python benchmarks/run.py            # everything
+  python benchmarks/run.py perf      # just the two perf sections + JSON
 """
+import json
 import sys
+from pathlib import Path
+
+PERF_JSON = Path(__file__).resolve().parent.parent / "BENCH_perf.json"
+
+
+def _write_perf_json(perf: dict) -> None:
+    existing = {}
+    if PERF_JSON.exists():
+        try:
+            existing = json.loads(PERF_JSON.read_text())
+        except Exception:
+            existing = {}
+    existing.update(perf)
+    PERF_JSON.write_text(json.dumps(existing, indent=1, sort_keys=True))
+    print(f"\n[run] wrote {PERF_JSON}", flush=True)
 
 
 def main() -> None:
-    from benchmarks import (compile_time, divergence_opt, isa_ext,
-                            kernels_bench, roofline_bench, sharedmem)
+    from benchmarks import (compile_time, divergence_opt, interp_speed,
+                            isa_ext, kernels_bench, roofline_bench,
+                            sharedmem)
     sections = [
         ("divergence_opt", divergence_opt.main),
         ("isa_ext", isa_ext.main),
         ("sharedmem", sharedmem.main),
         ("compile_time", compile_time.main),
+        ("interp_speed", interp_speed.main),
         ("kernels", kernels_bench.main),
         ("roofline", roofline_bench.main),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    perf_sections = {"interp_speed", "compile_time"}
+    perf: dict = {}
     for name, fn in sections:
-        if only and name != only:
+        if only == "perf":
+            if name not in perf_sections:
+                continue
+        elif only and name != only:
             continue
         print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
-        fn()
+        result = fn()
+        if name in perf_sections and isinstance(result, dict):
+            perf[name] = result
+    if perf:
+        _write_perf_json(perf)
 
 
 if __name__ == "__main__":

@@ -257,14 +257,15 @@ def loop_of(loops: Sequence[Loop], b: Block) -> Optional[Loop]:
 # Control dependence (via post-dominance frontier)
 # --------------------------------------------------------------------------
 
-def control_deps(fn: Function) -> Dict[Block, Set[int]]:
+def control_deps(fn: Function,
+                 pdom: Optional[PostDomInfo] = None) -> Dict[Block, Set[int]]:
     """block -> set of ids of branch-blocks it is control-dependent on.
 
     Classic Ferrante-Ottenstein-Warren: B is control-dependent on A iff A has
     successors S1 (postdominated path includes B) and S2 such that B
     postdominates S1 but does not postdominate A.
     """
-    pdom = postdominators(fn)
+    pdom = pdom or postdominators(fn)
     deps: Dict[Block, Set[int]] = {b: set() for b in fn.blocks}
     for a in fn.blocks:
         succs = a.successors()
@@ -283,10 +284,11 @@ def control_deps(fn: Function) -> Dict[Block, Set[int]]:
     return deps
 
 
-def cdg_leaves(fn: Function) -> Set[int]:
+def cdg_leaves(fn: Function,
+               deps: Optional[Dict[Block, Set[int]]] = None) -> Set[int]:
     """Blocks that no other block is control-dependent on (CDG leaf nodes,
     used by CFG reconstruction)."""
-    deps = control_deps(fn)
+    deps = deps if deps is not None else control_deps(fn)
     non_leaves: Set[int] = set()
     for b, ds in deps.items():
         non_leaves |= ds

@@ -31,8 +31,8 @@ from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .vir import (AddrSpace, Block, Const, Function, GlobalVar, Instr,
-                  Module, Op, Param, Reg, Slot, Ty, Value)
+from .vir import (AddrSpace, BINOPS, Block, Const, Function, GlobalVar,
+                  Instr, Module, Op, Param, Reg, Slot, Ty, UNOPS, Value)
 
 
 class ExecError(Exception):
@@ -91,62 +91,85 @@ class ExecStats:
 
 
 # --------------------------------------------------------------------------
-# numpy op dispatch
+# numpy op dispatch — one table entry per opcode (the decoded interpreter
+# binds these at decode time; the legacy path looks them up per
+# instruction).  dtype-dependent behavior stays a *runtime* check so the
+# two paths are numerically identical.
 # --------------------------------------------------------------------------
 
+def _div_fn(a, b):
+    if np.issubdtype(np.asarray(a).dtype, np.integer):
+        return np.where(b != 0, a // np.where(b == 0, 1, b), 0)
+    return np.where(b != 0, a / np.where(b == 0, 1, b), 0.0)
+
+
+def _and_fn(a, b):
+    return a & b if a.dtype != np.float32 else a.astype(bool) & b.astype(bool)
+
+
+_BIN_FNS = {
+    Op.ADD: lambda a, b: a + b,
+    Op.SUB: lambda a, b: a - b,
+    Op.MUL: lambda a, b: a * b,
+    Op.DIV: _div_fn,
+    Op.MOD: lambda a, b: np.where(b != 0, a % np.where(b == 0, 1, b), 0),
+    Op.AND: _and_fn,
+    Op.OR: lambda a, b: a | b,
+    Op.XOR: lambda a, b: a ^ b,
+    Op.SHL: lambda a, b: a << b,
+    Op.SHR: lambda a, b: a >> b,
+    Op.MIN: np.minimum,
+    Op.MAX: np.maximum,
+    Op.POW: lambda a, b: np.power(a.astype(np.float32), b),
+    Op.EQ: lambda a, b: a == b,
+    Op.NE: lambda a, b: a != b,
+    Op.LT: lambda a, b: a < b,
+    Op.LE: lambda a, b: a <= b,
+    Op.GT: lambda a, b: a > b,
+    Op.GE: lambda a, b: a >= b,
+}
+
+
+def _ffs_fn(a):
+    # 1-based index of least-significant set bit; 0 if none
+    au = a.astype(np.uint32)
+    low = (au & (~au + np.uint32(1))).astype(np.uint64)
+    out = np.zeros_like(a, dtype=np.int32)
+    nz = au != 0
+    out[nz] = np.log2(low[nz]).astype(np.int32) + 1
+    return out
+
+
+_UN_FNS = {
+    Op.NEG: lambda a: -a,
+    Op.NOT: lambda a: ~a,
+    Op.ABS: np.abs,
+    Op.SQRT: lambda a: np.sqrt(np.maximum(a, 0)).astype(np.float32),
+    Op.EXP: lambda a: np.exp(a).astype(np.float32),
+    Op.LOG: lambda a: np.log(np.where(a > 0, a, 1)).astype(np.float32),
+    Op.SIN: lambda a: np.sin(a).astype(np.float32),
+    Op.COS: lambda a: np.cos(a).astype(np.float32),
+    Op.ITOF: lambda a: a.astype(np.float32),
+    Op.FTOI: lambda a: a.astype(np.int32),
+    Op.POPC: lambda a: np.bitwise_count(a.astype(np.uint32)).astype(np.int32),
+    Op.FFS: _ffs_fn,
+}
+
+
 def _np_binop(op: Op, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    fn = _BIN_FNS.get(op)
+    if fn is None:
+        raise ExecError(f"bad binop {op}")
     with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
-        if op is Op.ADD: return a + b
-        if op is Op.SUB: return a - b
-        if op is Op.MUL: return a * b
-        if op is Op.DIV:
-            if np.issubdtype(np.asarray(a).dtype, np.integer):
-                return np.where(b != 0, a // np.where(b == 0, 1, b), 0)
-            return np.where(b != 0, a / np.where(b == 0, 1, b), 0.0)
-        if op is Op.MOD:
-            return np.where(b != 0, a % np.where(b == 0, 1, b), 0)
-        if op is Op.AND:
-            return a & b if a.dtype != np.float32 else a.astype(bool) & b.astype(bool)
-        if op is Op.OR: return a | b
-        if op is Op.XOR: return a ^ b
-        if op is Op.SHL: return a << b
-        if op is Op.SHR: return a >> b
-        if op is Op.MIN: return np.minimum(a, b)
-        if op is Op.MAX: return np.maximum(a, b)
-        if op is Op.POW: return np.power(a.astype(np.float32), b)
-        if op is Op.EQ: return a == b
-        if op is Op.NE: return a != b
-        if op is Op.LT: return a < b
-        if op is Op.LE: return a <= b
-        if op is Op.GT: return a > b
-        if op is Op.GE: return a >= b
-    raise ExecError(f"bad binop {op}")
+        return fn(a, b)
 
 
 def _np_unop(op: Op, a: np.ndarray) -> np.ndarray:
+    fn = _UN_FNS.get(op)
+    if fn is None:
+        raise ExecError(f"bad unop {op}")
     with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
-        if op is Op.NEG: return -a
-        if op is Op.NOT:
-            return ~a if a.dtype == np.bool_ else ~a
-        if op is Op.ABS: return np.abs(a)
-        if op is Op.SQRT: return np.sqrt(np.maximum(a, 0)).astype(np.float32)
-        if op is Op.EXP: return np.exp(a).astype(np.float32)
-        if op is Op.LOG: return np.log(np.where(a > 0, a, 1)).astype(np.float32)
-        if op is Op.SIN: return np.sin(a).astype(np.float32)
-        if op is Op.COS: return np.cos(a).astype(np.float32)
-        if op is Op.ITOF: return a.astype(np.float32)
-        if op is Op.FTOI: return a.astype(np.int32)
-        if op is Op.POPC:
-            return np.bitwise_count(a.astype(np.uint32)).astype(np.int32)
-        if op is Op.FFS:
-            # 1-based index of least-significant set bit; 0 if none
-            au = a.astype(np.uint32)
-            low = (au & (~au + np.uint32(1))).astype(np.uint64)
-            out = np.zeros_like(a, dtype=np.int32)
-            nz = au != 0
-            out[nz] = np.log2(low[nz]).astype(np.int32) + 1
-            return out
-    raise ExecError(f"bad unop {op}")
+        return fn(a)
 
 
 _TY_DTYPE = {Ty.I32: np.int32, Ty.F32: np.float32, Ty.BOOL: np.bool_}
@@ -527,6 +550,657 @@ def _exec_warp(fn: Function, argmap: Dict[int, Any], mask0: np.ndarray,
 
 
 # --------------------------------------------------------------------------
+# Pre-decoded warp executor
+#
+# ``_exec_warp`` above re-discovers everything about an instruction on every
+# dynamic visit: a long ``if op is ...`` cascade, ``isinstance`` checks and
+# ``id()`` dict probes per operand, a ``np.errstate`` context per arithmetic
+# op.  The decoder below compiles a Function ONCE into a flat, table-driven
+# program:
+#
+#   * registers / slots / params get dense indices into plain lists;
+#   * every instruction becomes a specialized closure bound to its numpy
+#     handler and pre-resolved operand accessors;
+#   * straight-line runs (during which the thread mask cannot change) are
+#     batched: one fuel decrement, one bulk ExecStats update, then a bare
+#     ``for h in handlers`` loop;
+#   * each block ends in a terminator descriptor driving the IPDOM
+#     split/join machinery; vx_join / tmc_restore / barriers / calls are
+#     their own control nodes since they can change the mask or suspend;
+#   * pointer operands are resolved to device arrays once per activation
+#     (warp start / call entry), not per memory access.
+#
+# The decoded program is cached on the Function, keyed by its IR version
+# counter (vir.Function.ir_version), the warp width and the OOB-load mode —
+# mutating the IR invalidates the cache automatically.  Semantics, dynamic
+# instruction counts and memory statistics are bit-identical to
+# ``_exec_warp`` (tested in tests/test_perf_caches.py).
+# --------------------------------------------------------------------------
+
+_PLAIN_OPS = (BINOPS | UNOPS |
+              {Op.SELECT, Op.CMOV, Op.SLOT_LOAD, Op.SLOT_STORE, Op.LOAD,
+               Op.STORE, Op.ATOMIC, Op.INTR, Op.VOTE, Op.SHFL, Op.PRINT,
+               Op.SPLIT, Op.TMC_SAVE})
+
+
+class _SplitDesc:
+    """Decoded vx_split: consulted by the following CBR."""
+    __slots__ = ("gcond", "attrs", "tok")
+
+    def __init__(self, gcond, attrs, tok) -> None:
+        self.gcond = gcond
+        self.attrs = attrs   # the Instr's live attrs dict (negate flag)
+        self.tok = tok       # dense reg index of the token
+
+
+class _DState:
+    """Per-activation mutable state (one warp, or one device-fn call)."""
+    __slots__ = ("env", "slots", "args", "argmap", "mem_arrs", "mask",
+                 "active", "stack", "pending", "ret", "intr", "ctx", "mem",
+                 "stats", "fuel")
+
+    def __init__(self, prog: "_DProgram", argmap: Dict[int, Any],
+                 mask: np.ndarray, ctx: _WarpCtx, mem: DeviceMemory,
+                 stats: ExecStats, fuel: List[int]) -> None:
+        self.env: List[Any] = [None] * prog.n_regs
+        self.slots: List[Any] = [None] * prog.n_slots
+        self.args = [argmap.get(id(p)) for p in prog.params]
+        self.argmap = argmap
+        self.mem_arrs = [mem.resolve(v, argmap) for v in prog.memrefs]
+        self.mask = mask
+        self.active = bool(mask.any())
+        self.stack: List[Any] = []     # IPDOM entries: (tok, saved, else_bi, else_mask)
+        self.pending: Optional[_SplitDesc] = None
+        self.ret: Any = None
+        self.intr = ctx.intr
+        self.ctx = ctx
+        self.mem = mem
+        self.stats = stats
+        self.fuel = fuel
+
+
+class _DBlock:
+    __slots__ = ("nodes", "label")
+
+    def __init__(self, nodes, label) -> None:
+        self.nodes = nodes
+        self.label = label
+
+
+def _decode(fn: Function, W: int, strict: bool) -> "_DProgram":
+    """Decode ``fn`` (memoized on the function, keyed by IR version)."""
+    cache = getattr(fn, "_decode_cache", None)
+    if cache is None:
+        cache = {}
+        fn._decode_cache = cache  # type: ignore[attr-defined]
+    key = (fn.ir_version, W, bool(strict))
+    prog = cache.get(key)
+    if prog is None:
+        for k in [k for k in cache if k[0] != fn.ir_version]:
+            del cache[k]          # stale IR versions can never hit again
+        prog = _DProgram(fn, W, bool(strict))
+        cache[key] = prog
+    return prog
+
+
+class _DProgram:
+    def __init__(self, fn: Function, W: int, strict: bool) -> None:
+        self.fn = fn
+        self.W = W
+        self.strict = strict
+        self.params = list(fn.params)
+        # dense indices -------------------------------------------------
+        self.reg_idx: Dict[int, int] = {}
+        self.slot_idx: Dict[int, int] = {}
+        self.memrefs: List[Value] = []
+        self._memref_idx: Dict[int, int] = {}
+        self.slot_meta: List[Slot] = []
+        for i in fn.instructions():
+            if i.result is not None:
+                self.reg_idx.setdefault(id(i.result), len(self.reg_idx))
+            for o in i.operands:
+                if isinstance(o, Reg):
+                    self.reg_idx.setdefault(id(o), len(self.reg_idx))
+                elif isinstance(o, Slot):
+                    if id(o) not in self.slot_idx:
+                        self.slot_idx[id(o)] = len(self.slot_idx)
+                        self.slot_meta.append(o)
+        self.n_regs = len(self.reg_idx)
+        self.n_slots = len(self.slot_idx)
+        self._bidx = {id(b): k for k, b in enumerate(fn.blocks)}
+        self.blocks: List[_DBlock] = [self._decode_block(b)
+                                      for b in fn.blocks]
+
+    # -- decode helpers ----------------------------------------------------
+    def _memref(self, v: Value) -> int:
+        j = self._memref_idx.get(id(v))
+        if j is None:
+            j = len(self.memrefs)
+            self._memref_idx[id(v)] = j
+            self.memrefs.append(v)
+        return j
+
+    def _getter(self, v: Value):
+        W = self.W
+        if isinstance(v, Const):
+            vec = _const_vec(v, W)
+            return lambda st, vec=vec: vec
+        if isinstance(v, Reg):
+            ri = self.reg_idx[id(v)]
+            return lambda st, ri=ri: st.env[ri]
+        if isinstance(v, Param):
+            if v.ty is Ty.PTR:
+                raise ExecError(f"pointer param {v.name} used as value")
+            k = self.params.index(v)
+
+            def getp(st, k=k, name=v.name):
+                a = st.args[k]
+                if a is None:
+                    raise ExecError(f"unbound param {name}")
+                return a
+            return getp
+        raise ExecError(f"cannot evaluate {v!r}")
+
+    # -- block decode ------------------------------------------------------
+    def _decode_block(self, b: Block) -> _DBlock:
+        nodes: List[Any] = []
+        run: List[Any] = []
+        run_ops: Counter = Counter()
+
+        def flush() -> None:
+            if not run:
+                return
+            hs = tuple(run)
+            n = len(hs)
+            bo = dict(run_ops)
+
+            def run_node(st, hs=hs, n=n, bo=bo):
+                f = st.fuel
+                f[0] -= n
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if st.active:
+                    stt = st.stats
+                    stt.instrs += n
+                    stt.by_op.update(bo)
+                for h in hs:
+                    h(st)
+                return None
+            nodes.append(run_node)
+            run.clear()
+            run_ops.clear()
+
+        for i in b.instrs:
+            op = i.op
+            if op in _PLAIN_OPS:
+                run.append(self._plain(i))
+                run_ops[op.value] += 1
+            else:
+                flush()
+                nodes.append(self._control(i, b))
+        flush()
+        return _DBlock(tuple(nodes), b.label)
+
+    # -- plain (straight-line) handlers -----------------------------------
+    def _plain(self, i: Instr):
+        op = i.op
+        W = self.W
+        g = self._getter
+        if op in BINOPS:
+            fn = _BIN_FNS[op]
+            ga, gb = g(i.operands[0]), g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, fn=fn, ga=ga, gb=gb, ri=ri):
+                st.env[ri] = fn(ga(st), gb(st))
+            return h
+        if op in UNOPS:
+            fn = _UN_FNS[op]
+            ga = g(i.operands[0])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, fn=fn, ga=ga, ri=ri):
+                st.env[ri] = fn(ga(st))
+            return h
+        if op in (Op.SELECT, Op.CMOV):
+            gc_, ga, gb = (g(o) for o in i.operands[:3])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, gc_=gc_, ga=ga, gb=gb, ri=ri):
+                st.env[ri] = np.where(gc_(st).astype(bool), ga(st), gb(st))
+            return h
+        if op is Op.SLOT_LOAD:
+            si = self.slot_idx[id(i.operands[0])]
+            dt = _TY_DTYPE[i.operands[0].ty]
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, si=si, dt=dt, ri=ri, W=W):
+                arr = st.slots[si]
+                if arr is None:
+                    arr = np.zeros(W, dtype=dt)
+                    st.slots[si] = arr
+                st.env[ri] = arr
+            return h
+        if op is Op.SLOT_STORE:
+            si = self.slot_idx[id(i.operands[0])]
+            gv = g(i.operands[1])
+
+            def h(st, si=si, gv=gv, W=W):
+                nv = gv(st)
+                arr = st.slots[si]
+                if arr is None:
+                    arr = np.zeros(W, dtype=nv.dtype)
+                st.slots[si] = np.where(st.mask, nv, arr)
+            return h
+        if op is Op.LOAD:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+            strict = self.strict
+            fname = self.fn.name
+
+            def h(st, mi=mi, gi_=gi_, ri=ri, strict=strict, fname=fname):
+                buf, shared = st.mem_arrs[mi]
+                ix = gi_(st).astype(np.int64)
+                if st.active:
+                    a_ix = ix[st.mask]
+                    if strict and ((a_ix < 0).any()
+                                   or (a_ix >= len(buf)).any()):
+                        raise ExecError(
+                            f"OOB load in @{fname}: idx={a_ix} "
+                            f"size={len(buf)}")
+                    a_ix = np.clip(a_ix, 0, len(buf) - 1)
+                    lines = np.unique(a_ix // CACHE_LINE_ELEMS)
+                    stt = st.stats
+                    if shared:
+                        stt.shared_requests += len(lines)
+                    else:
+                        stt.mem_requests += len(lines)
+                    stt.mem_insts += 1
+                safe = np.clip(ix, 0, len(buf) - 1)
+                st.env[ri] = buf[safe]
+            return h
+        if op is Op.STORE:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            gv = g(i.operands[2])
+            fname = self.fn.name
+
+            def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname):
+                buf, shared = st.mem_arrs[mi]
+                ix = gi_(st).astype(np.int64)
+                v = gv(st)
+                if st.active:
+                    a_ix = ix[st.mask]
+                    if (a_ix < 0).any() or (a_ix >= len(buf)).any():
+                        raise ExecError(
+                            f"OOB store in @{fname}: idx={a_ix} "
+                            f"size={len(buf)}")
+                    lines = np.unique(a_ix // CACHE_LINE_ELEMS)
+                    stt = st.stats
+                    if shared:
+                        stt.shared_requests += len(lines)
+                    else:
+                        stt.mem_requests += len(lines)
+                    stt.mem_insts += 1
+                    buf[a_ix] = v[st.mask].astype(buf.dtype)
+            return h
+        if op is Op.ATOMIC:
+            kind = i.operands[0]
+            mi = self._memref(i.operands[1])
+            gi_ = g(i.operands[2])
+            gv = g(i.operands[3])
+            ri = self.reg_idx[id(i.result)]
+            fname = self.fn.name
+
+            def h(st, kind=kind, mi=mi, gi_=gi_, gv=gv, ri=ri, fname=fname,
+                  W=W):
+                buf, _shared = st.mem_arrs[mi]
+                ix = gi_(st).astype(np.int64)
+                v = gv(st)
+                old = np.zeros(W, dtype=buf.dtype)
+                if st.active:
+                    lanes = np.nonzero(st.mask)[0]
+                    a_ix = ix[lanes]
+                    if (a_ix < 0).any() or (a_ix >= len(buf)).any():
+                        raise ExecError(f"OOB atomic in @{fname}")
+                    stt = st.stats
+                    stt.mem_requests += len(
+                        np.unique(a_ix // CACHE_LINE_ELEMS))
+                    stt.mem_insts += 1
+                    stt.atomic_serial += len(lanes)
+                    for ln in lanes:     # lane-ordered, deterministic
+                        a = int(ix[ln])
+                        old[ln] = buf[a]
+                        if kind == "add":
+                            buf[a] += v[ln]
+                        elif kind == "max":
+                            buf[a] = max(buf[a], v[ln])
+                        elif kind == "min":
+                            buf[a] = min(buf[a], v[ln])
+                        elif kind == "xchg":
+                            buf[a] = v[ln]
+                        elif kind == "cas":
+                            pass
+                        else:
+                            raise ExecError(f"unknown atomic {kind}")
+                st.env[ri] = old
+            return h
+        if op is Op.INTR:
+            key = (i.operands[0], i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, key=key, ri=ri):
+                a = st.intr.get(key)
+                if a is None:
+                    raise ExecError(
+                        f"intrinsic {key[0]}.{key[1]} not provided")
+                st.env[ri] = a
+            return h
+        if op is Op.VOTE:
+            mode = i.operands[0]
+            gv = g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, mode=mode, gv=gv, ri=ri, W=W):
+                v = gv(st).astype(bool)
+                mask = st.mask
+                act = v & mask
+                if mode == "any":
+                    r = np.full(W, bool(act.any()))
+                elif mode == "all":
+                    r = np.full(W, bool((v | ~mask)[mask].all())
+                                if st.active else True)
+                elif mode == "ballot":
+                    bits = 0
+                    for ln in range(W):
+                        if mask[ln] and v[ln]:
+                            bits |= (1 << ln)
+                    r = np.full(W, bits, dtype=np.int64).astype(np.int32)
+                else:
+                    raise ExecError(f"unknown vote mode {mode}")
+                st.env[ri] = r
+            return h
+        if op is Op.SHFL:
+            gv = g(i.operands[0])
+            gl = g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, gv=gv, gl=gl, ri=ri, W=W):
+                src = gl(st).astype(np.int64) % W
+                st.env[ri] = gv(st)[src]
+            return h
+        if op is Op.PRINT:
+            gs = tuple(g(o) for o in i.operands if isinstance(o, Value))
+
+            def h(st, gs=gs):
+                vals = [gg(st)[st.mask] for gg in gs]
+                st.stats.prints.append(" ".join(str(x) for x in vals))
+            return h
+        if op is Op.SPLIT:
+            desc = _SplitDesc(g(i.operands[0]), i.attrs,
+                              self.reg_idx[id(i.result)])
+
+            def h(st, desc=desc):
+                st.pending = desc
+            return h
+        if op is Op.TMC_SAVE:
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, ri=ri):
+                st.env[ri] = st.mask.copy()
+            return h
+        raise ExecError(f"unhandled op {op}")
+
+    # -- control / terminator nodes ----------------------------------------
+    def _control(self, i: Instr, b: Block):
+        op = i.op
+        opv = op.value
+        W = self.W
+        g = self._getter
+        fname = self.fn.name
+        if op is Op.BR:
+            tb = self._bidx[id(i.operands[0])]
+
+            def br_node(st, tb=tb, opv=opv):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if st.active:
+                    stt = st.stats
+                    stt.instrs += 1
+                    stt.by_op[opv] += 1
+                st.pending = None
+                return tb
+            return br_node
+        if op is Op.CBR:
+            gc_ = g(i.operands[0])
+            then_i = self._bidx[id(i.operands[1])]
+            else_i = self._bidx[id(i.operands[2])]
+            label = b.label
+
+            def cbr_node(st, gc_=gc_, then_i=then_i, else_i=else_i,
+                         opv=opv, label=label, fname=fname):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                stt = st.stats
+                if st.active:
+                    stt.instrs += 1
+                    stt.by_op[opv] += 1
+                c = gc_(st).astype(bool)
+                sp = st.pending
+                if sp is not None:
+                    st.pending = None
+                    neg = sp.attrs.get("negate", False)
+                    sp_val = sp.gcond(st).astype(bool)
+                    cc = ~sp_val if neg else sp_val
+                    mask = st.mask
+                    then_mask = mask & cc
+                    else_mask = mask & ~cc
+                    ta = bool(then_mask.any())
+                    if ta and else_mask.any():
+                        st.stack.append((sp.tok, mask.copy(), else_i,
+                                         else_mask))
+                        stt.max_ipdom_depth = max(stt.max_ipdom_depth,
+                                                  len(st.stack))
+                        st.mask = then_mask
+                        st.active = True
+                        return then_i
+                    st.stack.append((sp.tok, mask.copy(), -1, None))
+                    if ta:
+                        st.mask = then_mask
+                        st.active = True
+                        return then_i
+                    st.mask = else_mask
+                    st.active = bool(else_mask.any())
+                    return else_i
+                # un-split branch: must be uniform over active lanes
+                if st.active:
+                    act = c[st.mask]
+                    if act.any() != act.all():
+                        raise UniformityViolation(
+                            f"divergent un-managed branch in %{label} "
+                            f"of @{fname}")
+                    taken = bool(act[0])
+                else:
+                    taken = True
+                return then_i if taken else else_i
+            return cbr_node
+        if op is Op.PRED:
+            gc_ = g(i.operands[0])
+            tok_i = self.reg_idx[id(i.operands[1])]
+            inside_i = self._bidx[id(i.operands[2])]
+            outside_i = self._bidx[id(i.operands[3])]
+            attrs = i.attrs
+
+            def pred_node(st, gc_=gc_, tok_i=tok_i, inside_i=inside_i,
+                          outside_i=outside_i, attrs=attrs, opv=opv):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if st.active:
+                    stt = st.stats
+                    stt.instrs += 1
+                    stt.by_op[opv] += 1
+                c = gc_(st).astype(bool)
+                if attrs.get("negate", False):
+                    c = ~c
+                new_mask = st.mask & c
+                if new_mask.any():
+                    st.mask = new_mask
+                    st.active = True
+                    return inside_i
+                st.mask = st.env[tok_i].copy()
+                st.active = bool(st.mask.any())
+                return outside_i
+            return pred_node
+        if op is Op.RET:
+            gv = g(i.operands[0]) if i.operands else None
+
+            def ret_node(st, gv=gv, opv=opv, W=W):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if st.active:
+                    stt = st.stats
+                    stt.instrs += 1
+                    stt.by_op[opv] += 1
+                if st.stack:
+                    raise ExecError("RET with non-empty IPDOM stack")
+                st.ret = gv(st) if gv is not None \
+                    else np.zeros(W, dtype=np.float32)
+                return -1
+            return ret_node
+        if op is Op.JOIN:
+            tok_i = self.reg_idx[id(i.operands[0])]
+
+            def join_node(st, tok_i=tok_i, opv=opv):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if st.active:
+                    stt = st.stats
+                    stt.instrs += 1
+                    stt.by_op[opv] += 1
+                stack = st.stack
+                if not stack or stack[-1][0] != tok_i:
+                    raise ExecError("vx_join token mismatch at runtime")
+                tok, saved, else_bi, else_mask = stack.pop()
+                if else_bi >= 0:
+                    stack.append((tok, saved, -1, None))
+                    st.mask = else_mask
+                    st.active = bool(else_mask.any())
+                    return else_bi
+                st.mask = saved
+                st.active = bool(saved.any())
+                return None
+            return join_node
+        if op is Op.TMC_RESTORE:
+            tok_i = self.reg_idx[id(i.operands[0])]
+
+            def restore_node(st, tok_i=tok_i, opv=opv):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if st.active:
+                    stt = st.stats
+                    stt.instrs += 1
+                    stt.by_op[opv] += 1
+                st.mask = st.env[tok_i].copy()
+                st.active = bool(st.mask.any())
+                return None
+            return restore_node
+        if op is Op.BARRIER:
+            def barrier_node(st, opv=opv):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if st.active:
+                    stt = st.stats
+                    stt.instrs += 1
+                    stt.by_op[opv] += 1
+                yield "barrier"
+            return barrier_node
+        if op is Op.CALL:
+            callee: Function = i.operands[0]
+            ret_dtype = _TY_DTYPE.get(callee.ret_ty, np.float32)
+            ri = self.reg_idx[id(i.result)] if i.result is not None else -1
+            binders = []
+            for p, a in zip(callee.params, i.operands[1:]):
+                if p.ty is Ty.PTR:
+                    if isinstance(a, (Param, GlobalVar)):
+                        binders.append((p, "ptr", a))
+                    else:
+                        binders.append((p, "bad", a))
+                else:
+                    binders.append((p, "val", g(a)))
+            binders = tuple(binders)
+            strict = self.strict
+
+            def call_node(st, callee=callee, binders=binders, ri=ri,
+                          ret_dtype=ret_dtype, opv=opv, W=W, strict=strict):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if not st.active:    # hardware would not issue the call body
+                    if ri >= 0:
+                        st.env[ri] = np.zeros(W, dtype=ret_dtype)
+                    return
+                stt = st.stats
+                stt.instrs += 1
+                stt.by_op[opv] += 1
+                cargs: Dict[int, Any] = {}
+                for p, kind, payload in binders:
+                    if kind == "ptr":
+                        arr, _ = st.mem.resolve(payload, st.argmap)
+                        cargs[id(p)] = arr
+                    elif kind == "val":
+                        cargs[id(p)] = payload(st)
+                    else:
+                        raise ExecError("pointer arg must be param/global")
+                cprog = _decode(callee, W, strict)   # lazy: handles recursion
+                sub = _DState(cprog, cargs, st.mask.copy(), st.ctx, st.mem,
+                              st.stats, st.fuel)
+                r = yield from _run_decoded(cprog, sub)
+                if ri >= 0:
+                    st.env[ri] = r
+            return call_node
+        raise ExecError(f"unhandled op {op}")
+
+
+def _run_decoded(prog: "_DProgram", st: _DState
+                 ) -> Generator[str, None, np.ndarray]:
+    """Drive a decoded program.  Yields "barrier" events like _exec_warp."""
+    blocks = prog.blocks
+    bi = 0
+    while True:
+        nodes = blocks[bi].nodes
+        jump: Optional[int] = None
+        for node in nodes:
+            r = node(st)
+            if r is None:
+                continue
+            if type(r) is int:
+                jump = r
+                break
+            yield from r           # barrier / call sub-generator
+        if jump is None:
+            raise ExecError(f"block %{blocks[bi].label} fell through")
+        if jump < 0:
+            return st.ret
+        bi = jump
+
+
+# --------------------------------------------------------------------------
 # Kernel launch (grid scheduling = the thread-schedule code VOLT's
 # front-end inserts; here it lives in the host runtime)
 # --------------------------------------------------------------------------
@@ -534,10 +1208,15 @@ def _exec_warp(fn: Function, argmap: Dict[int, Any], mask0: np.ndarray,
 def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
            params: LaunchParams,
            scalar_args: Optional[Dict[str, Any]] = None,
-           globals_mem: Optional[Dict[str, np.ndarray]] = None
-           ) -> ExecStats:
+           globals_mem: Optional[Dict[str, np.ndarray]] = None,
+           *, decoded: bool = True) -> ExecStats:
     """Execute a compiled kernel over the launch grid; returns stats.
-    Buffers are mutated in place (device memory semantics)."""
+    Buffers are mutated in place (device memory semantics).
+
+    ``decoded=True`` (default) runs the pre-decoded table-driven executor;
+    ``decoded=False`` keeps the original instruction-at-a-time loop — the
+    semantics oracle the parity tests and benchmarks/interp_speed.py
+    compare against."""
     fn = module_fn
     scalar_args = scalar_args or {}
     mem = DeviceMemory(buffers, globals_mem)
@@ -545,11 +1224,47 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     W = params.warp_size
     fuel = [params.fuel]
     n_wg = params.grid * params.grid_y
+    prog = _decode(fn, W, params.strict_oob_loads) if decoded else None
+
+    # launch-invariant pieces, hoisted out of the grid loops: kernel
+    # argument vectors and the constant CSR-backed intrinsics (all arrays
+    # are read-only to the executors)
+    argmap: Dict[int, Any] = {}
+    for p in fn.params:
+        if p.ty is Ty.PTR:
+            if p.name in buffers:
+                argmap[id(p)] = buffers[p.name]
+            else:
+                raise ExecError(f"no buffer bound for {p.name}")
+        else:
+            v = scalar_args.get(p.name)
+            if v is None:
+                raise ExecError(f"no scalar bound for {p.name}")
+            argmap[id(p)] = np.full(W, v, dtype=_TY_DTYPE[p.ty])
+    base_intr = {
+        ("local_size", 0): np.full(W, params.local_size, np.int32),
+        ("local_size", 1): np.full(W, params.local_size_y, np.int32),
+        ("num_groups", 0): np.full(W, params.grid, np.int32),
+        ("num_groups", 1): np.full(W, params.grid_y, np.int32),
+        ("global_size", 0): np.full(W, params.grid * params.local_size,
+                                    np.int32),
+        ("global_size", 1): np.full(W, params.grid_y *
+                                    params.local_size_y, np.int32),
+        ("num_threads", 0): np.full(W, W, np.int32),
+        ("num_warps", 0): np.full(W, params.warps_per_wg, np.int32),
+        ("grid_dim", 0): np.full(W, params.grid, np.int32),
+    }
+    warp_ids = [np.full(W, wrp, np.int32)
+                for wrp in range(params.warps_per_wg)]
 
     for wg_lin in range(n_wg):
         gx = wg_lin % params.grid
         gy = wg_lin // params.grid
         mem.shared = {}   # fresh shared memory per workgroup
+        wg_intr = dict(base_intr)
+        wg_intr[("group_id", 0)] = np.full(W, gx, np.int32)
+        wg_intr[("group_id", 1)] = np.full(W, gy, np.int32)
+        wg_intr[("core_id", 0)] = np.full(W, gx % 4, np.int32)
         warps: List[Generator[str, None, np.ndarray]] = []
         for wrp in range(params.warps_per_wg):
             lanes = np.arange(W)
@@ -557,61 +1272,44 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
             active = tid_lin < params.wg_threads
             lx = tid_lin % params.local_size
             ly = tid_lin // params.local_size
-            intr = {
-                ("local_id", 0): lx.astype(np.int32),
-                ("local_id", 1): ly.astype(np.int32),
-                ("lane_id", 0): lanes.astype(np.int32),
-                ("group_id", 0): np.full(W, gx, np.int32),
-                ("group_id", 1): np.full(W, gy, np.int32),
-                ("global_id", 0): (gx * params.local_size + lx).astype(np.int32),
-                ("global_id", 1): (gy * params.local_size_y + ly).astype(np.int32),
-                ("local_size", 0): np.full(W, params.local_size, np.int32),
-                ("local_size", 1): np.full(W, params.local_size_y, np.int32),
-                ("num_groups", 0): np.full(W, params.grid, np.int32),
-                ("num_groups", 1): np.full(W, params.grid_y, np.int32),
-                ("global_size", 0): np.full(W, params.grid * params.local_size,
-                                            np.int32),
-                ("global_size", 1): np.full(W, params.grid_y *
-                                            params.local_size_y, np.int32),
-                ("num_threads", 0): np.full(W, W, np.int32),
-                ("num_warps", 0): np.full(W, params.warps_per_wg, np.int32),
-                ("warp_id", 0): np.full(W, wrp, np.int32),
-                ("core_id", 0): np.full(W, gx % 4, np.int32),
-                ("grid_dim", 0): np.full(W, params.grid, np.int32),
-            }
+            intr = dict(wg_intr)
+            intr[("local_id", 0)] = lx.astype(np.int32)
+            intr[("local_id", 1)] = ly.astype(np.int32)
+            intr[("lane_id", 0)] = lanes.astype(np.int32)
+            intr[("global_id", 0)] = (gx * params.local_size
+                                      + lx).astype(np.int32)
+            intr[("global_id", 1)] = (gy * params.local_size_y
+                                      + ly).astype(np.int32)
+            intr[("warp_id", 0)] = warp_ids[wrp]
             ctx = _WarpCtx(W, intr, params.strict_oob_loads)
-            argmap: Dict[int, Any] = {}
-            for p in fn.params:
-                if p.ty is Ty.PTR:
-                    if p.name in buffers:
-                        argmap[id(p)] = buffers[p.name]
-                    else:
-                        raise ExecError(f"no buffer bound for {p.name}")
-                else:
-                    v = scalar_args.get(p.name)
-                    if v is None:
-                        raise ExecError(f"no scalar bound for {p.name}")
-                    argmap[id(p)] = np.full(W, v, dtype=_TY_DTYPE[p.ty])
-            warps.append(_exec_warp(fn, argmap, active, ctx, mem, stats,
-                                    fuel))
+            if prog is not None:
+                warp_st = _DState(prog, argmap, active.copy(), ctx, mem,
+                                  stats, fuel)
+                warps.append(_run_decoded(prog, warp_st))
+            else:
+                warps.append(_exec_warp(fn, argmap, active, ctx, mem,
+                                        stats, fuel))
 
         # co-routine scheduling: run each warp to its next barrier; barriers
         # synchronize all warps of the workgroup (vx_barrier local scope)
+        # (errstate hoisted out of the instruction loop: the decoded
+        # executor binds raw numpy handlers with no per-op context)
         alive = list(range(len(warps)))
-        while alive:
-            at_barrier: List[int] = []
-            done: List[int] = []
-            for wi in alive:
-                try:
-                    ev = next(warps[wi])
-                    assert ev == "barrier"
-                    at_barrier.append(wi)
-                except StopIteration:
-                    done.append(wi)
-            if at_barrier and done:
-                raise ExecError("barrier divergence: some warps exited "
-                                "while others wait")
-            alive = at_barrier
+        with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+            while alive:
+                at_barrier: List[int] = []
+                done: List[int] = []
+                for wi in alive:
+                    try:
+                        ev = next(warps[wi])
+                        assert ev == "barrier"
+                        at_barrier.append(wi)
+                    except StopIteration:
+                        done.append(wi)
+                if at_barrier and done:
+                    raise ExecError("barrier divergence: some warps exited "
+                                    "while others wait")
+                alive = at_barrier
     return stats
 
 

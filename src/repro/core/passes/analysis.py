@@ -1,0 +1,141 @@
+"""AnalysisManager — memoized CFG/dataflow analyses for the pass pipeline.
+
+The paper's pipeline (§4.3) re-runs uniformity up to five times per
+function, and every run recomputes predecessors, post-dominators and
+control dependence from scratch; Algorithm 2 and the structurizer then
+recompute dominators and loops again.  This manager memoizes each analysis
+keyed by the function's IR version counters (vir.Function):
+
+  * ``cfg_version``  guards pure CFG analyses (predecessors, RPO,
+    dominators, post-dominators, loops, control dependence, CDG leaves);
+  * ``df_version``   guards uniformity results (which also depend on
+    instruction operands/dataflow, not just block structure);
+
+so a pass that declares "I only changed instruction attrs"
+(``fn.bump_version(cfg=False, dataflow=False)``) invalidates the decoded
+interpreter's program cache but keeps every analysis here warm, and a pass
+that rewrote instructions in place without touching edges
+(``cfg=False``) keeps the CFG analyses while invalidating uniformity.
+
+Passes receive the manager as an optional ``am`` argument and fall back to
+a private instance, so direct ``run_<pass>(fn)`` calls in tests keep
+working unchanged.  Cached ``UniformityInfo`` objects are shared — treat
+them as immutable (clone before mutating, as the hazard-injection tests
+do on fresh instances).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from ..vir import Function
+from .. import graph
+
+
+class AnalysisManager:
+    """Version-keyed memoization of per-function analyses.
+
+    ``enabled=False`` turns every query into a plain recompute — used by
+    benchmarks/compile_time.py to measure the pre-cache baseline.
+    """
+
+    def __init__(self, *, enabled: bool = True) -> None:
+        self.enabled = enabled
+        # (id(fn), kind) -> (version, value); fn objects are kept alive by
+        # `_refs` so ids cannot be recycled under us.
+        self._cache: Dict[Tuple[int, str], Tuple[int, Any]] = {}
+        self._refs: Dict[int, Function] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # -- plumbing ----------------------------------------------------------
+    def _get(self, fn: Function, kind: str, version: int,
+             build: Callable[[], Any]) -> Any:
+        if not self.enabled:
+            return build()
+        key = (id(fn), kind)
+        ent = self._cache.get(key)
+        if ent is not None and ent[0] == version:
+            self.hits += 1
+            return ent[1]
+        self.misses += 1
+        val = build()
+        self._cache[key] = (version, val)
+        self._refs[id(fn)] = fn
+        return val
+
+    def invalidate(self, fn: Optional[Function] = None) -> None:
+        """Drop cached results (for one function, or everything)."""
+        if fn is None:
+            self._cache.clear()
+            self._refs.clear()
+            return
+        for key in [k for k in self._cache if k[0] == id(fn)]:
+            del self._cache[key]
+        self._refs.pop(id(fn), None)
+
+    # -- CFG analyses (keyed by cfg_version) -------------------------------
+    def predecessors(self, fn: Function):
+        return self._get(fn, "preds", fn.cfg_version,
+                         lambda: graph.predecessors(fn))
+
+    def rpo(self, fn: Function):
+        return self._get(fn, "rpo", fn.cfg_version, lambda: graph.rpo(fn))
+
+    def dominators(self, fn: Function) -> graph.DomInfo:
+        return self._get(fn, "dom", fn.cfg_version,
+                         lambda: graph.dominators(fn))
+
+    def postdominators(self, fn: Function) -> graph.PostDomInfo:
+        return self._get(fn, "pdom", fn.cfg_version,
+                         lambda: graph.postdominators(fn))
+
+    def loops(self, fn: Function):
+        return self._get(fn, "loops", fn.cfg_version,
+                         lambda: graph.natural_loops(fn,
+                                                     self.dominators(fn)))
+
+    def control_deps(self, fn: Function):
+        return self._get(fn, "cdeps", fn.cfg_version,
+                         lambda: graph.control_deps(
+                             fn, self.postdominators(fn)))
+
+    def cdg_leaves(self, fn: Function):
+        return self._get(fn, "cdg_leaves", fn.cfg_version,
+                         lambda: graph.cdg_leaves(fn,
+                                                  self.control_deps(fn)))
+
+    # -- uniformity (keyed by df_version + configuration) ------------------
+    def uniformity(self, fn: Function, tti, *,
+                   kernel_params_uniform: bool = False):
+        """Memoized run_uniformity.
+
+        Exact reuse when neither the dataflow-relevant IR (df_version) nor
+        the TTI configuration changed since the last run — attrs-only
+        edits such as mir_safety's negate-flag repair hit this path for
+        free.  Real dataflow edits re-run the fixpoint (callers wanting a
+        warm restart across edits can pass ``seed=`` to run_uniformity
+        directly; the result is then conservative, so the shared pipeline
+        does not do it implicitly).
+        """
+        from .uniformity import run_uniformity
+        sig = (tti.uni_hw, tti.uni_ann, tti.has_zicond, tti.has_minmax,
+               tti.wg_equals_warp, bool(kernel_params_uniform))
+        kind = f"uniformity:{sig}"
+        return self._get(
+            fn, kind, fn.df_version,
+            lambda: run_uniformity(
+                fn, tti, kernel_params_uniform=kernel_params_uniform,
+                am=self))
+
+
+_NULL = AnalysisManager(enabled=False)
+
+
+def ensure_manager(am: Optional[AnalysisManager]) -> AnalysisManager:
+    """Passes call this on their optional ``am`` argument: a provided
+    manager is shared across the pipeline; ``None`` gets a fresh private
+    one (still memoizes within the single pass run)."""
+    return am if am is not None else AnalysisManager()
+
+
+__all__ = ["AnalysisManager", "ensure_manager"]

@@ -23,16 +23,19 @@ from typing import Dict, List, Optional, Tuple
 
 from ..vir import Block, Function, Instr, Op, Reg, Ty
 from .. import graph
+from .analysis import AnalysisManager, ensure_manager
 from .uniformity import UniformityInfo
 
 
-def run_divmgmt(fn: Function, info: UniformityInfo) -> Dict[str, int]:
+def run_divmgmt(fn: Function, info: UniformityInfo,
+                am: Optional[AnalysisManager] = None) -> Dict[str, int]:
+    am = ensure_manager(am)
     d_branch: List[Tuple[Instr, Block]] = []
     d_loop: List[Tuple[Instr, Block]] = []
 
-    pdom = graph.postdominators(fn)
-    dom = graph.dominators(fn)
-    loops = graph.natural_loops(fn, dom)
+    pdom = am.postdominators(fn)
+    dom = am.dominators(fn)
+    loops = am.loops(fn)
 
     for b in fn.blocks:
         t = b.terminator
@@ -57,6 +60,8 @@ def run_divmgmt(fn: Function, info: UniformityInfo) -> Dict[str, int]:
 
     _transform_loop(fn, d_loop, loops, dom)
     _transform_branch(fn, d_branch, dom)
+    if d_branch or d_loop:
+        fn.bump_version()   # split/join/pred insertion rewrites the CFG
     return {"splits": len(d_branch), "preds": len(d_loop)}
 
 

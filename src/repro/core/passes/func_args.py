@@ -18,10 +18,11 @@ Results are written into ``Param.proved_uniform`` and
 """
 from __future__ import annotations
 
-from typing import Dict, List, Set
+from typing import Dict, List, Optional, Set
 
 from ..vir import Function, Instr, Module, Op, Param, Reg, Ty
-from .uniformity import VortexTTI, run_uniformity
+from .analysis import AnalysisManager, ensure_manager
+from .uniformity import VortexTTI
 
 
 def _call_graph(module: Module) -> Dict[str, Set[str]]:
@@ -58,15 +59,40 @@ def _rpo_functions(module: Module, roots: List[str]) -> List[str]:
     return post
 
 
+def _caller_map(module: Module) -> Dict[str, List[Function]]:
+    """callee name -> caller Functions (inverted _call_graph edges)."""
+    edges = _call_graph(module)
+    callers: Dict[str, List[Function]] = {n: [] for n in module.functions}
+    for caller, callees in edges.items():
+        for callee in callees:
+            callers[callee].append(module.functions[caller])
+    return callers
+
+
 def run_func_arg_analysis(module: Module, tti: VortexTTI,
-                          roots: List[str]) -> None:
+                          roots: List[str],
+                          am: Optional[AnalysisManager] = None) -> None:
     """Algorithm 1. Mutates Param.proved_uniform / Function.ret_uniform."""
+    am = ensure_manager(am)
+    callers = _caller_map(module)
+
+    def bump_callers(fn: Function) -> None:
+        # callers consult callee.ret_uniform through their TTI — a change
+        # to it makes their cached uniformity stale
+        for other in callers.get(fn.name, ()):
+            other.bump_version(cfg=False)
+
     # start optimistic-for-return / pessimistic-for-args, iterate to fixpoint
     for fn in module.functions.values():
         for p in fn.params:
+            if getattr(p, "proved_uniform", False):
+                fn.bump_version(cfg=False)
             p.proved_uniform = False  # type: ignore[attr-defined]
-        fn.ret_uniform = bool(fn.attrs.get("ret_uniform_annotated")) \
-            and tti.uni_ann
+        new_ret = bool(fn.attrs.get("ret_uniform_annotated")) and tti.uni_ann
+        if fn.ret_uniform != new_ret:
+            fn.bump_version(cfg=False)
+            bump_callers(fn)
+        fn.ret_uniform = new_ret
 
     order = _rpo_functions(module, roots)
     changed = True
@@ -74,11 +100,13 @@ def run_func_arg_analysis(module: Module, tti: VortexTTI,
     while changed and iters < 10:
         changed = False
         iters += 1
-        # per-function uniformity under current assumptions
+        # per-function uniformity under current assumptions (memoized:
+        # functions whose seeds did not change since the last iteration
+        # are exact cache hits)
         infos = {}
         for name in order:
             fn = module.functions[name]
-            infos[name] = run_uniformity(fn, tti)
+            infos[name] = am.uniformity(fn, tti)
 
         # (a) argument uniformity: internal functions whose every call site
         #     passes uniform values
@@ -106,6 +134,9 @@ def run_func_arg_analysis(module: Module, tti: VortexTTI,
                     continue
                 if all(len(s) > k and s[k] for s in sites):
                     p.proved_uniform = True  # type: ignore[attr-defined]
+                    # new uniformity seed: stale cached analyses of this fn
+                    # (and of its callers, via ret_uniform below) must drop
+                    fn.bump_version(cfg=False)
                     changed = True
 
         # (b) return uniformity: all RET operands uniform
@@ -118,3 +149,4 @@ def run_func_arg_analysis(module: Module, tti: VortexTTI,
             if rets and all(info.is_uniform(r.operands[0]) for r in rets):
                 fn.ret_uniform = True
                 changed = True
+                bump_callers(fn)

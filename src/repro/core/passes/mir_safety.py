@@ -95,10 +95,13 @@ def run_mir_safety(fn: Function, info: Optional[UniformityInfo] = None,
             # effective lane predicate (negate ? ~pred : pred) matches the
             # (possibly inverted) machine branch — the register is kept.
             split.attrs["negate"] = not split.attrs.get("negate", False)
+            # attrs-only edit: analyses stay valid, interpreter re-decodes
+            fn.bump_version(cfg=False, dataflow=False)
             stats["negate_fixed"] += 1
         elif _same_slot_load(sc, bc):
             # predicate drift: same slot reloaded into a fresh vreg
             split.operands[0] = bc
+            fn.bump_version(cfg=False)
             stats["drift_unified"] += 1
         # move split back-to-back with the terminator
         if b.instrs[-2] is not split:

@@ -20,6 +20,7 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional
 
 from ..vir import Function, Module, verify
+from .analysis import AnalysisManager
 from .simplify import run_simplify
 from .structurize import run_structurize
 from .reconstruct import run_reconstruct
@@ -77,45 +78,57 @@ class CompiledKernel:
 
 
 def run_pipeline(module: Module, kernel_name: str,
-                 config: Optional[PassConfig] = None) -> CompiledKernel:
+                 config: Optional[PassConfig] = None,
+                 *, use_analysis_cache: bool = True,
+                 am: Optional[AnalysisManager] = None) -> CompiledKernel:
+    """Run the §4.3 pipeline.
+
+    An AnalysisManager is threaded through every pass: CFG analyses
+    (predecessors / dominators / post-dominators / loops / control deps)
+    and uniformity results are memoized keyed by each function's IR
+    version counters, so the up-to-5 uniformity re-runs the ladder
+    mandates collapse into cache hits whenever the intervening pass
+    changed nothing (or only instruction attrs).  ``use_analysis_cache=
+    False`` restores the recompute-everything behavior for benchmarking.
+    """
     config = config or PassConfig()
     tti = config.tti()
     stats: Dict[str, Dict[str, int]] = {}
+    if am is None:
+        am = AnalysisManager(enabled=use_analysis_cache)
+
+    def uniformity(fn: Function) -> UniformityInfo:
+        return am.uniformity(
+            fn, tti, kernel_params_uniform=config.kernel_params_uniform
+            and fn.name == kernel_name)
 
     for fn in module.functions.values():
-        stats[f"simplify:{fn.name}"] = run_simplify(fn)
-        stats[f"structurize:{fn.name}"] = run_structurize(fn)
+        stats[f"simplify:{fn.name}"] = run_simplify(fn, am)
+        stats[f"structurize:{fn.name}"] = run_structurize(fn, am)
 
     if config.uni_func:
-        run_func_arg_analysis(module, tti, roots=[kernel_name])
+        run_func_arg_analysis(module, tti, roots=[kernel_name], am=am)
 
     kfn = module.functions[kernel_name]
     infos: Dict[str, UniformityInfo] = {}
     for fn in module.functions.values():
-        infos[fn.name] = run_uniformity(
-            fn, tti, kernel_params_uniform=config.kernel_params_uniform
-            and fn.name == kernel_name)
+        infos[fn.name] = uniformity(fn)
 
     if config.recon:
         for fn in module.functions.values():
-            stats[f"recon:{fn.name}"] = run_reconstruct(fn, infos[fn.name])
-            infos[fn.name] = run_uniformity(
-                fn, tti, kernel_params_uniform=config.kernel_params_uniform
-                and fn.name == kernel_name)
+            stats[f"recon:{fn.name}"] = run_reconstruct(fn, infos[fn.name],
+                                                        am=am)
+            infos[fn.name] = uniformity(fn)
 
     for fn in module.functions.values():
         stats[f"select:{fn.name}"] = lower_selects(fn, infos[fn.name], tti)
-        # CFG changed: recompute
-        infos[fn.name] = run_uniformity(
-            fn, tti, kernel_params_uniform=config.kernel_params_uniform
-            and fn.name == kernel_name)
-        stats[f"simplify2:{fn.name}"] = run_simplify(fn)
-        infos[fn.name] = run_uniformity(
-            fn, tti, kernel_params_uniform=config.kernel_params_uniform
-            and fn.name == kernel_name)
+        # CFG may have changed: the manager recomputes iff it did
+        infos[fn.name] = uniformity(fn)
+        stats[f"simplify2:{fn.name}"] = run_simplify(fn, am)
+        infos[fn.name] = uniformity(fn)
 
     for fn in module.functions.values():
-        stats[f"divmgmt:{fn.name}"] = run_divmgmt(fn, infos[fn.name])
+        stats[f"divmgmt:{fn.name}"] = run_divmgmt(fn, infos[fn.name], am)
         stats[f"mir_safety:{fn.name}"] = run_mir_safety(
             fn, infos[fn.name], tti)
         verify(fn)

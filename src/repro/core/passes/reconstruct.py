@@ -17,23 +17,26 @@ each path fold its own guard away.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from ..vir import Block, Function, Instr, Op
 from .. import graph
+from .analysis import AnalysisManager, ensure_manager
 from .structurize import _copy_block, _reg_escapes
 from .uniformity import UniformityInfo
 
 
 def run_reconstruct(fn: Function, info: UniformityInfo,
-                    *, max_dup: int = 8) -> Dict[str, int]:
+                    *, max_dup: int = 8,
+                    am: Optional[AnalysisManager] = None) -> Dict[str, int]:
+    am = ensure_manager(am)
     dup = 0
     changed = True
     while changed and dup < max_dup:
         changed = False
-        leaves = graph.cdg_leaves(fn)
-        preds = graph.predecessors(fn)
-        loops = graph.natural_loops(fn)
+        leaves = am.cdg_leaves(fn)
+        preds = am.predecessors(fn)
+        loops = am.loops(fn)
         for b in fn.blocks:
             if id(b) not in leaves or b is fn.entry:
                 continue
@@ -50,7 +53,7 @@ def run_reconstruct(fn: Function, info: UniformityInfo,
             if not info.block_divergent_exec(b):
                 continue
             # do not touch loop headers (duplication would clone the loop)
-            dom = graph.dominators(fn)
+            dom = am.dominators(fn)
             if any(dom.dominates(b, p) for p in ps):
                 continue
             if _reg_escapes(b):
@@ -65,6 +68,7 @@ def run_reconstruct(fn: Function, info: UniformityInfo,
                 t.operands = [clone if (isinstance(o, Block) and o is b)
                               else o for o in t.operands]
                 dup += 1
+            fn.bump_version()   # rerouted preds onto clones
             changed = True
             break
     return {"blocks_duplicated": dup}

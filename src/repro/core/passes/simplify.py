@@ -18,6 +18,7 @@ from typing import Dict, List, Optional
 from ..vir import (Block, Const, Function, Instr, Module, Op, Reg, Slot, Ty,
                    Value)
 from .. import graph
+from .analysis import AnalysisManager, ensure_manager
 
 _PURE = {Op.ADD, Op.SUB, Op.MUL, Op.DIV, Op.MOD, Op.AND, Op.OR, Op.XOR,
          Op.SHL, Op.SHR, Op.MIN, Op.MAX, Op.POW, Op.EQ, Op.NE, Op.LT,
@@ -97,7 +98,8 @@ def constant_fold(fn: Function) -> int:
         changed = False
         for b in fn.blocks:
             for i in b.instrs:
-                i.operands = [subst(o) for o in i.operands]
+                if replaced:
+                    i.operands = [subst(o) for o in i.operands]
                 if i.result is None:
                     continue
                 c: Optional[Const] = None
@@ -131,6 +133,8 @@ def constant_fold(fn: Function) -> int:
         for b in fn.blocks:
             b.instrs = [i for i in b.instrs
                         if not (i.op is Op.SLOT_LOAD and not i.operands)]
+    if folds:
+        fn.bump_version(cfg=False)   # instr rewrites only; edges unchanged
     return folds
 
 
@@ -155,6 +159,8 @@ def dce(fn: Function) -> int:
                 else:
                     keep.append(i)
             b.instrs = keep
+    if removed:
+        fn.bump_version(cfg=False)
     return removed
 
 
@@ -174,6 +180,8 @@ def dead_slot_elim(fn: Function) -> int:
                 keep.append(i)
         b.instrs = keep
     fn.slots = [s for s in fn.slots if id(s) in loaded]
+    if removed:
+        fn.bump_version(cfg=False)
     return removed
 
 
@@ -187,17 +195,20 @@ def fold_const_branches(fn: Function) -> int:
             b.instrs[-1].parent = b
             n += 1
     if n:
+        fn.bump_version()           # edges changed
         fn.drop_unreachable()
     return n
 
 
-def merge_straightline(fn: Function) -> int:
+def merge_straightline(fn: Function,
+                       am: Optional[AnalysisManager] = None) -> int:
     """Merge B -> C when B's only succ is C and C's only pred is B."""
+    am = ensure_manager(am)
     n = 0
     changed = True
     while changed:
         changed = False
-        preds = graph.predecessors(fn)
+        preds = am.predecessors(fn)
         for b in fn.blocks:
             t = b.terminator
             if t is None or t.op is not Op.BR:
@@ -213,6 +224,7 @@ def merge_straightline(fn: Function) -> int:
                 i.parent = b
                 b.instrs.append(i)
             fn.blocks.remove(c)
+            fn.bump_version()
             n += 1
             changed = True
             break
@@ -242,13 +254,15 @@ def single_exit(fn: Function) -> bool:
     return True
 
 
-def run_simplify(fn: Function) -> Dict[str, int]:
+def run_simplify(fn: Function,
+                 am: Optional[AnalysisManager] = None) -> Dict[str, int]:
+    am = ensure_manager(am)
     stats = {
         "constfold": constant_fold(fn),
         "cbr_fold": fold_const_branches(fn),
         "unreachable": fn.drop_unreachable(),
         "single_exit": int(single_exit(fn)),
-        "merged": merge_straightline(fn),
+        "merged": merge_straightline(fn, am),
         "dce": dce(fn),
         "dead_slots": dead_slot_elim(fn),
     }

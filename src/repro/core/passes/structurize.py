@@ -16,12 +16,14 @@ from typing import Dict, List, Optional, Tuple
 
 from ..vir import Block, Const, Function, Instr, Op, Reg
 from .. import graph
+from .analysis import AnalysisManager, ensure_manager
 
 
-def merge_latches(fn: Function) -> int:
+def merge_latches(fn: Function, am: Optional[AnalysisManager] = None) -> int:
     """Give every natural loop a single latch block."""
+    am = ensure_manager(am)
     n = 0
-    loops = graph.natural_loops(fn)
+    loops = am.loops(fn)
     for loop in loops:
         if len(loop.latches) <= 1:
             continue
@@ -32,6 +34,7 @@ def merge_latches(fn: Function) -> int:
             assert t is not None
             t.operands = [latch if (isinstance(o, Block) and o is loop.header)
                           else o for o in t.operands]
+        fn.bump_version()   # retargeted latch edges
         n += 1
     return n
 
@@ -140,6 +143,7 @@ def split_irreducible(fn: Function, max_iters: int = 200) -> int:
             t.operands = [clone if (isinstance(o, Block) and o is target)
                           else o for o in t.operands]
             total += 1
+        fn.bump_version()   # retargeted edges onto the clones
         fn.drop_unreachable()
     raise RuntimeError("structurization did not converge")
 
@@ -226,20 +230,22 @@ def _region_blocks(b: Block, ip: Block) -> List[Block]:
     return list(seen.values())
 
 
-def fix_side_entries(fn: Function, max_dup: int = 64) -> int:
+def fix_side_entries(fn: Function, max_dup: int = 64,
+                     am: Optional[AnalysisManager] = None) -> int:
     """Duplicate blocks that are entered from outside a branch's region
     (side entries / shared tails).  Such blocks would execute the branch's
     vx_join without having executed its vx_split — the misaligned
     reconvergence the IPDOM stack cannot absorb.  Front-end-generated CFGs
     never need this; hand-built goto-style IR (cfd-like graphs) does.
     """
+    am = ensure_manager(am)
     total = 0
     changed = True
     while changed and total < max_dup:
         changed = False
-        pdom = graph.postdominators(fn)
-        preds = graph.predecessors(fn)
-        loops = graph.natural_loops(fn)
+        pdom = am.postdominators(fn)
+        preds = am.predecessors(fn)
+        loops = am.loops(fn)
         for b in fn.blocks:
             t = b.terminator
             if t is None or t.op is not Op.CBR:
@@ -266,6 +272,7 @@ def fix_side_entries(fn: Function, max_dup: int = 64) -> int:
                     assert pt is not None
                     pt.operands = [clone if (isinstance(o, Block) and o is d)
                                    else o for o in pt.operands]
+                fn.bump_version()   # side entries rerouted to the clone
                 total += 1
                 changed = True
                 break
@@ -274,13 +281,15 @@ def fix_side_entries(fn: Function, max_dup: int = 64) -> int:
     return total
 
 
-def run_structurize(fn: Function) -> Dict[str, int]:
+def run_structurize(fn: Function,
+                    am: Optional[AnalysisManager] = None) -> Dict[str, int]:
+    am = ensure_manager(am)
     # dead blocks first: unreachable cycles/branches must not drive
     # splitting or side-entry analysis
     fn.drop_unreachable()
-    stats = {"latches_merged": merge_latches(fn)}
+    stats = {"latches_merged": merge_latches(fn, am)}
     stats["nodes_split"] = split_irreducible(fn)
-    stats["side_entries_dup"] = fix_side_entries(fn)
+    stats["side_entries_dup"] = fix_side_entries(fn, am=am)
     if stats["side_entries_dup"]:
         # duplication may expose further irreducible shapes: re-split
         stats["nodes_split"] += split_irreducible(fn)

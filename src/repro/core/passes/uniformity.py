@@ -124,15 +124,30 @@ class UniformityInfo:
 # --------------------------------------------------------------------------
 
 def run_uniformity(fn: Function, tti: VortexTTI,
-                   *, kernel_params_uniform: bool = False) -> UniformityInfo:
+                   *, kernel_params_uniform: bool = False,
+                   am=None, seed: Optional[UniformityInfo] = None
+                   ) -> UniformityInfo:
     """Fixpoint uniformity propagation.
 
     A value is divergent if (a) the TTI seeds it so, (b) any operand is
     divergent (def-use propagation), or (c) it loads a slot whose stores are
     divergent in value or control (sync/control dependence through our
     phi-replacement slots).  Everything else is uniform.
+
+    ``am`` (optional AnalysisManager) supplies memoized control dependence.
+    ``seed`` warm-starts the lattice from a previous run's result: the
+    lattice is monotone toward "divergent", so restarting from prior state
+    re-converges in one sweep when (almost) nothing changed.  Sound for any
+    IR edit — a stale-divergent entry is merely conservative — so callers
+    use it when instructions changed in place but results should carry
+    over (the AnalysisManager skips the run entirely for attrs-only edits).
     """
     info = UniformityInfo()
+    if seed is not None:
+        info.divergent_values |= seed.divergent_values
+        info.divergent_slots |= seed.divergent_slots
+        info.divergent_exec |= seed.divergent_exec
+        info.divergent_branches |= seed.divergent_branches
     div_vals = info.divergent_values
     div_slots = info.divergent_slots
     div_exec = info.divergent_exec
@@ -154,7 +169,7 @@ def run_uniformity(fn: Function, tti: VortexTTI,
             u = True
         param_uniform[id(p)] = u
 
-    cdeps = graph.control_deps(fn)
+    cdeps = am.control_deps(fn) if am is not None else graph.control_deps(fn)
     block_of: Dict[int, Block] = {}
     branch_of_block: Dict[int, Instr] = {}
     for b in fn.blocks:

@@ -99,6 +99,11 @@ def lower_selects(fn: Function, info: UniformityInfo, tti: VortexTTI) -> Dict[st
                 break
             if changed:
                 break
+    if stats["cmov"]:
+        # in-place opcode rewrite: CFG untouched, dataflow shape unchanged
+        # for uniformity (CMOV result uniformity == SELECT's), but the
+        # decoded interpreter must re-decode
+        fn.bump_version(cfg=False, dataflow=False)
     return stats
 
 
@@ -158,3 +163,4 @@ def _reify_select(fn: Function, b: Block, pos: int, sel: Instr) -> None:
     for blk in fn.blocks:
         for ins in blk.instrs:
             ins.operands = [newr if o is r else o for o in ins.operands]
+    fn.bump_version()   # diamond reified: edges + operand remap

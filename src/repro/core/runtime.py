@@ -23,16 +23,52 @@ spawns the grid (here: schedules the interpreter or the JAX backend).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
 from .interp import ExecStats, LaunchParams, launch as interp_launch
+from .passes.pipeline import CompiledKernel, PassConfig, run_pipeline
 from .simx import CycleModel
 from .vir import Function, Module, Ty
 
 _TY_DTYPE = {Ty.I32: np.int32, Ty.F32: np.float32, Ty.BOOL: np.bool_}
+
+
+# --------------------------------------------------------------------------
+# Compile cache: repeated launches of the same @kernel under the same
+# PassConfig + warp configuration skip the front-end build AND the whole
+# pass pipeline.  Keyed by (handle identity, PassConfig fields, warp
+# size); values keep a strong reference to the handle so its id() can
+# never be recycled.
+# --------------------------------------------------------------------------
+
+_COMPILE_CACHE: Dict[Tuple, Tuple[Any, CompiledKernel]] = {}
+
+
+def compile_kernel(kernel_handle, config: Optional[PassConfig] = None,
+                   *, warp_size: int = 32,
+                   use_cache: bool = True) -> CompiledKernel:
+    """Build + run the pass pipeline for a front-end @kernel handle,
+    memoized on (kernel, PassConfig, warp config)."""
+    config = config or PassConfig()
+    key = (id(kernel_handle), kernel_handle.name,
+           dataclasses.astuple(config), warp_size)
+    if use_cache:
+        hit = _COMPILE_CACHE.get(key)
+        if hit is not None:
+            return hit[1]
+    module = kernel_handle.build(None)
+    ck = run_pipeline(module, kernel_handle.name, config)
+    if use_cache:
+        _COMPILE_CACHE[key] = (kernel_handle, ck)
+    return ck
+
+
+def clear_compile_cache() -> None:
+    _COMPILE_CACHE.clear()
 
 
 @dataclass
@@ -114,6 +150,18 @@ class Runtime:
                               globals_mem=self.globals_mem)
         self.last_stats = stats
         return stats
+
+    def launch_kernel(self, kernel_handle, *, grid: int, block: int,
+                      config: Optional[PassConfig] = None,
+                      scalar_args: Optional[Dict[str, Any]] = None
+                      ) -> ExecStats:
+        """Compile (memoized via the module compile cache) and launch a
+        front-end @kernel handle in one call — the hot path for repeated
+        launches of the same kernel."""
+        ck = compile_kernel(kernel_handle, config,
+                            warp_size=self.warp_size)
+        return self.launch(ck.fn, grid=grid, block=block,
+                           scalar_args=scalar_args)
 
     def cycles(self, stats: Optional[ExecStats] = None) -> float:
         st = stats or self.last_stats

@@ -230,6 +230,8 @@ class Instr:
 
     def replace_operand(self, old: Any, new: Any) -> None:
         self.operands = [new if o is old else o for o in self.operands]
+        if self.parent is not None and self.parent.parent is not None:
+            self.parent.parent.bump_version()
 
     def short(self) -> str:
         parts = []
@@ -270,11 +272,15 @@ class Block:
     def append(self, instr: Instr) -> Instr:
         instr.parent = self
         self.instrs.append(instr)
+        if self.parent is not None:
+            self.parent.bump_version()
         return instr
 
     def insert(self, idx: int, instr: Instr) -> Instr:
         instr.parent = self
         self.instrs.insert(idx, instr)
+        if self.parent is not None:
+            self.parent.bump_version()
         return instr
 
     @property
@@ -304,6 +310,42 @@ class Function:
         self.attrs: Dict[str, Any] = {}
         # Set by func-arg analysis (Algorithm 1): proved-uniform returns.
         self.ret_uniform: bool = False
+        # IR version counters (perf substrate). Monotonic; bumped on every
+        # mutation. Consumers key caches on them:
+        #   ir_version  — any change at all (interpreter decode cache);
+        #   cfg_version — block/edge structure changes (CFG analyses);
+        #   df_version  — dataflow-relevant changes (uniformity analysis).
+        # Block.append/insert and the Function mutators below bump
+        # automatically; passes doing direct list surgery (b.instrs = ...)
+        # must call bump_version themselves, declaring what they
+        # invalidated via the cfg/dataflow flags.
+        self._ir_version: int = 0
+        self._cfg_version: int = 0
+        self._df_version: int = 0
+
+    # -- versioning --------------------------------------------------------
+    @property
+    def ir_version(self) -> int:
+        return self._ir_version
+
+    @property
+    def cfg_version(self) -> int:
+        return self._cfg_version
+
+    @property
+    def df_version(self) -> int:
+        return self._df_version
+
+    def bump_version(self, *, cfg: bool = True, dataflow: bool = True) -> None:
+        """Record a mutation. cfg=False: block structure/edges unchanged
+        (CFG analyses stay valid). dataflow=False: neither values nor
+        control conditions changed (uniformity stays valid) — e.g. an
+        attrs-only tweak or instruction reordering."""
+        self._ir_version += 1
+        if cfg:
+            self._cfg_version += 1
+        if dataflow:
+            self._df_version += 1
 
     # -- structure ---------------------------------------------------------
     @property
@@ -314,6 +356,7 @@ class Function:
         b = Block(name)
         b.parent = self
         self.blocks.append(b)
+        self.bump_version()
         return b
 
     def new_slot(self, name: str, ty: Ty, uniform_hint: bool = False) -> Slot:
@@ -342,6 +385,8 @@ class Function:
             work.extend(b.successors())
         removed = [b for b in self.blocks if id(b) not in seen]
         self.blocks = [b for b in self.blocks if id(b) in seen]
+        if removed:
+            self.bump_version()
         return len(removed)
 
     def dump(self) -> str:

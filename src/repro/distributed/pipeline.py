@@ -11,7 +11,7 @@ Tested on a host-device mesh in tests/test_distributed.py.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,18 +19,25 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
-def gpipe_forward(layer_fn: Callable, n_microbatches: int, axis: str = "pipe"):
+def gpipe_forward(layer_fn: Callable, n_microbatches: int, axis: str = "pipe",
+                  axis_size: Optional[int] = None):
     """Build a pipelined forward: params_stage (L/P, ...), x (M, mb, ...).
 
     layer_fn(stage_params, x) -> x   (one stage's layers applied)
     Returns fn(stage_params, x_microbatches) -> y_microbatches, evaluated
     under shard_map with the `pipe` axis mapped.
+
+    ``axis_size`` must be the static mesh-axis extent: the schedule length
+    and the ppermute ring are Python-level constructs (jax.lax.axis_size
+    only exists on newer jax, and a traced size could not drive them
+    anyway).  make_pipelined_apply fills it in from the mesh.
     """
 
     def staged(params_stage, xs):
         # shard_map keeps the mapped axis with local size 1: drop it
         params_stage = jax.tree.map(lambda a: a[0], params_stage)
-        P_ = jax.lax.axis_size(axis)
+        P_ = axis_size if axis_size is not None \
+            else jax.lax.psum(1, axis)
         idx = jax.lax.axis_index(axis)
         M = xs.shape[0]
         T = M + P_ - 1          # schedule length
@@ -65,7 +72,8 @@ def gpipe_forward(layer_fn: Callable, n_microbatches: int, axis: str = "pipe"):
 
 def make_pipelined_apply(mesh: Mesh, layer_fn: Callable,
                          n_microbatches: int, axis: str = "pipe"):
-    staged = gpipe_forward(layer_fn, n_microbatches, axis)
+    staged = gpipe_forward(layer_fn, n_microbatches, axis,
+                           axis_size=mesh.shape[axis])
     return shard_map(
         staged, mesh=mesh,
         in_specs=(P(axis), P(None)),

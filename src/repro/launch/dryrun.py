@@ -100,6 +100,18 @@ def collective_bytes(hlo_text: str) -> dict:
     return {"bytes": out, "counts": counts}
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() across jax versions: older jax returns a
+    flat dict, newer jax a single-element list of dicts (one per
+    computation)."""
+    c = compiled.cost_analysis()
+    if c is None:
+        return {}
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return dict(c)
+
+
 def _mem_analysis(compiled) -> dict:
     try:
         ma = compiled.memory_analysis()
@@ -177,7 +189,7 @@ def run_cell(arch: str, shape: str, mesh_spec: str, out_dir: Path,
         compiled = lowered.compile()
         t_compile = time.time() - t0
 
-    cost = dict(compiled.cost_analysis() or {})
+    cost = _cost_dict(compiled)
     mem = _mem_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
 
@@ -247,7 +259,7 @@ def _cost_of(cfg2, shape: str, mesh, kind: str) -> dict:
             fn, _ = jit_decode_step(model, mesh, shape)
             lowered = fn.lower(params_abs, input_specs(cfg2, shape))
         compiled = lowered.compile()
-    cost = dict(compiled.cost_analysis() or {})
+    cost = _cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -35,6 +35,7 @@ def test_scan_body_counted_once_probe():
     """Documents the XLA behavior that motivates launch/recost.py."""
     import jax
     import jax.numpy as jnp
+    from repro.launch.dryrun import _cost_dict
     A = jax.ShapeDtypeStruct((128, 128), jnp.float32)
 
     def scanned(a):
@@ -46,7 +47,7 @@ def test_scan_body_counted_once_probe():
     def single(a):
         return a @ a
 
-    c_scan = jax.jit(scanned).lower(A).compile().cost_analysis()["flops"]
-    c_one = jax.jit(single).lower(A).compile().cost_analysis()["flops"]
+    c_scan = _cost_dict(jax.jit(scanned).lower(A).compile())["flops"]
+    c_one = _cost_dict(jax.jit(single).lower(A).compile())["flops"]
     assert abs(c_scan - c_one) / c_one < 0.05, \
         "XLA now multiplies scan trip counts: drop launch/recost.py!"

@@ -16,6 +16,11 @@ from pathlib import Path
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 sys.path.insert(0, str(Path(__file__).parent / "kernels"))
