@@ -8,10 +8,21 @@ before/after of the analysis cache itself: full-ladder ``run_pipeline``
 with ``use_analysis_cache=False`` (the original recompute-everything
 behavior) vs the default cached pipeline, on identical fresh modules.
 The compiled IR is asserted identical in tests/test_perf_caches.py.
+
+It also measures the persistent disk compile cache (core/runtime.py):
+two FRESH interpreter processes compile the same kernels into a fresh
+cache directory — the second process must hit the disk cache for every
+kernel and compile measurably faster (the PR acceptance gate).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
+from pathlib import Path
 from typing import Dict
 
 import numpy as np
@@ -21,6 +32,45 @@ from repro.volt_bench import BENCHES
 
 BASE = ABLATION_LADDER[0]
 FULL = ABLATION_LADDER[-1]
+
+DISK_NAMES = ["vecadd", "sgemm", "cfd_like", "blackscholes", "reduce0",
+              "spmv", "psort", "kmeans"]
+
+_DISK_SNIPPET = """
+import json, sys, time
+from repro.core import runtime
+from repro.volt_bench import BENCHES
+names = sys.argv[1].split(",")
+t0 = time.perf_counter()
+for n in names:
+    runtime.compile_kernel(BENCHES[n].handle)
+dt = time.perf_counter() - t0
+print(json.dumps({"ms": dt * 1e3, **runtime.DISK_CACHE_STATS}))
+"""
+
+
+def run_disk() -> Dict[str, float]:
+    """Cold vs warm cross-process compile through the disk cache."""
+    from repro.core import runtime as _rt   # repro may be a namespace pkg
+    src = str(Path(_rt.__file__).resolve().parents[2])
+    with tempfile.TemporaryDirectory(prefix="volt_ck_") as tmp:
+        env = dict(os.environ)
+        env["VOLT_CACHE_DIR"] = tmp
+        env["VOLT_DISK_CACHE"] = "1"
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+        def one() -> Dict:
+            out = subprocess.run(
+                [sys.executable, "-c", _DISK_SNIPPET, ",".join(DISK_NAMES)],
+                env=env, capture_output=True, text=True, check=True)
+            return json.loads(out.stdout.strip().splitlines()[-1])
+        cold = one()
+        warm = one()
+    return {"cold_ms": cold["ms"], "warm_ms": warm["ms"],
+            "speedup": cold["ms"] / warm["ms"],
+            "second_process_hits": warm["hits"],
+            "second_process_misses": warm["misses"],
+            "kernels": len(DISK_NAMES)}
 
 
 def _time_pipeline(handle, cfg, reps: int = 3, *, cache: bool = True) -> float:
@@ -76,10 +126,19 @@ def main() -> Dict:
     print(f"analysis-cache speedup on the full ladder: "
           f"{total_speedup:.2f}x total "
           f"(geomean {agg['geomean_cache_speedup']:.2f}x)")
+    disk = run_disk()
+    print(f"\npersistent disk cache ({disk['kernels']} kernels, two fresh "
+          f"processes): cold {disk['cold_ms']:.0f}ms -> warm "
+          f"{disk['warm_ms']:.0f}ms ({disk['speedup']:.2f}x, "
+          f"{disk['second_process_hits']} hits / "
+          f"{disk['second_process_misses']} misses in process 2)")
     print(f"compile_time/geomean,0,ratio={geo:.4f}")
     print(f"compile_time/cache_speedup,0,speedup={total_speedup:.4f}")
-    return {"per_bench": res, "aggregate": {**agg,
-                                            "suite_speedup": total_speedup}}
+    print(f"compile_time/disk_cache,0,speedup={disk['speedup']:.4f};"
+          f"hits={disk['second_process_hits']}")
+    return {"per_bench": res,
+            "aggregate": {**agg, "suite_speedup": total_speedup},
+            "disk": disk}
 
 
 if __name__ == "__main__":

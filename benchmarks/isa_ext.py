@@ -11,8 +11,8 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import interp
-from repro.core.passes.pipeline import ABLATION_LADDER, run_pipeline
+from repro.core import runtime
+from repro.core.passes.pipeline import ABLATION_LADDER
 from repro.core.simx import CycleModel
 from repro.volt_bench import BENCHES
 
@@ -26,13 +26,17 @@ def _run_one(name: str, seed: int = 11):
     rng = np.random.default_rng(seed)
     bufs0, scalars, params = b.make(rng)
     expect = b.ref(bufs0, scalars)
-    mod = b.handle.build(None)
-    ck = run_pipeline(mod, b.handle.name, FULL)
-    bufs = {k: v.copy() for k, v in bufs0.items()}
-    st = interp.launch(ck.fn, bufs, params, scalar_args=scalars)
-    for k in bufs:
-        assert np.allclose(bufs[k], expect[k], atol=b.atol, rtol=1e-3), \
-            f"{name}: {k} mismatch"
+    # Runtime.launch_kernel: memoized compile (memory + disk), so the
+    # repeated hw/sw pair runs never rebuild the pipeline
+    rt = runtime.Runtime(warp_size=params.warp_size)
+    for k, v in bufs0.items():
+        rt.create_buffer(k, v)
+    st = rt.launch_kernel(b.handle, grid=params.grid,
+                          block=params.local_size, config=FULL,
+                          scalar_args=scalars)
+    for k in bufs0:
+        assert np.allclose(rt.read_buffer(k), expect[k], atol=b.atol,
+                           rtol=1e-3), f"{name}: {k} mismatch"
     return st
 
 

@@ -1,15 +1,39 @@
 """Roofline summary benchmark: reads dry-run artifacts and prints the
-per-cell three-term analysis (one row per paper-table cell)."""
+per-cell three-term analysis (one row per paper-table cell).
+
+The dry-run artifacts are the compile products of this driver: they are
+built once (``--build`` here, or ``python -m repro.launch.dryrun --all``)
+and persist under ``artifacts/dryrun``, so repeated benchmark-ladder runs
+skip the rebuild the same way the kernel drivers skip theirs through the
+runtime compile cache."""
 from __future__ import annotations
 
+import os
+import sys
 from pathlib import Path
+
+
+def _build_artifacts() -> bool:
+    """Generate the dry-run artifacts in-process (cached on disk)."""
+    try:
+        from repro.launch import dryrun
+        dryrun.main(["--all"])
+        return True
+    except Exception as e:          # jax/backend-dependent: stay optional
+        print(f"roofline/none,0,build_failed={type(e).__name__}")
+        return False
 
 
 def main() -> None:
     art = Path("artifacts/dryrun")
-    if not art.exists() or not list(art.glob("*__pod.json")):
+    missing = not art.exists() or not list(art.glob("*__pod.json"))
+    if missing and ("--build" in sys.argv[1:]
+                    or os.environ.get("VOLT_ROOFLINE_BUILD") == "1"):
+        missing = not _build_artifacts() or \
+            not list(art.glob("*__pod.json"))
+    if missing:
         print("roofline/none,0,missing=run 'python -m repro.launch.dryrun"
-              " --all' first")
+              " --all' (or pass --build / set VOLT_ROOFLINE_BUILD=1) first")
         return
     from repro.launch.roofline import load_rows
     for mesh in ("pod", "multipod"):

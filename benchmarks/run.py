@@ -7,23 +7,39 @@ markdown tables above them).  Sections:
   isa_ext        : Fig 9 (vote/shuffle/aggregated-atomic ISA extensions)
   sharedmem      : Fig 10 (shared-memory mapping under cache configs)
   compile_time   : SS5.2 compile-time overhead geomean + analysis-cache
-                   before/after
+                   before/after + persistent-disk-cache second process
   interp_speed   : decoded-interpreter vs instruction-at-a-time executor
+  interp_speed_batched : workgroup-batched lockstep executor on
+                   multi-warp workgroups
   kernels        : Pallas kernel vs jnp-oracle timings (CPU interpret)
   roofline       : per (arch x shape x mesh) three-term roofline rows
 
-Running the perf sections (interp_speed / compile_time) also writes a
-machine-readable ``BENCH_perf.json`` next to this file with the measured
-speedups, so CI / later sessions can diff regressions:
+Running the perf sections also writes a machine-readable
+``BENCH_perf.json`` next to this file with the measured speedups, so CI /
+later sessions can diff regressions:
 
-  python benchmarks/run.py            # everything
-  python benchmarks/run.py perf      # just the two perf sections + JSON
+  python benchmarks/run.py                # everything
+  python benchmarks/run.py perf          # just the perf sections + JSON
+  python benchmarks/run.py perf --check  # measure fresh and exit non-zero
+                                          # on a >20% regression against
+                                          # the committed BENCH_perf.json
 """
 import json
 import sys
 from pathlib import Path
 
 PERF_JSON = Path(__file__).resolve().parent.parent / "BENCH_perf.json"
+
+# speedup-type aggregates (higher is better) compared by ``--check``;
+# a fresh value below (1 - REGRESSION_TOLERANCE) x committed fails
+CHECKED_METRICS = [
+    ("interp_speed", "suite_speedup"),
+    ("interp_speed", "geomean_speedup"),
+    ("interp_speed_batched", "suite_speedup"),
+    ("interp_speed_batched", "geomean_speedup"),
+    ("compile_time", "suite_speedup"),
+]
+REGRESSION_TOLERANCE = 0.20
 
 
 def _write_perf_json(perf: dict) -> None:
@@ -38,6 +54,23 @@ def _write_perf_json(perf: dict) -> None:
     print(f"\n[run] wrote {PERF_JSON}", flush=True)
 
 
+def check_regressions(fresh: dict, committed: dict,
+                      tolerance: float = REGRESSION_TOLERANCE) -> list:
+    """Compare fresh aggregate speedups against the committed baseline;
+    returns a list of human-readable regression descriptions."""
+    failures = []
+    for section, metric in CHECKED_METRICS:
+        base = committed.get(section, {}).get("aggregate", {}).get(metric)
+        new = fresh.get(section, {}).get("aggregate", {}).get(metric)
+        if base is None or new is None:
+            continue
+        if new < base * (1.0 - tolerance):
+            failures.append(
+                f"{section}.{metric}: {new:.3f} vs committed {base:.3f} "
+                f"({new / base - 1:+.1%}, tolerance -{tolerance:.0%})")
+    return failures
+
+
 def main() -> None:
     from benchmarks import (compile_time, divergence_opt, interp_speed,
                             isa_ext, kernels_bench, roofline_bench,
@@ -48,11 +81,15 @@ def main() -> None:
         ("sharedmem", sharedmem.main),
         ("compile_time", compile_time.main),
         ("interp_speed", interp_speed.main),
+        ("interp_speed_batched", interp_speed.main_batched),
         ("kernels", kernels_bench.main),
         ("roofline", roofline_bench.main),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    perf_sections = {"interp_speed", "compile_time"}
+    args = [a for a in sys.argv[1:]]
+    check = "--check" in args
+    args = [a for a in args if a != "--check"]
+    only = args[0] if args else None
+    perf_sections = {"interp_speed", "interp_speed_batched", "compile_time"}
     perf: dict = {}
     for name, fn in sections:
         if only == "perf":
@@ -64,7 +101,27 @@ def main() -> None:
         result = fn()
         if name in perf_sections and isinstance(result, dict):
             perf[name] = result
-    if perf:
+    if not perf:
+        return
+    if check:
+        committed = {}
+        if PERF_JSON.exists():
+            try:
+                committed = json.loads(PERF_JSON.read_text())
+            except Exception:
+                committed = {}
+        failures = check_regressions(perf, committed)
+        if failures:
+            print("\n[run] PERF REGRESSION (>"
+                  f"{REGRESSION_TOLERANCE:.0%} below committed "
+                  f"{PERF_JSON.name}):", flush=True)
+            for f in failures:
+                print(f"  {f}", flush=True)
+            sys.exit(1)
+        print(f"\n[run] perf check OK: no metric more than "
+              f"{REGRESSION_TOLERANCE:.0%} below {PERF_JSON.name} "
+              f"(committed file left untouched)", flush=True)
+    else:
         _write_perf_json(perf)
 
 

@@ -12,8 +12,8 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import interp
-from repro.core.passes.pipeline import ABLATION_LADDER, run_pipeline
+from repro.core import runtime
+from repro.core.passes.pipeline import ABLATION_LADDER
 from repro.core.simx import CycleModel
 from repro.volt_bench import BENCHES
 
@@ -33,10 +33,13 @@ def run(seed: int = 13) -> Dict[str, Dict[str, float]]:
         b = BENCHES[name]
         rng = np.random.default_rng(seed)
         bufs0, scalars, params = b.make(rng)
-        mod = b.handle.build(None)
-        ck = run_pipeline(mod, b.handle.name, FULL)
-        bufs = {k: v.copy() for k, v in bufs0.items()}
-        st = interp.launch(ck.fn, bufs, params, scalar_args=scalars)
+        # memoized compile via the device runtime (ROADMAP follow-up)
+        rt = runtime.Runtime(warp_size=params.warp_size)
+        for k, v in bufs0.items():
+            rt.create_buffer(k, v)
+        st = rt.launch_kernel(b.handle, grid=params.grid,
+                              block=params.local_size, config=FULL,
+                              scalar_args=scalars)
         out[name] = {k: m.cycles(st) for k, m in CONFIGS.items()}
     return out
 

@@ -583,6 +583,68 @@ _PLAIN_OPS = (BINOPS | UNOPS |
                Op.SPLIT, Op.TMC_SAVE})
 
 
+# --------------------------------------------------------------------------
+# Decode-level slot fusion.
+#
+# The front-ends build LLVM-before-mem2reg style IR: every mutable kernel
+# variable round-trips through a stack slot, so straight-line runs are full
+# of slot_store -> slot_load chains.  Within one run the thread mask cannot
+# change, which makes three rewrites exact:
+#
+#   * stores to slots that are never loaded anywhere in the function are
+#     dead traffic — dropped;
+#   * a store overwritten by a later store in the same run with no
+#     intervening load of that slot is dead — dropped (the masked merge
+#     where(mask, v2, where(mask, v1, old)) == where(mask, v2, old));
+#   * an adjacent store;load pair collapses into one handler, and repeated
+#     loads of an unmodified slot alias the first load's register.
+#
+# ExecStats / fuel keep counting the ORIGINAL instruction mix (n, by_op are
+# computed before fusion), so the decoded and legacy executors stay
+# bit-identical; only the handler table shrinks.  The fused program lives
+# in the same ir_version-keyed decode cache, so any IR mutation re-fuses.
+# --------------------------------------------------------------------------
+
+def _fuse_run(instrs: Sequence[Instr], loaded_slots) -> Tuple[list, int, dict]:
+    n = len(instrs)
+    bo: Counter = Counter()
+    for i in instrs:
+        bo[i.op.value] += 1
+    items: List[Any] = []
+    last_store: Dict[int, int] = {}   # slot id -> items idx of unconsumed store
+    last_load: Dict[int, Reg] = {}    # slot id -> result reg of live load
+    for i in instrs:
+        op = i.op
+        if op is Op.SLOT_STORE:
+            sid = id(i.operands[0])
+            if sid not in loaded_slots:
+                continue                      # dead slot: never loaded at all
+            prev = last_store.get(sid)
+            if prev is not None:
+                items[prev] = None            # dead store: overwritten unread
+            last_store[sid] = len(items)
+            last_load.pop(sid, None)
+            items.append(("store", i))
+        elif op is Op.SLOT_LOAD:
+            sid = id(i.operands[0])
+            src = last_load.get(sid)
+            if src is not None:
+                items.append(("alias", i, src))
+            else:
+                prev = last_store.get(sid)
+                if (prev is not None and prev == len(items) - 1
+                        and items[prev] is not None
+                        and items[prev][0] == "store"):
+                    items[prev] = ("store_load", items[prev][1], i)
+                else:
+                    items.append(("load", i))
+                last_store.pop(sid, None)     # store observed: no longer dead
+            last_load[sid] = i.result
+        else:
+            items.append(("instr", i))
+    return [it for it in items if it is not None], n, dict(bo)
+
+
 class _SplitDesc:
     """Decoded vx_split: consulted by the following CBR."""
     __slots__ = ("gcond", "attrs", "tok")
@@ -594,10 +656,11 @@ class _SplitDesc:
 
 
 class _DState:
-    """Per-activation mutable state (one warp, or one device-fn call)."""
+    """Per-activation mutable state (one warp, one device-fn call, or —
+    with a (n_warps, W) mask — one batched workgroup activation)."""
     __slots__ = ("env", "slots", "args", "argmap", "mem_arrs", "mask",
-                 "active", "stack", "pending", "ret", "intr", "ctx", "mem",
-                 "stats", "fuel")
+                 "active", "act_rows", "stack", "pending", "ret", "intr",
+                 "ctx", "mem", "stats", "fuel", "warp_ctxs")
 
     def __init__(self, prog: "_DProgram", argmap: Dict[int, Any],
                  mask: np.ndarray, ctx: _WarpCtx, mem: DeviceMemory,
@@ -608,7 +671,13 @@ class _DState:
         self.argmap = argmap
         self.mem_arrs = [mem.resolve(v, argmap) for v in prog.memrefs]
         self.mask = mask
-        self.active = bool(mask.any())
+        if mask.ndim == 2:             # batched workgroup activation:
+            ar = mask.any(axis=1)      # active = #warps with a live mask,
+            self.act_rows = ar         # kept in sync by the batched nodes
+            self.active = int(ar.sum())
+        else:
+            self.act_rows = None
+            self.active = bool(mask.any())
         self.stack: List[Any] = []     # IPDOM entries: (tok, saved, else_bi, else_mask)
         self.pending: Optional[_SplitDesc] = None
         self.ret: Any = None
@@ -617,6 +686,7 @@ class _DState:
         self.mem = mem
         self.stats = stats
         self.fuel = fuel
+        self.warp_ctxs: Optional[List[_WarpCtx]] = None
 
 
 class _DBlock:
@@ -644,6 +714,10 @@ def _decode(fn: Function, W: int, strict: bool) -> "_DProgram":
 
 
 class _DProgram:
+    # ops fused into straight-line runs; _BProgram shrinks this set because
+    # warp-ordering-sensitive ops must sit at batched node boundaries
+    FUSEABLE = _PLAIN_OPS
+
     def __init__(self, fn: Function, W: int, strict: bool) -> None:
         self.fn = fn
         self.W = W
@@ -655,9 +729,12 @@ class _DProgram:
         self.memrefs: List[Value] = []
         self._memref_idx: Dict[int, int] = {}
         self.slot_meta: List[Slot] = []
+        self.loaded_slots: set = set()
         for i in fn.instructions():
             if i.result is not None:
                 self.reg_idx.setdefault(id(i.result), len(self.reg_idx))
+            if i.op is Op.SLOT_LOAD:
+                self.loaded_slots.add(id(i.operands[0]))
             for o in i.operands:
                 if isinstance(o, Reg):
                     self.reg_idx.setdefault(id(o), len(self.reg_idx))
@@ -667,9 +744,29 @@ class _DProgram:
                         self.slot_meta.append(o)
         self.n_regs = len(self.reg_idx)
         self.n_slots = len(self.slot_idx)
+        # fusion telemetry (benchmarks / tests): dynamic-table shrinkage
+        self.n_run_instrs = 0
+        self.n_run_handlers = 0
         self._bidx = {id(b): k for k, b in enumerate(fn.blocks)}
         self.blocks: List[_DBlock] = [self._decode_block(b)
                                       for b in fn.blocks]
+
+    # -- run partition -----------------------------------------------------
+    def _partition(self, b: Block) -> List[Tuple[str, Any]]:
+        """Split a block into fused straight-line runs and control points."""
+        parts: List[Tuple[str, Any]] = []
+        run: List[Instr] = []
+        for i in b.instrs:
+            if i.op in self.FUSEABLE:
+                run.append(i)
+            else:
+                if run:
+                    parts.append(("run", run))
+                    run = []
+                parts.append(("ctrl", i))
+        if run:
+            parts.append(("run", run))
+        return parts
 
     # -- decode helpers ----------------------------------------------------
     def _memref(self, v: Value) -> int:
@@ -704,42 +801,60 @@ class _DProgram:
     # -- block decode ------------------------------------------------------
     def _decode_block(self, b: Block) -> _DBlock:
         nodes: List[Any] = []
-        run: List[Any] = []
-        run_ops: Counter = Counter()
+        for kind, payload in self._partition(b):
+            if kind == "run":
+                items, n, bo = _fuse_run(payload, self.loaded_slots)
+                hs = tuple(self._emit_item(it) for it in items)
+                self.n_run_instrs += n
+                self.n_run_handlers += len(hs)
 
-        def flush() -> None:
-            if not run:
-                return
-            hs = tuple(run)
-            n = len(hs)
-            bo = dict(run_ops)
-
-            def run_node(st, hs=hs, n=n, bo=bo):
-                f = st.fuel
-                f[0] -= n
-                if f[0] <= 0:
-                    raise ExecError("out of fuel (possible infinite loop)")
-                if st.active:
-                    stt = st.stats
-                    stt.instrs += n
-                    stt.by_op.update(bo)
-                for h in hs:
-                    h(st)
-                return None
-            nodes.append(run_node)
-            run.clear()
-            run_ops.clear()
-
-        for i in b.instrs:
-            op = i.op
-            if op in _PLAIN_OPS:
-                run.append(self._plain(i))
-                run_ops[op.value] += 1
+                def run_node(st, hs=hs, n=n, bo=bo):
+                    f = st.fuel
+                    f[0] -= n
+                    if f[0] <= 0:
+                        raise ExecError(
+                            "out of fuel (possible infinite loop)")
+                    if st.active:
+                        stt = st.stats
+                        stt.instrs += n
+                        stt.by_op.update(bo)
+                    for h in hs:
+                        h(st)
+                    return None
+                nodes.append(run_node)
             else:
-                flush()
-                nodes.append(self._control(i, b))
-        flush()
+                nodes.append(self._control(payload, b))
         return _DBlock(tuple(nodes), b.label)
+
+    # -- fused-item dispatch ----------------------------------------------
+    def _emit_item(self, item):
+        kind = item[0]
+        if kind in ("instr", "store", "load"):
+            return self._plain(item[1])
+        if kind == "alias":
+            ri = self.reg_idx[id(item[1].result)]
+            rj = self.reg_idx[id(item[2])]
+
+            def h(st, ri=ri, rj=rj):
+                st.env[ri] = st.env[rj]
+            return h
+        if kind == "store_load":
+            s_i, l_i = item[1], item[2]
+            si = self.slot_idx[id(s_i.operands[0])]
+            gv = self._getter(s_i.operands[1])
+            ri = self.reg_idx[id(l_i.result)]
+            W = self.W
+
+            def h(st, si=si, gv=gv, ri=ri, W=W):
+                nv = gv(st)
+                arr = st.slots[si]
+                if arr is None:
+                    arr = np.zeros(W, dtype=nv.dtype)
+                arr = np.where(st.mask, nv, arr)
+                st.slots[si] = arr
+                st.env[ri] = arr
+            return h
+        raise ExecError(f"unknown fused item {kind}")
 
     # -- plain (straight-line) handlers -----------------------------------
     def _plain(self, i: Instr):
@@ -1201,6 +1316,805 @@ def _run_decoded(prog: "_DProgram", st: _DState
 
 
 # --------------------------------------------------------------------------
+# Workgroup-batched lockstep executor
+#
+# When a workgroup has several warps, the per-warp coroutines above repeat
+# every interpreter dispatch n_warps times even though the warps usually
+# execute the same straight-line code.  The batched executor runs ALL warps
+# of a workgroup through ONE node walk over (n_warps, W)-shaped ndarrays —
+# one fuel decrement, one bulk ExecStats update and one numpy call per
+# instruction for the whole workgroup — as long as the warps stay in
+# *lockstep*: same decoded position, same IPDOM stack shape, same branch
+# decisions.
+#
+# The state machine:
+#
+#   lockstep --(atomic | print | impure call | cross-warp branch/pred
+#               disagreement)--> desync --(all warps reach the same
+#               top-level barrier with congruent stacks)--> lockstep
+#
+# On desync the 2D state is sliced row-wise into ordinary per-warp _DState
+# objects and execution continues on the SAME decoded program's per-warp
+# node lists (shared node numbering), scheduled warp-by-warp exactly like
+# the oracle.  That makes the fallback trivially parity-correct — and it
+# makes ordering-sensitive ops exact: the oracle runs warp 0's whole
+# barrier segment before warp 1's, so desyncing at the *first* atomic or
+# print of a segment reproduces the oracle's warp-major order for the rest
+# of the segment.  Pure device functions (no barrier/print/atomic
+# transitively) are called in lockstep; a desync inside one is contained:
+# each warp finishes the callee independently and the CALLER resumes in
+# lockstep right after the call.
+#
+# ExecStats stay bit-identical to ``decoded=False``: per instruction the
+# batched nodes count one issue per warp with a live mask (``instrs`` /
+# ``by_op`` scale by the number of active rows), memory statistics count
+# per-warp coalesced lines via a row-offset unique, and the IPDOM depth
+# update mirrors the per-warp rule.
+#
+# FUEL is the one counter that is an UPPER BOUND rather than an exact
+# mirror: ride-along rows and empty-masked callee rows charge fuel for
+# code their per-warp counterparts would not walk (up to ~2x inside
+# diverged regions).  Fuel is an infinite-loop guard, not a reported
+# statistic, and the bound errs toward raising early — a kernel running
+# close to ``params.fuel`` under ``batched=False`` may need a larger
+# budget with the batched executor.
+# --------------------------------------------------------------------------
+
+_DESYNC = object()    # batched control node: cannot continue in lockstep
+_BARRIER = object()   # per-warp node (batched program): top-level barrier
+
+
+def _decode_batched(fn: Function, W: int, strict: bool,
+                    n_warps: int) -> "_BProgram":
+    """Decode ``fn`` for workgroup-batched execution (memoized like
+    _decode, in the same ir_version-keyed cache)."""
+    cache = getattr(fn, "_decode_cache", None)
+    if cache is None:
+        cache = {}
+        fn._decode_cache = cache  # type: ignore[attr-defined]
+    key = (fn.ir_version, W, bool(strict), "wg", n_warps)
+    prog = cache.get(key)
+    if prog is None:
+        for k in [k for k in cache if k[0] != fn.ir_version]:
+            del cache[k]
+        prog = _BProgram(fn, W, bool(strict), n_warps)
+        cache[key] = prog
+    return prog
+
+
+def _lockstep_pure(fn: Function, _seen: Optional[set] = None) -> bool:
+    """True if ``fn`` contains no barrier / print / atomic transitively —
+    i.e. it may be called in lockstep (warp-order effects impossible)."""
+    if _seen is None:
+        _seen = set()
+    if id(fn) in _seen:
+        return True               # optimistic on recursion: ops are checked
+    _seen.add(id(fn))             # on every function of the cycle anyway
+    for i in fn.instructions():
+        if i.op in (Op.BARRIER, Op.PRINT, Op.ATOMIC):
+            return False
+        if i.op is Op.CALL and not _lockstep_pure(i.operands[0], _seen):
+            return False
+    return True
+
+
+class _BProgram(_DProgram):
+    """Decoded program with two parallel node tables sharing one numbering:
+    ``blocks`` (per-warp handlers, the desync fallback) and ``bblocks``
+    (batched (n_warps, W) handlers)."""
+
+    # atomics and prints are warp-order-sensitive: they must be batched
+    # node boundaries so a desync can re-execute them per warp
+    FUSEABLE = _PLAIN_OPS - {Op.ATOMIC, Op.PRINT}
+
+    def __init__(self, fn: Function, W: int, strict: bool,
+                 n_warps: int) -> None:
+        self.n_warps = n_warps
+        # The mixed-split ride-along (see the CBR node) walks single-sided
+        # warps through the other side under an empty mask.  That is
+        # stats- and state-exact EXCEPT for barriers: an empty-mask warp
+        # would "arrive" at a barrier its oracle counterpart never
+        # reaches.  Functions containing barriers therefore desync on
+        # mixed split decisions instead (calls cannot hide barriers from
+        # lockstep: a barrier-containing callee is impure and desyncs).
+        self.has_barrier = any(i.op is Op.BARRIER
+                               for i in fn.instructions())
+        super().__init__(fn, W, strict)
+        self.bblocks: List[_DBlock] = [self._decode_block_batched(b)
+                                       for b in fn.blocks]
+
+    # -- per-warp side: atomics/prints become standalone nodes -------------
+    def _control(self, i: Instr, b: Block):
+        if i.op in (Op.ATOMIC, Op.PRINT):
+            h = self._plain(i)
+            opv = i.op.value
+
+            def solo_node(st, h=h, opv=opv):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if st.active:
+                    stt = st.stats
+                    stt.instrs += 1
+                    stt.by_op[opv] += 1
+                h(st)
+                return None
+            return solo_node
+        if i.op is Op.BARRIER:
+            opv = i.op.value
+
+            def barrier_node(st, opv=opv):
+                f = st.fuel
+                f[0] -= 1
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                if st.active:
+                    stt = st.stats
+                    stt.instrs += 1
+                    stt.by_op[opv] += 1
+                return _BARRIER
+            return barrier_node
+        return super()._control(i, b)
+
+    # -- batched side ------------------------------------------------------
+    def _decode_block_batched(self, b: Block) -> _DBlock:
+        nw = self.n_warps
+        nodes: List[Any] = []
+        for kind, payload in self._partition(b):
+            if kind == "run":
+                items, n, bo = _fuse_run(payload, self.loaded_slots)
+                hs = tuple(self._emit_bitem(it) for it in items)
+                bo_items = tuple(bo.items())
+
+                def brun_node(st, hs=hs, n=n, bo_items=bo_items, nw=nw):
+                    f = st.fuel
+                    f[0] -= n * nw
+                    if f[0] <= 0:
+                        raise ExecError(
+                            "out of fuel (possible infinite loop)")
+                    n_act = st.active
+                    if n_act:
+                        stt = st.stats
+                        stt.instrs += n * n_act
+                        byop = stt.by_op
+                        for k, v in bo_items:
+                            byop[k] += v * n_act
+                    for h in hs:
+                        h(st)
+                    return None
+                nodes.append(brun_node)
+            else:
+                nodes.append(self._bcontrol(payload, b))
+        return _DBlock(tuple(nodes), b.label)
+
+    def _emit_bitem(self, item):
+        kind = item[0]
+        if kind in ("instr", "store", "load"):
+            op = item[1].op
+            if op in (Op.LOAD, Op.STORE, Op.VOTE, Op.SHFL):
+                return self._bplain(item[1])
+        # every other handler (arith, select, slot traffic, intr, split,
+        # tmc_save, fused items) is shape-agnostic: (W,) operands broadcast
+        # against the (n_warps, W) mask/env rows
+        return self._emit_item(item)
+
+    def _bplain(self, i: Instr):
+        op = i.op
+        W = self.W
+        nw = self.n_warps
+        g = self._getter
+        rowoff = np.arange(nw, dtype=np.int64)[:, None]
+        if op is Op.LOAD:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, mi=mi, gi_=gi_, ri=ri, nw=nw, rowoff=rowoff):
+                buf, shared = st.mem_arrs[mi]
+                ix = gi_(st).astype(np.int64)
+                if ix.ndim == 1:
+                    ix = np.broadcast_to(ix, (nw, len(ix)))
+                safe = np.clip(ix, 0, len(buf) - 1)
+                if st.active:
+                    # per-warp coalesced lines: offset each row into its
+                    # own line-id space, then one global unique
+                    nlines = len(buf) // CACHE_LINE_ELEMS + 1
+                    keys = safe // CACHE_LINE_ELEMS + rowoff * nlines
+                    uniq = len(np.unique(keys[st.mask]))
+                    stt = st.stats
+                    if shared:
+                        stt.shared_requests += uniq
+                    else:
+                        stt.mem_requests += uniq
+                    stt.mem_insts += st.active
+                st.env[ri] = buf[safe]
+            return h
+        if op is Op.STORE:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            gv = g(i.operands[2])
+            fname = self.fn.name
+
+            def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname, nw=nw,
+                  rowoff=rowoff):
+                buf, shared = st.mem_arrs[mi]
+                ix = gi_(st).astype(np.int64)
+                if ix.ndim == 1:
+                    ix = np.broadcast_to(ix, (nw, len(ix)))
+                v = gv(st)
+                if v.ndim == 1:
+                    v = np.broadcast_to(v, ix.shape)
+                mask = st.mask
+                if st.active:
+                    a_ix = ix[mask]
+                    if (a_ix < 0).any() or (a_ix >= len(buf)).any():
+                        raise ExecError(
+                            f"OOB store in @{fname}: idx={a_ix} "
+                            f"size={len(buf)}")
+                    nlines = len(buf) // CACHE_LINE_ELEMS + 1
+                    keys = ix // CACHE_LINE_ELEMS + rowoff * nlines
+                    uniq = len(np.unique(keys[mask]))
+                    stt = st.stats
+                    if shared:
+                        stt.shared_requests += uniq
+                    else:
+                        stt.mem_requests += uniq
+                    stt.mem_insts += st.active
+                    # row-major scatter: on a same-instruction address
+                    # clash the highest warp wins, matching the oracle's
+                    # warp-ordered scheduling
+                    buf[a_ix] = v[mask].astype(buf.dtype)
+            return h
+        if op is Op.VOTE:
+            mode = i.operands[0]
+            gv = g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, mode=mode, gv=gv, ri=ri, W=W):
+                mask = st.mask
+                v = np.broadcast_to(gv(st), mask.shape).astype(bool)
+                act = v & mask
+                if mode == "any":
+                    r = np.broadcast_to(act.any(axis=1)[:, None],
+                                        mask.shape)
+                elif mode == "all":
+                    rows = (v | ~mask).all(axis=1)   # empty row -> True
+                    r = np.broadcast_to(rows[:, None], mask.shape)
+                elif mode == "ballot":
+                    powers = np.int64(1) << np.arange(W, dtype=np.int64)
+                    bits = (act.astype(np.int64) * powers).sum(axis=1)
+                    r = np.broadcast_to(bits[:, None],
+                                        mask.shape).astype(np.int32)
+                else:
+                    raise ExecError(f"unknown vote mode {mode}")
+                st.env[ri] = r
+            return h
+        if op is Op.SHFL:
+            gv = g(i.operands[0])
+            gl = g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, gv=gv, gl=gl, ri=ri, W=W, nw=nw):
+                shape = st.mask.shape
+                src = np.broadcast_to(gl(st), shape).astype(np.int64) % W
+                v = np.broadcast_to(gv(st), shape)
+                st.env[ri] = v[np.arange(nw)[:, None], src]
+            return h
+        raise ExecError(f"no batched handler for {op}")
+
+    # -- batched control nodes ---------------------------------------------
+    def _bcontrol(self, i: Instr, b: Block):
+        op = i.op
+        opv = op.value
+        W = self.W
+        nw = self.n_warps
+        g = self._getter
+        fname = self.fn.name
+        if op in (Op.ATOMIC, Op.PRINT):
+            # warp-order-sensitive: always fall back to per-warp execution
+            return lambda st: _DESYNC
+        if op is Op.BR:
+            tb = self._bidx[id(i.operands[0])]
+
+            def bbr_node(st, tb=tb, opv=opv, nw=nw):
+                _bcount(st, opv, nw)
+                st.pending = None
+                return tb
+            return bbr_node
+        if op is Op.CBR:
+            gc_ = g(i.operands[0])
+            then_i = self._bidx[id(i.operands[1])]
+            else_i = self._bidx[id(i.operands[2])]
+            label = b.label
+
+            has_barrier = self.has_barrier
+
+            def bcbr_node(st, gc_=gc_, then_i=then_i, else_i=else_i,
+                          opv=opv, label=label, fname=fname, nw=nw,
+                          has_barrier=has_barrier):
+                mask = st.mask
+                sp = st.pending
+                if sp is not None:
+                    neg = sp.attrs.get("negate", False)
+                    sp_val = np.broadcast_to(sp.gcond(st),
+                                             mask.shape).astype(bool)
+                    cc = ~sp_val if neg else sp_val
+                    then_mask = mask & cc
+                    else_mask = mask & ~cc
+                    ta = then_mask.any(axis=1)
+                    ea = else_mask.any(axis=1)
+                    if not ea.any():
+                        # every warp takes (at most) the then side
+                        st.pending = None
+                        _bcount(st, opv, nw)
+                        st.stack.append((sp.tok, mask, -1, None))
+                        _bset_mask(st, then_mask, ta)
+                        return then_i
+                    if not ta.any():
+                        st.pending = None
+                        _bcount(st, opv, nw)
+                        st.stack.append((sp.tok, mask, -1, None))
+                        _bset_mask(st, else_mask, ea)
+                        return else_i
+                    if has_barrier and not (ta & ea).all():
+                        return _DESYNC   # ride-along is barrier-unsafe
+                    # mixed / both-sided: push a both-style entry for ALL
+                    # warps.  A single-sided warp rides through the other
+                    # side with an empty mask row: empty rows issue zero
+                    # stats and masked stores preserve their lanes, so
+                    # ExecStats and memory state match the per-warp
+                    # schedule bit-for-bit while the workgroup stays in
+                    # lockstep.
+                    st.pending = None
+                    _bcount(st, opv, nw)
+                    st.stack.append((sp.tok, mask, else_i, else_mask))
+                    if (ta & ea).any():
+                        # oracle bumps the depth only for warps that truly
+                        # diverge; the depth value is the shared stack len
+                        stt = st.stats
+                        stt.max_ipdom_depth = max(stt.max_ipdom_depth,
+                                                  len(st.stack))
+                    _bset_mask(st, then_mask, ta)
+                    return then_i
+                # un-split branch: per-warp consensus, cross-warp agreement
+                c = np.broadcast_to(gc_(st), mask.shape).astype(bool)
+                act = mask.any(axis=1)
+                anyc = (c & mask).any(axis=1)
+                allc = (c | ~mask).all(axis=1)
+                if bool(((anyc != allc) & act).any()):
+                    raise UniformityViolation(
+                        f"divergent un-managed branch in %{label} "
+                        f"of @{fname}")
+                taken = np.where(act, anyc, True)
+                if taken.all():
+                    t = True
+                elif not taken.any():
+                    t = False
+                else:
+                    return _DESYNC
+                _bcount(st, opv, nw)
+                return then_i if t else else_i
+            return bcbr_node
+        if op is Op.PRED:
+            gc_ = g(i.operands[0])
+            tok_i = self.reg_idx[id(i.operands[1])]
+            inside_i = self._bidx[id(i.operands[2])]
+            outside_i = self._bidx[id(i.operands[3])]
+            attrs = i.attrs
+
+            def bpred_node(st, gc_=gc_, tok_i=tok_i, inside_i=inside_i,
+                           outside_i=outside_i, attrs=attrs, opv=opv,
+                           nw=nw):
+                mask = st.mask
+                c = np.broadcast_to(gc_(st), mask.shape).astype(bool)
+                if attrs.get("negate", False):
+                    c = ~c
+                new_mask = mask & c
+                nz = new_mask.any(axis=1)
+                if nz.all():
+                    _bcount(st, opv, nw)
+                    _bset_mask(st, new_mask, nz)
+                    return inside_i
+                if not nz.any():
+                    _bcount(st, opv, nw)
+                    tok = st.env[tok_i]
+                    if tok.ndim == 1:
+                        tok = np.broadcast_to(tok, mask.shape)
+                    _bset_mask(st, tok.copy())
+                    return outside_i
+                return _DESYNC              # warps disagree on the loop exit
+            return bpred_node
+        if op is Op.RET:
+            gv = g(i.operands[0]) if i.operands else None
+
+            def bret_node(st, gv=gv, opv=opv, W=W, nw=nw):
+                _bcount(st, opv, nw)
+                if st.stack:
+                    raise ExecError("RET with non-empty IPDOM stack")
+                st.ret = gv(st) if gv is not None \
+                    else np.zeros(W, dtype=np.float32)
+                return -1
+            return bret_node
+        if op is Op.JOIN:
+            tok_i = self.reg_idx[id(i.operands[0])]
+
+            def bjoin_node(st, tok_i=tok_i, opv=opv, nw=nw):
+                _bcount(st, opv, nw)
+                stack = st.stack
+                if not stack or stack[-1][0] != tok_i:
+                    raise ExecError("vx_join token mismatch at runtime")
+                tok, saved, else_bi, else_mask = stack.pop()
+                if else_bi >= 0:
+                    stack.append((tok, saved, -1, None))
+                    _bset_mask(st, else_mask)
+                    return else_bi
+                _bset_mask(st, saved)
+                return None
+            return bjoin_node
+        if op is Op.TMC_RESTORE:
+            tok_i = self.reg_idx[id(i.operands[0])]
+
+            def brestore_node(st, tok_i=tok_i, opv=opv, nw=nw):
+                _bcount(st, opv, nw)
+                tok = st.env[tok_i]
+                if tok.ndim == 1:
+                    tok = np.broadcast_to(tok, st.mask.shape)
+                _bset_mask(st, tok.copy())
+                return None
+            return brestore_node
+        if op is Op.BARRIER:
+            def bbarrier_node(st, opv=opv, nw=nw):
+                # in lockstep every warp arrives at the barrier together:
+                # it synchronizes trivially and execution continues
+                _bcount(st, opv, nw)
+                return None
+            return bbarrier_node
+        if op is Op.CALL:
+            callee: Function = i.operands[0]
+            if not _lockstep_pure(callee):
+                return lambda st: _DESYNC
+            ret_dtype = _TY_DTYPE.get(callee.ret_ty, np.float32)
+            ri = self.reg_idx[id(i.result)] if i.result is not None else -1
+            binders = []
+            for p, a in zip(callee.params, i.operands[1:]):
+                if p.ty is Ty.PTR:
+                    if isinstance(a, (Param, GlobalVar)):
+                        binders.append((p, "ptr", a))
+                    else:
+                        binders.append((p, "bad", a))
+                else:
+                    binders.append((p, "val", g(a)))
+            binders = tuple(binders)
+            strict = self.strict
+
+            def bcall_node(st, callee=callee, binders=binders, ri=ri,
+                           ret_dtype=ret_dtype, opv=opv, W=W, nw=nw,
+                           strict=strict):
+                f = st.fuel
+                f[0] -= nw
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
+                mask = st.mask
+                act = st.act_rows
+                n_act = st.active
+                if n_act == 0:
+                    if ri >= 0:
+                        st.env[ri] = np.zeros(W, dtype=ret_dtype)
+                    return None
+                stt = st.stats
+                stt.instrs += n_act
+                stt.by_op[opv] += n_act
+                cargs: Dict[int, Any] = {}
+                for p, kind, payload in binders:
+                    if kind == "ptr":
+                        arr, _ = st.mem.resolve(payload, st.argmap)
+                        cargs[id(p)] = arr
+                    elif kind == "val":
+                        cargs[id(p)] = payload(st)
+                    else:
+                        raise ExecError("pointer arg must be param/global")
+                cprog = _decode_batched(callee, W, strict, nw)
+                sub = _DState(cprog, cargs, mask.copy(), st.ctx, st.mem,
+                              stt, st.fuel)
+                sub.warp_ctxs = st.warp_ctxs
+                r = _run_lockstep_fn(cprog, sub)
+                r = np.broadcast_to(r, (nw, W)) if r.ndim == 1 else r
+                if not act.all():
+                    # warps that did not issue the call get zeros (oracle:
+                    # an inactive warp skips the call body entirely)
+                    out = np.array(r)
+                    out[~act] = 0
+                    r = out
+                if ri >= 0:
+                    st.env[ri] = r
+                return None
+            return bcall_node
+        raise ExecError(f"unhandled op {op}")
+
+
+def _bcount(st: _DState, opv: str, nw: int) -> None:
+    """Fuel + dynamic-issue accounting for one batched control node: one
+    fuel unit per warp, one issue per warp with a live mask."""
+    f = st.fuel
+    f[0] -= nw
+    if f[0] <= 0:
+        raise ExecError("out of fuel (possible infinite loop)")
+    n_act = st.active
+    if n_act:
+        stt = st.stats
+        stt.instrs += n_act
+        stt.by_op[opv] += n_act
+
+
+def _bset_mask(st: _DState, m: np.ndarray,
+               ar: Optional[np.ndarray] = None) -> None:
+    """Assign a batched mask, keeping the active-row cache in sync."""
+    st.mask = m
+    if ar is None:
+        ar = m.any(axis=1)
+    st.act_rows = ar
+    st.active = int(ar.sum())
+
+
+def _slice_state(bst: _DState, w: int, ctx: _WarpCtx) -> _DState:
+    """Row ``w`` of a batched state as an ordinary per-warp _DState."""
+    st = _DState.__new__(_DState)
+    st.env = [v if (v is None or v.ndim == 1) else v[w] for v in bst.env]
+    st.slots = [v if (v is None or v.ndim == 1) else v[w]
+                for v in bst.slots]
+    st.args = bst.args
+    st.argmap = bst.argmap
+    st.mem_arrs = bst.mem_arrs
+    st.mask = bst.mask[w].copy()
+    st.active = bool(st.mask.any())
+    st.act_rows = None
+    st.stack = [(tok,
+                 saved[w].copy() if saved.ndim == 2 else saved.copy(),
+                 ebi,
+                 None if em is None else
+                 (em[w].copy() if em.ndim == 2 else em.copy()))
+                for (tok, saved, ebi, em) in bst.stack]
+    st.pending = bst.pending
+    st.ret = None
+    st.intr = ctx.intr
+    st.ctx = ctx
+    st.mem = bst.mem
+    st.stats = bst.stats
+    st.fuel = bst.fuel
+    st.warp_ctxs = None
+    return st
+
+
+def _stack_rows(vals: List[Any]) -> Any:
+    """Merge per-warp env/slot entries back into one batched entry."""
+    first = None
+    for v in vals:
+        if v is not None:
+            first = v
+            break
+    if first is None:
+        return None
+    if all(v is vals[0] for v in vals):
+        return vals[0]            # still the shared warp-invariant array
+    rows = [np.zeros_like(first) if v is None else v for v in vals]
+    return np.stack(rows)
+
+
+def _merge_states(bprog: "_BProgram", wstates: List[_DState],
+                  proto: _DState) -> Optional[_DState]:
+    """Re-merge per-warp states into a batched state, or None if the warps
+    are not congruent (different IPDOM shape / pending split)."""
+    s0 = wstates[0]
+    depth = len(s0.stack)
+    for st in wstates:
+        if st.pending is not None or len(st.stack) != depth:
+            return None
+    for lvl in range(depth):
+        if (len({st.stack[lvl][0] for st in wstates}) != 1
+                or len({st.stack[lvl][2] for st in wstates}) != 1):
+            return None
+    bst = _DState.__new__(_DState)
+    bst.env = [_stack_rows([st.env[i] for st in wstates])
+               for i in range(bprog.n_regs)]
+    bst.slots = [_stack_rows([st.slots[i] for st in wstates])
+                 for i in range(bprog.n_slots)]
+    bst.args = proto.args
+    bst.argmap = proto.argmap
+    bst.mem_arrs = proto.mem_arrs
+    bst.mask = np.stack([st.mask for st in wstates])
+    ar = bst.mask.any(axis=1)
+    bst.act_rows = ar
+    bst.active = int(ar.sum())
+    bst.stack = [(s0.stack[lvl][0],
+                  np.stack([st.stack[lvl][1] for st in wstates]),
+                  s0.stack[lvl][2],
+                  None if s0.stack[lvl][3] is None else
+                  np.stack([st.stack[lvl][3] for st in wstates]))
+                 for lvl in range(depth)]
+    bst.pending = None
+    bst.ret = None
+    bst.intr = proto.intr
+    bst.ctx = proto.ctx
+    bst.mem = proto.mem
+    bst.stats = proto.stats
+    bst.fuel = proto.fuel
+    bst.warp_ctxs = proto.warp_ctxs
+    return bst
+
+
+def _resume_decoded(prog: "_BProgram", st: _DState, bi: int, ni: int
+                    ) -> Generator[Any, None, np.ndarray]:
+    """Per-warp execution of a batched program's per-warp node lists,
+    starting at node ``ni`` of block ``bi``.  Top-level barriers yield
+    ``("barrier", bi, ni_after)`` so the workgroup driver can attempt a
+    lockstep re-merge; barriers inside device-function calls yield the
+    plain "barrier" event (never merged)."""
+    blocks = prog.blocks
+    while True:
+        nodes = blocks[bi].nodes
+        nn = len(nodes)
+        jump: Optional[int] = None
+        while ni < nn:
+            node = nodes[ni]
+            ni += 1
+            r = node(st)
+            if r is None:
+                continue
+            if type(r) is int:
+                jump = r
+                break
+            if r is _BARRIER:
+                yield ("barrier", bi, ni)
+                continue
+            yield from r           # call sub-generator
+        if jump is None:
+            raise ExecError(f"block %{blocks[bi].label} fell through")
+        if jump < 0:
+            return st.ret
+        bi, ni = jump, 0
+
+
+def _finish_warp(prog: "_BProgram", st: _DState, bi: int, ni: int
+                 ) -> np.ndarray:
+    """Run one warp of a PURE device function to completion (no barriers
+    possible); used when a lockstep callee desyncs."""
+    blocks = prog.blocks
+    while True:
+        nodes = blocks[bi].nodes
+        nn = len(nodes)
+        jump: Optional[int] = None
+        while ni < nn:
+            node = nodes[ni]
+            ni += 1
+            r = node(st)
+            if r is None:
+                continue
+            if type(r) is int:
+                jump = r
+                break
+            if r is _BARRIER:
+                raise ExecError(
+                    "vx_barrier inside a lockstep device function")
+            for _ in r:            # drain nested pure calls
+                raise ExecError(
+                    "vx_barrier inside a lockstep device function")
+        if jump is None:
+            raise ExecError(f"block %{blocks[bi].label} fell through")
+        if jump < 0:
+            return st.ret
+        bi, ni = jump, 0
+
+
+def _run_lockstep_fn(prog: "_BProgram", bst: _DState) -> np.ndarray:
+    """Lockstep execution of a pure device function.  A desync inside is
+    contained: each warp finishes the callee independently and the caller
+    resumes in lockstep."""
+    bi, ni = 0, 0
+    while True:
+        nodes = prog.bblocks[bi].nodes
+        nn = len(nodes)
+        jump: Optional[int] = None
+        while ni < nn:
+            r = nodes[ni](bst)
+            if r is None:
+                ni += 1
+                continue
+            if type(r) is int:
+                jump = r
+                break
+            rets = []              # desync: per-warp completion
+            for w in range(prog.n_warps):
+                stw = _slice_state(bst, w, bst.warp_ctxs[w])
+                rets.append(np.broadcast_to(
+                    _finish_warp(prog, stw, bi, ni), (prog.W,)))
+            return np.stack(rets)
+        if jump is None:
+            raise ExecError(f"block %{prog.bblocks[bi].label} fell through")
+        if jump < 0:
+            return bst.ret
+        bi, ni = jump, 0
+
+
+def _barrier_divergence_error(wg: Tuple[int, int], waiting: Sequence[int],
+                              exited: Sequence[int]) -> ExecError:
+    return ExecError(
+        f"barrier divergence in workgroup {wg}: warp(s) "
+        f"{sorted(waiting)} wait at a barrier but warp(s) "
+        f"{sorted(exited)} already returned — every warp of the "
+        f"workgroup must reach the same barriers")
+
+
+def _run_wg_batched(bprog: "_BProgram", bst: _DState,
+                    wg: Tuple[int, int]) -> None:
+    """Drive one whole workgroup: lockstep until a desync event, then
+    per-warp coroutines with oracle scheduling, re-merging into lockstep
+    when all warps reach the same top-level barrier congruently."""
+    n = bprog.n_warps
+    bi, ni = 0, 0
+    while True:
+        # ---- lockstep ------------------------------------------------
+        desync_at: Optional[Tuple[int, int]] = None
+        while desync_at is None:
+            nodes = bprog.bblocks[bi].nodes
+            nn = len(nodes)
+            jump: Optional[int] = None
+            while ni < nn:
+                r = nodes[ni](bst)
+                if r is None:
+                    ni += 1
+                    continue
+                if type(r) is int:
+                    jump = r
+                    break
+                desync_at = (bi, ni)
+                break
+            if desync_at is not None:
+                break
+            if jump is None:
+                raise ExecError(
+                    f"block %{bprog.bblocks[bi].label} fell through")
+            if jump < 0:
+                return             # all warps returned in lockstep
+            bi, ni = jump, 0
+        # ---- desync: per-warp fallback with oracle scheduling --------
+        bi, ni = desync_at
+        wstates = [_slice_state(bst, w, bst.warp_ctxs[w])
+                   for w in range(n)]
+        warps = [_resume_decoded(bprog, wstates[w], bi, ni)
+                 for w in range(n)]
+        alive = list(range(n))
+        exited: List[int] = []
+        merged: Optional[Tuple[int, int]] = None
+        while alive:
+            events: Dict[int, Any] = {}
+            done: List[int] = []
+            for wi in alive:
+                try:
+                    events[wi] = next(warps[wi])
+                except StopIteration:
+                    done.append(wi)
+            exited.extend(done)
+            if events and done:
+                raise _barrier_divergence_error(wg, sorted(events),
+                                                exited)
+            if not events:
+                return             # all warps finished independently
+            alive = sorted(events)
+            if len(alive) == n:
+                evs = list(events.values())
+                if all(type(e) is tuple for e in evs) and len(set(evs)) == 1:
+                    m = _merge_states(bprog, wstates, bst)
+                    if m is not None:
+                        bst = m
+                        merged = (evs[0][1], evs[0][2])
+                        break
+        if merged is None:
+            return
+        bi, ni = merged
+
+
+# --------------------------------------------------------------------------
 # Kernel launch (grid scheduling = the thread-schedule code VOLT's
 # front-end inserts; here it lives in the host runtime)
 # --------------------------------------------------------------------------
@@ -1209,14 +2123,19 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
            params: LaunchParams,
            scalar_args: Optional[Dict[str, Any]] = None,
            globals_mem: Optional[Dict[str, np.ndarray]] = None,
-           *, decoded: bool = True) -> ExecStats:
+           *, decoded: bool = True, batched: bool = True) -> ExecStats:
     """Execute a compiled kernel over the launch grid; returns stats.
     Buffers are mutated in place (device memory semantics).
 
     ``decoded=True`` (default) runs the pre-decoded table-driven executor;
     ``decoded=False`` keeps the original instruction-at-a-time loop — the
     semantics oracle the parity tests and benchmarks/interp_speed.py
-    compare against."""
+    compare against.  ``batched=True`` (default) additionally runs
+    multi-warp workgroups through the workgroup-batched lockstep executor
+    (one (n_warps, W) node walk per workgroup while the warps agree on
+    control flow, transparent per-warp fallback otherwise); it engages
+    only when ``decoded`` is on, the workgroup has more than one warp and
+    OOB-load checking is off."""
     fn = module_fn
     scalar_args = scalar_args or {}
     mem = DeviceMemory(buffers, globals_mem)
@@ -1224,7 +2143,13 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     W = params.warp_size
     fuel = [params.fuel]
     n_wg = params.grid * params.grid_y
-    prog = _decode(fn, W, params.strict_oob_loads) if decoded else None
+    n_warps = params.warps_per_wg
+    use_batched = bool(decoded and batched and n_warps > 1
+                       and not params.strict_oob_loads)
+    prog = _decode(fn, W, params.strict_oob_loads) \
+        if decoded and not use_batched else None
+    bprog = _decode_batched(fn, W, params.strict_oob_loads, n_warps) \
+        if use_batched else None
 
     # launch-invariant pieces, hoisted out of the grid loops: kernel
     # argument vectors and the constant CSR-backed intrinsics (all arrays
@@ -1265,8 +2190,9 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
         wg_intr[("group_id", 0)] = np.full(W, gx, np.int32)
         wg_intr[("group_id", 1)] = np.full(W, gy, np.int32)
         wg_intr[("core_id", 0)] = np.full(W, gx % 4, np.int32)
-        warps: List[Generator[str, None, np.ndarray]] = []
-        for wrp in range(params.warps_per_wg):
+        warp_ctxs: List[_WarpCtx] = []
+        warp_masks: List[np.ndarray] = []
+        for wrp in range(n_warps):
             lanes = np.arange(W)
             tid_lin = wrp * W + lanes
             active = tid_lin < params.wg_threads
@@ -1281,20 +2207,45 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
             intr[("global_id", 1)] = (gy * params.local_size_y
                                       + ly).astype(np.int32)
             intr[("warp_id", 0)] = warp_ids[wrp]
-            ctx = _WarpCtx(W, intr, params.strict_oob_loads)
+            warp_ctxs.append(_WarpCtx(W, intr, params.strict_oob_loads))
+            warp_masks.append(active)
+
+        if bprog is not None:
+            # workgroup-batched lockstep execution: one 2D activation for
+            # the whole workgroup; per-warp intrinsics stack into rows,
+            # warp-invariant ones stay 1D and broadcast
+            intr2: Dict[Tuple[str, int], np.ndarray] = {}
+            for key in warp_ctxs[0].intr:
+                vals = [c.intr[key] for c in warp_ctxs]
+                if all(v is vals[0] for v in vals):
+                    intr2[key] = vals[0]
+                else:
+                    intr2[key] = np.stack(vals)
+            bctx = _WarpCtx(W, intr2, params.strict_oob_loads)
+            bst = _DState(bprog, argmap, np.stack(warp_masks), bctx, mem,
+                          stats, fuel)
+            bst.warp_ctxs = warp_ctxs
+            with np.errstate(divide="ignore", invalid="ignore",
+                             over="ignore"):
+                _run_wg_batched(bprog, bst, (gx, gy))
+            continue
+
+        warps: List[Generator[str, None, np.ndarray]] = []
+        for wrp in range(n_warps):
             if prog is not None:
-                warp_st = _DState(prog, argmap, active.copy(), ctx, mem,
-                                  stats, fuel)
+                warp_st = _DState(prog, argmap, warp_masks[wrp].copy(),
+                                  warp_ctxs[wrp], mem, stats, fuel)
                 warps.append(_run_decoded(prog, warp_st))
             else:
-                warps.append(_exec_warp(fn, argmap, active, ctx, mem,
-                                        stats, fuel))
+                warps.append(_exec_warp(fn, argmap, warp_masks[wrp],
+                                        warp_ctxs[wrp], mem, stats, fuel))
 
         # co-routine scheduling: run each warp to its next barrier; barriers
         # synchronize all warps of the workgroup (vx_barrier local scope)
         # (errstate hoisted out of the instruction loop: the decoded
         # executor binds raw numpy handlers with no per-op context)
         alive = list(range(len(warps)))
+        exited: List[int] = []
         with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
             while alive:
                 at_barrier: List[int] = []
@@ -1306,9 +2257,10 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
                         at_barrier.append(wi)
                     except StopIteration:
                         done.append(wi)
+                exited.extend(done)
                 if at_barrier and done:
-                    raise ExecError("barrier divergence: some warps exited "
-                                    "while others wait")
+                    raise _barrier_divergence_error((gx, gy), at_barrier,
+                                                    exited)
                 alive = at_barrier
     return stats
 

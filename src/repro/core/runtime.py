@@ -24,13 +24,20 @@ spawns the grid (here: schedules the interpreter or the JAX backend).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
+import pickle
+import re
+import tempfile
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .interp import ExecStats, LaunchParams, launch as interp_launch
 from .passes.pipeline import CompiledKernel, PassConfig, run_pipeline
+from .passes.uniformity import UniformityInfo
 from .simx import CycleModel
 from .vir import Function, Module, Ty
 
@@ -40,19 +47,156 @@ _TY_DTYPE = {Ty.I32: np.int32, Ty.F32: np.float32, Ty.BOOL: np.bool_}
 # --------------------------------------------------------------------------
 # Compile cache: repeated launches of the same @kernel under the same
 # PassConfig + warp configuration skip the front-end build AND the whole
-# pass pipeline.  Keyed by (handle identity, PassConfig fields, warp
-# size); values keep a strong reference to the handle so its id() can
-# never be recycled.
+# pass pipeline.  Two tiers:
+#
+#   * in-memory, keyed by (handle identity, PassConfig fields, warp size);
+#     values keep a strong reference to the handle so its id() can never
+#     be recycled;
+#   * on disk, keyed by (CONTENT hash of the normalized pre-pipeline IR,
+#     PassConfig fields, warp size, schema version) — a second process
+#     compiling an identical kernel deserializes the compiled module
+#     instead of re-running the pass pipeline.  Any change to the kernel
+#     body changes the IR hash, so stale entries can never be returned;
+#     unreadable/corrupt entries fall back to a fresh compile.
+#
+# Disk location: $VOLT_CACHE_DIR, else ~/.cache/volt_repro.  Disable with
+# VOLT_DISK_CACHE=0.
 # --------------------------------------------------------------------------
 
 _COMPILE_CACHE: Dict[Tuple, Tuple[Any, CompiledKernel]] = {}
 
+_DISK_CACHE_SCHEMA = 1
+#: telemetry for benchmarks/tests: process-lifetime disk cache counters
+DISK_CACHE_STATS = {"hits": 0, "misses": 0, "errors": 0}
+
+_TOKEN_RE = re.compile(r"%[A-Za-z_][\w.]*")
+
+
+def _normalize_ir(dump: str) -> str:
+    """Rewrite process-dependent SSA/label tokens (%v123, %for.cond.17,
+    %gid, ...) to dense first-appearance indices.  The renaming is
+    INJECTIVE within one dump — distinct registers stay distinct — so
+    operand swaps or retargeted branches still change the hash, while
+    identical kernels built in fresh processes (different absolute id
+    counters) normalize to the same text.  Float constants never follow
+    a '%', so they survive untouched."""
+    mapping: Dict[str, str] = {}
+
+    def renum(m: "re.Match[str]") -> str:
+        tok = m.group(0)
+        new = mapping.get(tok)
+        if new is None:
+            new = f"%t{len(mapping)}"
+            mapping[tok] = new
+        return new
+
+    return _TOKEN_RE.sub(renum, dump)
+
+
+def _compiler_fingerprint() -> str:
+    """Hash of the compiler's own source (passes + IR + front-ends):
+    folded into every disk-cache key so editing the pipeline invalidates
+    entries compiled by the old code."""
+    global _COMPILER_FP
+    if _COMPILER_FP is None:
+        h = hashlib.sha256()
+        root = Path(__file__).resolve().parent
+        files = sorted((root / "passes").glob("*.py")) \
+            + sorted((root / "frontends").glob("*.py")) \
+            + [root / "vir.py", root / "graph.py"]
+        for f in files:
+            try:
+                h.update(f.name.encode())
+                h.update(f.read_bytes())
+            except OSError:
+                pass
+        _COMPILER_FP = h.hexdigest()
+    return _COMPILER_FP
+
+
+_COMPILER_FP: Optional[str] = None
+
+
+def disk_cache_dir() -> Optional[Path]:
+    if os.environ.get("VOLT_DISK_CACHE", "1") == "0":
+        return None
+    d = os.environ.get("VOLT_CACHE_DIR")
+    if d:
+        return Path(d)
+    return Path.home() / ".cache" / "volt_repro"
+
+
+def _disk_key(module: Module, kernel_name: str, config: PassConfig,
+              warp_size: int) -> str:
+    h = hashlib.sha256()
+    h.update(repr((_DISK_CACHE_SCHEMA, _compiler_fingerprint(),
+                   kernel_name, dataclasses.astuple(config),
+                   warp_size)).encode())
+    h.update(_normalize_ir(module.dump()).encode())
+    return h.hexdigest()
+
+
+def _freeze_info(module: Module, info: UniformityInfo) -> Tuple:
+    """id()-keyed divergence sets -> object lists (ids do not survive
+    pickling; the objects do, with referential integrity)."""
+    id2obj: Dict[int, Any] = {}
+    for fn in module.functions.values():
+        for b in fn.blocks:
+            id2obj[id(b)] = b
+            for i in b.instrs:
+                id2obj[id(i)] = i
+                if i.result is not None:
+                    id2obj[id(i.result)] = i.result
+                for o in i.operands:
+                    id2obj[id(o)] = o
+        for s in fn.slots:
+            id2obj[id(s)] = s
+    return tuple([id2obj[x] for x in ids if x in id2obj] for ids in (
+        info.divergent_values, info.divergent_slots,
+        info.divergent_exec, info.divergent_branches))
+
+
+def _thaw_info(frozen: Tuple) -> UniformityInfo:
+    dv, ds, de, db = frozen
+    return UniformityInfo({id(o) for o in dv}, {id(o) for o in ds},
+                          {id(o) for o in de}, {id(o) for o in db})
+
+
+def _disk_load(path: Path, kernel_name: str,
+               config: PassConfig) -> Optional[CompiledKernel]:
+    try:
+        with open(path, "rb") as f:
+            module, frozen, stats = pickle.load(f)
+        return CompiledKernel(module, module.functions[kernel_name],
+                              _thaw_info(frozen), config, stats)
+    except Exception:
+        DISK_CACHE_STATS["errors"] += 1
+        try:
+            path.unlink()
+        except OSError:
+            pass
+        return None
+
+
+def _disk_store(path: Path, ck: CompiledKernel) -> None:
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        payload = pickle.dumps(
+            (ck.module, _freeze_info(ck.module, ck.info), ck.stats))
+        fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)      # atomic: concurrent readers never see
+    except Exception:              # a partial entry
+        DISK_CACHE_STATS["errors"] += 1
+
 
 def compile_kernel(kernel_handle, config: Optional[PassConfig] = None,
-                   *, warp_size: int = 32,
-                   use_cache: bool = True) -> CompiledKernel:
+                   *, warp_size: int = 32, use_cache: bool = True,
+                   use_disk_cache: Optional[bool] = None) -> CompiledKernel:
     """Build + run the pass pipeline for a front-end @kernel handle,
-    memoized on (kernel, PassConfig, warp config)."""
+    memoized on (kernel, PassConfig, warp config) in memory and — keyed
+    by IR content hash — on disk across processes."""
     config = config or PassConfig()
     key = (id(kernel_handle), kernel_handle.name,
            dataclasses.astuple(config), warp_size)
@@ -61,14 +205,39 @@ def compile_kernel(kernel_handle, config: Optional[PassConfig] = None,
         if hit is not None:
             return hit[1]
     module = kernel_handle.build(None)
+    cache_dir = disk_cache_dir() if use_disk_cache in (None, True) else None
+    if use_disk_cache is False:
+        cache_dir = None
+    path = None
+    if cache_dir is not None:
+        path = Path(cache_dir) / (_disk_key(module, kernel_handle.name,
+                                            config, warp_size) + ".vck")
+        if path.exists():
+            ck = _disk_load(path, kernel_handle.name, config)
+            if ck is not None:
+                DISK_CACHE_STATS["hits"] += 1
+                if use_cache:
+                    _COMPILE_CACHE[key] = (kernel_handle, ck)
+                return ck
+        DISK_CACHE_STATS["misses"] += 1
     ck = run_pipeline(module, kernel_handle.name, config)
+    if path is not None:
+        _disk_store(path, ck)
     if use_cache:
         _COMPILE_CACHE[key] = (kernel_handle, ck)
     return ck
 
 
-def clear_compile_cache() -> None:
+def clear_compile_cache(*, disk: bool = False) -> None:
     _COMPILE_CACHE.clear()
+    if disk:
+        d = disk_cache_dir()
+        if d is not None and Path(d).exists():
+            for p in Path(d).glob("*.vck"):
+                try:
+                    p.unlink()
+                except OSError:
+                    pass
 
 
 @dataclass
@@ -81,8 +250,10 @@ class Runtime:
     """A Vortex device-runtime stand-in with CUDA/OpenCL host APIs."""
 
     def __init__(self, *, warp_size: int = 32,
-                 shared_in_local: bool = True) -> None:
+                 shared_in_local: bool = True,
+                 batched: bool = True) -> None:
         self.warp_size = warp_size
+        self.batched = batched     # workgroup-batched lockstep executor
         self.buffers: Dict[str, np.ndarray] = {}
         self.globals_mem: Dict[str, np.ndarray] = {}
         self._pending_symbols: Dict[str, np.ndarray] = {}
@@ -147,7 +318,8 @@ class Runtime:
                               warp_size=self.warp_size)
         stats = interp_launch(kernel_fn, self.buffers, params,
                               scalar_args=scalar_args,
-                              globals_mem=self.globals_mem)
+                              globals_mem=self.globals_mem,
+                              batched=self.batched)
         self.last_stats = stats
         return stats
 

@@ -389,6 +389,15 @@ class Function:
             self.bump_version()
         return len(removed)
 
+    def __getstate__(self):
+        # the decoded-program cache holds closures (unpicklable) and is
+        # identity-keyed anyway: the persistent compile cache in
+        # core/runtime.py pickles Functions without it and the first
+        # launch of an unpickled kernel re-decodes
+        d = dict(self.__dict__)
+        d.pop("_decode_cache", None)
+        return d
+
     def dump(self) -> str:
         lines = [f"func @{self.name}({', '.join(p.short() + ':' + str(p.ty) + (' uniform' if p.uniform else '') for p in self.params)}) -> {self.ret_ty}:"]
         for b in self.blocks:

@@ -61,7 +61,11 @@ class ServeEngine:
                 for t in req.prompt[:-1]:
                     tok = jnp.zeros((self.slots, 1), jnp.int32
                                     ).at[s, 0].set(int(t))
-                    pos = jnp.asarray(self.pos)
+                    # copy: jnp.asarray may alias the host buffer
+                    # zero-copy on CPU, and the decode dispatch is
+                    # asynchronous — mutating self.pos below would race
+                    # with the still-executing program
+                    pos = jnp.asarray(np.array(self.pos))
                     _, self.cache = self._decode(self.params, self.cache,
                                                  tok, pos)
                     self.pos[s] += 1
@@ -73,8 +77,9 @@ class ServeEngine:
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
             return 0
-        toks = jnp.asarray(self.last_tok.reshape(-1, 1))
-        pos = jnp.asarray(self.pos)
+        # copies for the same async-aliasing reason as in _admit
+        toks = jnp.asarray(np.array(self.last_tok.reshape(-1, 1)))
+        pos = jnp.asarray(np.array(self.pos))
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
         logits = np.asarray(logits[:, 0, :])
         nxt = logits.argmax(-1).astype(np.int32)

@@ -105,3 +105,56 @@ def atomics_kernel(x: "ptr_f32 const", hist: "ptr_i32", total: "ptr_f32",
             bucket = 1
         atomic_add(hist, bucket, 1)
         atomic_add(total, 0, v)
+
+
+# -- multi-warp workgroup kernels (workgroup-batched executor tests) --------
+
+@opencl.kernel
+def wg_reduce128(x: "ptr_f32 const", out: "ptr_f32", n: "i32 uniform"):
+    # 4-warp workgroup tree reduction: barriers inside a uniform loop,
+    # cross-warp shared-memory traffic (lockstep across barriers)
+    tmp = local_array(f32, 128)
+    lid = get_local_id(0)
+    gid = get_global_id(0)
+    tmp[lid] = x[gid] if gid < n else 0.0
+    barrier()
+    s = get_local_size(0) // 2
+    while s > 0:
+        if lid < s:
+            tmp[lid] = tmp[lid] + tmp[lid + s]
+        barrier()
+        s = s // 2
+    if lid == 0:
+        out[get_group_id(0)] = tmp[0]
+
+
+@opencl.kernel
+def wg_mixed(x: "ptr_f32 const", y: "ptr_f32", count: "ptr_i32",
+             n: "i32 uniform"):
+    # divergence + barrier + shared memory + atomics in one workgroup:
+    # exercises the lockstep -> desync -> re-merge cycle end to end
+    tmp = local_array(f32, 128)
+    lid = get_local_id(0)
+    gid = get_global_id(0)
+    v = x[gid] if gid < n else 0.0
+    if v > 0.0:
+        v = v * 2.0
+    else:
+        v = -v
+    tmp[lid] = v
+    barrier()
+    other = tmp[127 - lid]
+    if gid < n:
+        y[gid] = v + other
+        if v > other:
+            atomic_add(count, 0, 1)
+
+
+@opencl.kernel
+def wg_warp0_barrier(x: "ptr_f32", n: "i32 uniform"):
+    # erroneous on purpose: only warp 0 reaches the barrier -> the
+    # interpreter must raise a barrier-divergence error naming the warps
+    lid = get_local_id(0)
+    if get_warp_id(0) == 0:
+        barrier()
+    x[lid] = 1.0

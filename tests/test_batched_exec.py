@@ -1,0 +1,444 @@
+"""Tests for the workgroup-batched lockstep executor, decode-level slot
+fusion, and the persistent disk compile cache.
+
+Parity contract: for multi-warp workgroups the batched executor must be
+bit-identical to the ``decoded=False`` instruction-at-a-time oracle —
+dynamic instruction counts, per-op counters, coalesced memory requests,
+atomic serialization, IPDOM depth, prints, and every output buffer."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent / "kernels"))
+
+from repro.core import interp, runtime
+from repro.core.passes.pipeline import (ABLATION_LADDER, PassConfig,
+                                        run_pipeline)
+from repro.core.vir import Op
+from repro.volt_bench import BENCHES
+
+import volt_kernels as K
+
+FULL = ABLATION_LADDER[-1]
+
+# benches whose semantics survive a multi-warp reshape (see
+# benchmarks/interp_speed.py for the exclusion rationale)
+MULTI_WARP_BENCHES = [
+    "vecadd", "saxpy", "dotproduct", "transpose", "psort", "sfilter",
+    "sgemm", "blackscholes", "pathfinder", "kmeans", "nearn", "stencil",
+    "spmv", "cfd_like", "srad_flag", "vote_hw", "bscan_hw",
+    "atomic_naive", "atomic_agg",
+]
+
+
+def _multi_warp(params: interp.LaunchParams,
+                factor: int = 4) -> interp.LaunchParams:
+    total = params.grid * params.local_size
+    local = min(params.local_size * factor, total)
+    return interp.LaunchParams(grid=(total + local - 1) // local,
+                               local_size=local,
+                               warp_size=params.warp_size)
+
+
+def _assert_parity(name, fn, bufs0, params, scalars):
+    ref = {k: v.copy() for k, v in bufs0.items()}
+    st_ref = interp.launch(fn, ref, params, scalar_args=scalars,
+                           decoded=False)
+    bat = {k: v.copy() for k, v in bufs0.items()}
+    st_bat = interp.launch(fn, bat, params, scalar_args=scalars,
+                           decoded=True, batched=True)
+    assert st_ref.instrs == st_bat.instrs, name
+    assert st_ref.by_op == st_bat.by_op, name
+    assert st_ref.mem_requests == st_bat.mem_requests, name
+    assert st_ref.mem_insts == st_bat.mem_insts, name
+    assert st_ref.shared_requests == st_bat.shared_requests, name
+    assert st_ref.atomic_serial == st_bat.atomic_serial, name
+    assert st_ref.max_ipdom_depth == st_bat.max_ipdom_depth, name
+    assert st_ref.prints == st_bat.prints, name
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], bat[k],
+                                      err_msg=f"{name}: buffer {k}")
+    return bat, st_bat
+
+
+# -------------------------------------------------------------------------
+# batched-vs-oracle parity across the volt_bench suite
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", MULTI_WARP_BENCHES)
+@pytest.mark.parametrize("cfg_i", [0, len(ABLATION_LADDER) - 1],
+                         ids=["base", "full"])
+def test_batched_parity_suite(name, cfg_i):
+    b = BENCHES[name]
+    rng = np.random.default_rng(7)
+    bufs0, scalars, params = b.make(rng)
+    mod = b.handle.build(None)
+    ck = run_pipeline(mod, b.handle.name, ABLATION_LADDER[cfg_i])
+    _assert_parity(name, ck.fn, bufs0, _multi_warp(params), scalars)
+
+
+@pytest.mark.parametrize("factor", [2, 4, 8])
+def test_batched_parity_warp_factors(factor):
+    """Different workgroup widths (2/4/8 warps) stay parity-exact."""
+    for name in ("psort", "cfd_like", "dotproduct"):
+        b = BENCHES[name]
+        rng = np.random.default_rng(11)
+        bufs0, scalars, params = b.make(rng)
+        mod = b.handle.build(None)
+        ck = run_pipeline(mod, b.handle.name, FULL)
+        _assert_parity(f"{name}/x{factor}", ck.fn, bufs0,
+                       _multi_warp(params, factor), scalars)
+
+
+def test_batched_barriers_shared_memory():
+    """Barriers inside a uniform loop with cross-warp shared traffic:
+    the workgroup re-merges into lockstep after every desync."""
+    mod = K.wg_reduce128.build(None)
+    ck = run_pipeline(mod, "wg_reduce128", FULL)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(256).astype(np.float32)
+    params = interp.LaunchParams(grid=2, local_size=128, warp_size=32)
+    bufs0 = {"x": x, "out": np.zeros(2, np.float32)}
+    bat, st = _assert_parity("wg_reduce128", ck.fn, bufs0, params,
+                             {"n": 250})
+    xm = x.copy()
+    xm[250:] = 0
+    np.testing.assert_allclose(bat["out"], xm.reshape(2, 128).sum(1),
+                               atol=1e-3)
+    assert st.shared_requests > 0
+
+
+def test_batched_divergence_barrier_atomic_mix():
+    """Lockstep -> desync (atomics) -> re-merge (barrier) end to end."""
+    mod = K.wg_mixed.build(None)
+    ck = run_pipeline(mod, "wg_mixed", FULL)
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal(256).astype(np.float32)
+    params = interp.LaunchParams(grid=2, local_size=128, warp_size=32)
+    bufs0 = {"x": x, "y": np.zeros(256, np.float32),
+             "count": np.zeros(1, np.int32)}
+    bat, st = _assert_parity("wg_mixed", ck.fn, bufs0, params, {"n": 240})
+    assert st.atomic_serial > 0 and st.shared_requests > 0
+    assert int(bat["count"][0]) > 0
+
+
+def test_batched_device_function_calls():
+    """Pure device functions run in lockstep; results match the per-thread
+    scalar oracle."""
+    rng = np.random.default_rng(5)
+    coefs = rng.standard_normal(4).astype(np.float32)
+    x = rng.standard_normal(128).astype(np.float32)
+    params = interp.LaunchParams(grid=1, local_size=128, warp_size=32)
+    scalars = {"deg": 4, "n": 120}
+    mod = K.uses_helper.build(None)
+    ck = run_pipeline(mod, "uses_helper", FULL)
+    bufs0 = {"coefs": coefs, "x": x, "out": np.zeros(128, np.float32)}
+    _assert_parity("uses_helper", ck.fn, bufs0, params, scalars)
+
+
+def test_single_warp_workgroups_unaffected():
+    """batched=True on single-warp workgroups must take the per-warp
+    decoded path (identical to batched=False)."""
+    b = BENCHES["cfd_like"]
+    rng = np.random.default_rng(7)
+    bufs0, scalars, params = b.make(rng)
+    assert params.warps_per_wg == 1
+    mod = b.handle.build(None)
+    ck = run_pipeline(mod, b.handle.name, FULL)
+    a = {k: v.copy() for k, v in bufs0.items()}
+    st_a = interp.launch(ck.fn, a, params, scalar_args=scalars,
+                         batched=True)
+    bb = {k: v.copy() for k, v in bufs0.items()}
+    st_b = interp.launch(ck.fn, bb, params, scalar_args=scalars,
+                         batched=False)
+    assert st_a.instrs == st_b.instrs
+    for k in a:
+        np.testing.assert_array_equal(a[k], bb[k])
+
+
+def test_barrier_divergence_error_names_warps():
+    """The barrier-divergence ExecError names waiting vs exited warps, in
+    both the oracle and the batched desync scheduler."""
+    mod = K.wg_warp0_barrier.build(None)
+    ck = run_pipeline(mod, "wg_warp0_barrier", FULL)
+    params = interp.LaunchParams(grid=1, local_size=128, warp_size=32)
+    for kw in (dict(decoded=False), dict(decoded=True, batched=True)):
+        bufs = {"x": np.zeros(128, np.float32)}
+        with pytest.raises(interp.ExecError) as ei:
+            interp.launch(ck.fn, bufs, params, scalar_args={"n": 128},
+                          **kw)
+        msg = str(ei.value)
+        assert "barrier divergence" in msg
+        assert "workgroup (0, 0)" in msg
+        assert "[0]" in msg, f"waiting warp not named: {msg}"
+        assert "[1, 2, 3]" in msg, f"exited warps not named: {msg}"
+
+
+# -------------------------------------------------------------------------
+# hypothesis: random warp / workgroup shapes
+# -------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:       # keep the rest of this module runnable
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(warp_size=st.sampled_from([4, 8, 16, 32]),
+           n_warps=st.integers(1, 4),
+           ragged=st.integers(0, 3),
+           grid=st.integers(1, 3),
+           seed=st.integers(0, 2**31 - 1))
+    def test_batched_parity_random_shapes(warp_size, n_warps, ragged,
+                                          grid, seed):
+        """Batched == oracle for arbitrary (warp size, warps/wg, grid)
+        shapes, including ragged workgroups (wg_threads % W != 0)."""
+        local = max(1, n_warps * warp_size - ragged)
+        params = interp.LaunchParams(grid=grid, local_size=local,
+                                     warp_size=warp_size)
+        total = grid * local
+        rng = np.random.default_rng(seed)
+        mod = K.loop_break_continue.build(None)
+        ck = run_pipeline(mod, "loop_break_continue", FULL)
+        n = 4
+        bufs0 = {"x": rng.standard_normal(total * n).astype(np.float32),
+                 "out": np.zeros(total, np.float32)}
+        _assert_parity(f"shapes{(warp_size, n_warps, ragged, grid)}",
+                       ck.fn, bufs0, params, {"n": n})
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                             "(pip install -r requirements-dev.txt)")
+    def test_batched_parity_random_shapes():
+        pass
+
+
+# -------------------------------------------------------------------------
+# decode-level slot fusion
+# -------------------------------------------------------------------------
+
+def test_slot_fusion_shrinks_handler_table():
+    """Fusion drops/merges slot traffic handlers while ExecStats count the
+    original instruction mix (parity is covered by the suite tests)."""
+    b = BENCHES["cfd_like"]
+    mod = b.handle.build(None)
+    ck = run_pipeline(mod, b.handle.name, FULL)
+    prog = interp._decode(ck.fn, 32, False)
+    assert prog.n_run_handlers < prog.n_run_instrs, \
+        "slot fusion should eliminate at least one handler in cfd_like"
+    # the fused program still reports the full dynamic instruction count
+    rng = np.random.default_rng(7)
+    bufs0, scalars, params = b.make(rng)
+    ref = {k: v.copy() for k, v in bufs0.items()}
+    st_ref = interp.launch(ck.fn, ref, params, scalar_args=scalars,
+                           decoded=False)
+    dec = {k: v.copy() for k, v in bufs0.items()}
+    st_dec = interp.launch(ck.fn, dec, params, scalar_args=scalars,
+                           decoded=True)
+    assert st_ref.instrs == st_dec.instrs
+    assert st_ref.by_op == st_dec.by_op
+
+
+def test_dead_slot_store_dropped():
+    """Stores to slots never loaded anywhere in the function are decoded
+    away entirely."""
+    mod = K.saxpy.build(None)
+    fn = mod.functions["saxpy"]
+    from repro.core.vir import Const, Instr, Slot, Ty
+    dead = fn.new_slot("dead", Ty.F32)
+    # two dead stores right before the terminator of the entry block
+    term = fn.entry.instrs[-1]
+    assert term.is_terminator()
+    fn.entry.insert(len(fn.entry.instrs) - 1,
+                    Instr(Op.SLOT_STORE, [dead, Const(1.0, Ty.F32)]))
+    fn.entry.insert(len(fn.entry.instrs) - 1,
+                    Instr(Op.SLOT_STORE, [dead, Const(2.0, Ty.F32)]))
+    prog = interp._decode(fn, 32, False)
+    assert prog.n_run_instrs - prog.n_run_handlers >= 2
+    # ... but the dynamic instruction count still includes them
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(64).astype(np.float32)
+    y = rng.standard_normal(64).astype(np.float32)
+    params = interp.LaunchParams(grid=2, local_size=32, warp_size=32)
+    scalars = {"a": 2.0, "n": 64}
+    ref = {"x": x.copy(), "y": y.copy()}
+    st_ref = interp.launch(fn, ref, params, scalar_args=scalars,
+                           decoded=False)
+    dec = {"x": x.copy(), "y": y.copy()}
+    st_dec = interp.launch(fn, dec, params, scalar_args=scalars,
+                           decoded=True)
+    assert st_ref.instrs == st_dec.instrs
+    assert st_ref.by_op == st_dec.by_op
+    np.testing.assert_array_equal(ref["y"], dec["y"])
+
+
+# -------------------------------------------------------------------------
+# persistent disk compile cache
+# -------------------------------------------------------------------------
+
+_SUBPROC = """
+import json, sys
+from repro.core import runtime
+from repro.volt_bench import BENCHES
+ck = runtime.compile_kernel(BENCHES[sys.argv[1]].handle)
+print(json.dumps({**runtime.DISK_CACHE_STATS,
+                  "blocks": len(ck.fn.blocks)}))
+"""
+
+
+def _compile_in_subprocess(cache_dir, name="sgemm"):
+    import json
+    env = dict(os.environ)
+    env["VOLT_CACHE_DIR"] = str(cache_dir)
+    env["VOLT_DISK_CACHE"] = "1"
+    src = str(Path(runtime.__file__).resolve().parents[2])
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SUBPROC, name], env=env,
+                         capture_output=True, text=True, check=True)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_disk_cache_second_process_hits(tmp_path):
+    """A second process compiling an identical kernel must hit the
+    persistent cache."""
+    first = _compile_in_subprocess(tmp_path)
+    assert first == {**first, "hits": 0, "misses": 1}
+    second = _compile_in_subprocess(tmp_path)
+    assert second["hits"] == 1 and second["misses"] == 0
+    assert second["blocks"] == first["blocks"]
+
+
+def test_disk_cache_stale_invalidation(tmp_path, monkeypatch):
+    """Different kernels never collide; corrupt entries fall back to a
+    fresh compile (and are removed) instead of returning stale IR."""
+    monkeypatch.setenv("VOLT_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("VOLT_DISK_CACHE", "1")
+    runtime.clear_compile_cache()
+    stats0 = dict(runtime.DISK_CACHE_STATS)
+    ck1 = runtime.compile_kernel(BENCHES["vecadd"].handle, use_cache=False)
+    # a DIFFERENT kernel body hashes to a different key: no false hit
+    ck2 = runtime.compile_kernel(BENCHES["saxpy"].handle, use_cache=False)
+    assert runtime.DISK_CACHE_STATS["misses"] == stats0["misses"] + 2
+    files = sorted(tmp_path.glob("*.vck"))
+    assert len(files) == 2
+    # same kernel again: disk hit with equivalent compiled IR
+    ck1b = runtime.compile_kernel(BENCHES["vecadd"].handle,
+                                  use_cache=False)
+    assert runtime.DISK_CACHE_STATS["hits"] == stats0["hits"] + 1
+    assert len(ck1b.fn.blocks) == len(ck1.fn.blocks)
+    # corrupt every entry: loads must fail soft and recompile
+    for f in files:
+        f.write_bytes(b"not a pickle")
+    err0 = runtime.DISK_CACHE_STATS["errors"]
+    ck1c = runtime.compile_kernel(BENCHES["vecadd"].handle,
+                                  use_cache=False)
+    assert runtime.DISK_CACHE_STATS["errors"] == err0 + 1
+    assert len(ck1c.fn.blocks) == len(ck1.fn.blocks)
+    # the unpickled-compile path executes correctly end to end
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(64).astype(np.float32)
+    y = rng.standard_normal(64).astype(np.float32)
+    bufs = {"x": x.copy(), "y": y.copy(),
+            "z": np.zeros(64, np.float32)}
+    params = interp.LaunchParams(grid=2, local_size=32, warp_size=32)
+    runtime.clear_compile_cache()
+    ck = runtime.compile_kernel(BENCHES["vecadd"].handle)  # disk hit
+    interp.launch(ck.fn, bufs, params, scalar_args={"n": 64})
+    np.testing.assert_allclose(bufs["z"], x + y, atol=1e-6)
+    runtime.clear_compile_cache()
+
+
+def test_ir_normalization_is_injective():
+    """The content-hash normalizer alpha-renames tokens by first
+    appearance: id-counter shifts across processes normalize away, but
+    operand swaps (defs precede uses in a dump) and retargeted branches
+    must keep distinct kernels distinct."""
+    from repro.core.vir import Function, IRBuilder, Op, Param, Ty
+
+    def build(swap: bool) -> str:
+        fn = Function("k", [Param("p", Ty.PTR), Param("q", Ty.PTR)])
+        bld = IRBuilder(fn)
+        a = bld.load(fn.params[0], bld.intr("global_id"))
+        b = bld.load(fn.params[1], bld.intr("global_id"))
+        r = bld.binop(Op.SUB, b, a) if swap else bld.binop(Op.SUB, a, b)
+        bld.store(fn.params[0], bld.intr("global_id"), r)
+        bld.ret()
+        return fn.dump()
+
+    d1 = runtime._normalize_ir(build(False))
+    d2 = runtime._normalize_ir(build(False))
+    assert d1 == d2, "fresh builds (shifted id counters) must normalize " \
+                     "to identical text"
+    d3 = runtime._normalize_ir(build(True))
+    assert d1 != d3, "operand swap must survive normalization"
+    # swapped branch targets: blocks keep their bodies, so the label
+    # lines re-associate and the normalized text differs
+    def build_cbr(swap: bool) -> str:
+        fn = Function("k", [Param("p", Ty.PTR)])
+        bld = IRBuilder(fn)
+        c = bld.binop(Op.GT, bld.intr("global_id"),
+                      bld.load(fn.params[0], bld.intr("global_id")))
+        t_bb, e_bb = fn.new_block("t"), fn.new_block("e")
+        bld.cbr(c, e_bb, t_bb) if swap else bld.cbr(c, t_bb, e_bb)
+        bld.set_block(t_bb)
+        bld.store(fn.params[0], bld.intr("global_id"),
+                  bld.intr("global_id"))
+        bld.ret()
+        bld.set_block(e_bb)
+        bld.ret()
+        return fn.dump()
+
+    assert runtime._normalize_ir(build_cbr(False)) != \
+        runtime._normalize_ir(build_cbr(True))
+
+
+def test_disk_cache_key_includes_compiler_fingerprint(tmp_path,
+                                                      monkeypatch):
+    """Entries compiled by a different pipeline version never hit."""
+    monkeypatch.setenv("VOLT_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("VOLT_DISK_CACHE", "1")
+    runtime.clear_compile_cache()
+    runtime.compile_kernel(BENCHES["vecadd"].handle, use_cache=False)
+    assert len(list(tmp_path.glob("*.vck"))) == 1
+    monkeypatch.setattr(runtime, "_COMPILER_FP", "different-compiler")
+    hits0 = runtime.DISK_CACHE_STATS["hits"]
+    runtime.compile_kernel(BENCHES["vecadd"].handle, use_cache=False)
+    assert runtime.DISK_CACHE_STATS["hits"] == hits0, \
+        "changed compiler fingerprint must miss"
+    assert len(list(tmp_path.glob("*.vck"))) == 2
+    runtime.clear_compile_cache()
+
+
+def test_disk_cache_disabled_by_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("VOLT_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("VOLT_DISK_CACHE", "0")
+    runtime.clear_compile_cache()
+    runtime.compile_kernel(BENCHES["vecadd"].handle, use_cache=False)
+    assert list(tmp_path.glob("*.vck")) == []
+    runtime.clear_compile_cache()
+
+
+# -------------------------------------------------------------------------
+# opt-in perf regression gate (deselected by default; run with
+#   pytest -m perf_check)
+# -------------------------------------------------------------------------
+
+@pytest.mark.perf_check
+def test_perf_regression_gate():
+    """`benchmarks/run.py perf --check` must exit 0 against the committed
+    BENCH_perf.json (>20% regression on any aggregate speedup fails)."""
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (f"{repo / 'src'}{os.pathsep}{repo}"
+                         f"{os.pathsep}{env.get('PYTHONPATH', '')}")
+    out = subprocess.run(
+        [sys.executable, str(repo / "benchmarks" / "run.py"), "perf",
+         "--check"],
+        cwd=str(repo), env=env, capture_output=True, text=True)
+    assert out.returncode == 0, \
+        f"perf regression gate failed:\n{out.stdout[-4000:]}"
