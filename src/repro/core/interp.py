@@ -68,6 +68,22 @@ class LaunchParams:
         return max(1, (self.wg_threads + self.warp_size - 1) // self.warp_size)
 
 
+def fold_warps(params: LaunchParams, factor: int = 4) -> LaunchParams:
+    """Refold a 1D launch into ``factor``-warp workgroups (shared by the
+    benchmarks and the executor-conformance tests so every consumer
+    folds identically).  The folded launch covers AT LEAST the original
+    thread range; when the workgroup count is not divisible by
+    ``factor`` the last workgroup rounds up, so kernels must guard their
+    tail (every bench does — the suite launches already over-provision
+    threads).  Fuel and OOB-load strictness carry over."""
+    total = params.grid * params.local_size
+    local = min(params.local_size * factor, total)
+    return LaunchParams(grid=(total + local - 1) // local,
+                        local_size=local, warp_size=params.warp_size,
+                        fuel=params.fuel,
+                        strict_oob_loads=params.strict_oob_loads)
+
+
 @dataclass
 class ExecStats:
     instrs: int = 0                       # dynamic, per-warp issue count
@@ -1352,32 +1368,39 @@ def _run_decoded(prog: "_DProgram", st: _DState
 # update mirrors the per-warp rule.
 #
 # FUEL is the one counter that is an UPPER BOUND rather than an exact
-# mirror: ride-along rows and empty-masked callee rows charge fuel for
-# code their per-warp counterparts would not walk (up to ~2x inside
-# diverged regions).  Fuel is an infinite-loop guard, not a reported
-# statistic, and the bound errs toward raising early — a kernel running
-# close to ``params.fuel`` under ``batched=False`` may need a larger
-# budget with the batched executor.
+# mirror: batched nodes charge one unit per ACTIVE row (with a floor of
+# one so the infinite-loop guard stays armed when every row rides along
+# empty), so the burn tracks the per-warp oracle closely — the slack is
+# the all-rows-empty floor plus desync re-walks, not a factor of the
+# batch width.  Fuel is an infinite-loop guard, not a reported
+# statistic; a kernel running within a hair of ``params.fuel`` under
+# ``batched=False`` may still need a slightly larger budget.
 # --------------------------------------------------------------------------
 
 _DESYNC = object()    # batched control node: cannot continue in lockstep
 _BARRIER = object()   # per-warp node (batched program): top-level barrier
 
 
-def _decode_batched(fn: Function, W: int, strict: bool,
-                    n_warps: int) -> "_BProgram":
+def _decode_batched(fn: Function, W: int, strict: bool, n_warps: int,
+                    grid_mode: bool = False,
+                    ride_along: bool = True) -> "_BProgram":
     """Decode ``fn`` for workgroup-batched execution (memoized like
-    _decode, in the same ir_version-keyed cache)."""
+    _decode, in the same ir_version-keyed cache).  ``grid_mode`` batches
+    independent single-warp workgroups (rows are workgroups, barriers
+    synchronize trivially); ``ride_along=False`` restores the stricter
+    desync-on-mixed-loop-exit behavior (used as a benchmark baseline)."""
     cache = getattr(fn, "_decode_cache", None)
     if cache is None:
         cache = {}
         fn._decode_cache = cache  # type: ignore[attr-defined]
-    key = (fn.ir_version, W, bool(strict), "wg", n_warps)
+    key = (fn.ir_version, W, bool(strict), "wg", n_warps, bool(grid_mode),
+           bool(ride_along))
     prog = cache.get(key)
     if prog is None:
         for k in [k for k in cache if k[0] != fn.ir_version]:
             del cache[k]
-        prog = _BProgram(fn, W, bool(strict), n_warps)
+        prog = _BProgram(fn, W, bool(strict), n_warps, grid_mode=grid_mode,
+                         ride_along=ride_along)
         cache[key] = prog
     return prog
 
@@ -1398,6 +1421,40 @@ def _lockstep_pure(fn: Function, _seen: Optional[set] = None) -> bool:
     return True
 
 
+def _cyclic_blocks(fn: Function) -> set:
+    """ids of blocks that can reach themselves (loop bodies)."""
+    succ = {id(b): [id(s) for s in b.successors()] for b in fn.blocks}
+    cyclic: set = set()
+    for b in fn.blocks:
+        seen: set = set()
+        work = list(succ[id(b)])
+        while work:
+            x = work.pop()
+            if x == id(b):
+                cyclic.add(x)
+                break
+            if x in seen:
+                continue
+            seen.add(x)
+            work.extend(succ.get(x, ()))
+    return cyclic
+
+
+def _contains_store(fn: Function, _seen: Optional[set] = None) -> bool:
+    """True if ``fn`` contains a memory STORE transitively."""
+    if _seen is None:
+        _seen = set()
+    if id(fn) in _seen:
+        return False
+    _seen.add(id(fn))
+    for i in fn.instructions():
+        if i.op is Op.STORE:
+            return True
+        if i.op is Op.CALL and _contains_store(i.operands[0], _seen):
+            return True
+    return False
+
+
 class _BProgram(_DProgram):
     """Decoded program with two parallel node tables sharing one numbering:
     ``blocks`` (per-warp handlers, the desync fallback) and ``bblocks``
@@ -1408,24 +1465,94 @@ class _BProgram(_DProgram):
     FUSEABLE = _PLAIN_OPS - {Op.ATOMIC, Op.PRINT}
 
     def __init__(self, fn: Function, W: int, strict: bool,
-                 n_warps: int) -> None:
+                 n_warps: int, *, grid_mode: bool = False,
+                 ride_along: bool = True) -> None:
         self.n_warps = n_warps
-        # The mixed-split ride-along (see the CBR node) walks single-sided
-        # warps through the other side under an empty mask.  That is
+        self.grid_mode = grid_mode
+        self.ride_along = ride_along
+        # The mixed-split and vx_pred-loop ride-alongs (see the CBR/PRED
+        # nodes) walk single-sided / loop-exited warps through code their
+        # oracle counterparts never reach, under an empty mask.  That is
         # stats- and state-exact EXCEPT for barriers: an empty-mask warp
         # would "arrive" at a barrier its oracle counterpart never
         # reaches.  Functions containing barriers therefore desync on
-        # mixed split decisions instead (calls cannot hide barriers from
-        # lockstep: a barrier-containing callee is impure and desyncs).
+        # mixed split/loop-exit decisions instead (calls cannot hide
+        # barriers from lockstep: a barrier-containing callee is impure
+        # and desyncs).  In grid mode the rows are INDEPENDENT
+        # single-warp workgroups — a barrier synchronizes only the one
+        # warp of its own workgroup, so an empty ride-along row crossing
+        # it has no cross-warp effect and ride-along stays safe.
         self.has_barrier = any(i.op is Op.BARRIER
                                for i in fn.instructions())
+        barrier_safe = grid_mode or not self.has_barrier
+        # mixed vx_split ride-along: PR 2 behavior, always on where safe.
+        self.split_ride_ok = barrier_safe
+        # vx_pred loop ride-along: the PR 3 extension; ride_along=False
+        # restores the PR 2 desync-on-mixed-loop-exit baseline WITHOUT
+        # touching the split ride-along (benchmark comparisons would be
+        # inflated otherwise).
+        self.pred_ride_ok = ride_along and barrier_safe
+        # Grid mode interleaves INDEPENDENT workgroups per instruction.
+        # Within one DYNAMIC execution of a store the row-major scatter
+        # reproduces the oracle's last-workgroup-wins order on a cell
+        # clash; it cannot across two different dynamic executions —
+        # whether those come from two static store sites (static
+        # instruction order vs workgroup order) or from one site inside
+        # a loop executed at different trips (trip order vs workgroup
+        # order).  Both classes therefore become desync nodes in grid
+        # mode: stores to buffers with more than one static site, and
+        # stores in blocks that sit on a CFG cycle.  Rows drain to
+        # completion in workgroup order from the first such store, which
+        # is oracle-exact.  (The wg-batched mode keeps the PR 2
+        # contract: cross-warp store clashes are excluded by the curated
+        # bench lists instead.)
+        self._hazard_stores: set = set()
+        if grid_mode:
+            sites: Counter = Counter()
+            for i in fn.instructions():
+                if i.op is Op.STORE:
+                    sites[id(i.operands[0])] += 1
+            cyclic = _cyclic_blocks(fn)
+            # a store-containing callee is a store site this flat count
+            # cannot attribute to a buffer (its pointer params bind at
+            # the call, and module globals are shared objects), so its
+            # presence makes EVERY caller store order-hazardous — the
+            # call itself already desyncs (see the CALL node)
+            callee_stores = any(
+                i.op is Op.CALL and _contains_store(i.operands[0])
+                for i in fn.instructions())
+            self._hazard_stores = {
+                id(i) for b in fn.blocks for i in b.instrs
+                if i.op is Op.STORE and (callee_stores
+                                         or sites[id(i.operands[0])] > 1
+                                         or id(b) in cyclic)}
         super().__init__(fn, W, strict)
         self.bblocks: List[_DBlock] = [self._decode_block_batched(b)
                                        for b in fn.blocks]
 
-    # -- per-warp side: atomics/prints become standalone nodes -------------
+    # -- run partition: order-hazardous grid-mode stores leave the runs ----
+    def _partition(self, b: Block) -> List[Tuple[str, Any]]:
+        if not self._hazard_stores:
+            return super()._partition(b)
+        parts: List[Tuple[str, Any]] = []
+        run: List[Instr] = []
+        for i in b.instrs:
+            if i.op in self.FUSEABLE and id(i) not in self._hazard_stores:
+                run.append(i)
+            else:
+                if run:
+                    parts.append(("run", run))
+                    run = []
+                parts.append(("ctrl", i))
+        if run:
+            parts.append(("run", run))
+        return parts
+
+    # -- per-warp side: atomics/prints (and order-hazardous grid-mode
+    # stores) become standalone nodes --------------------------------------
     def _control(self, i: Instr, b: Block):
-        if i.op in (Op.ATOMIC, Op.PRINT):
+        if i.op in (Op.ATOMIC, Op.PRINT) or (
+                i.op is Op.STORE and id(i) in self._hazard_stores):
             h = self._plain(i)
             opv = i.op.value
 
@@ -1468,12 +1595,12 @@ class _BProgram(_DProgram):
                 bo_items = tuple(bo.items())
 
                 def brun_node(st, hs=hs, n=n, bo_items=bo_items, nw=nw):
+                    n_act = st.active
                     f = st.fuel
-                    f[0] -= n * nw
+                    f[0] -= n * (n_act or 1)
                     if f[0] <= 0:
                         raise ExecError(
                             "out of fuel (possible infinite loop)")
-                    n_act = st.active
                     if n_act:
                         stt = st.stats
                         stt.instrs += n * n_act
@@ -1611,7 +1738,8 @@ class _BProgram(_DProgram):
         nw = self.n_warps
         g = self._getter
         fname = self.fn.name
-        if op in (Op.ATOMIC, Op.PRINT):
+        if op in (Op.ATOMIC, Op.PRINT) or (
+                op is Op.STORE and id(i) in self._hazard_stores):
             # warp-order-sensitive: always fall back to per-warp execution
             return lambda st: _DESYNC
         if op is Op.BR:
@@ -1628,11 +1756,11 @@ class _BProgram(_DProgram):
             else_i = self._bidx[id(i.operands[2])]
             label = b.label
 
-            has_barrier = self.has_barrier
+            ride_ok = self.split_ride_ok
 
             def bcbr_node(st, gc_=gc_, then_i=then_i, else_i=else_i,
                           opv=opv, label=label, fname=fname, nw=nw,
-                          has_barrier=has_barrier):
+                          ride_ok=ride_ok):
                 mask = st.mask
                 sp = st.pending
                 if sp is not None:
@@ -1657,7 +1785,7 @@ class _BProgram(_DProgram):
                         st.stack.append((sp.tok, mask, -1, None))
                         _bset_mask(st, else_mask, ea)
                         return else_i
-                    if has_barrier and not (ta & ea).all():
+                    if not ride_ok and not (ta & ea).all():
                         return _DESYNC   # ride-along is barrier-unsafe
                     # mixed / both-sided: push a both-style entry for ALL
                     # warps.  A single-sided warp rides through the other
@@ -1686,13 +1814,20 @@ class _BProgram(_DProgram):
                     raise UniformityViolation(
                         f"divergent un-managed branch in %{label} "
                         f"of @{fname}")
-                taken = np.where(act, anyc, True)
-                if taken.all():
+                # consensus over rows that still have live lanes; empty
+                # ride-along rows follow the consensus side (they issue
+                # zero stats wherever they walk, and both sides reach the
+                # construct's join/merge point)
+                if not act.any():
                     t = True
-                elif not taken.any():
-                    t = False
                 else:
-                    return _DESYNC
+                    tk = anyc[act]
+                    if tk.all():
+                        t = True
+                    elif not tk.any():
+                        t = False
+                    else:
+                        return _DESYNC
                 _bcount(st, opv, nw)
                 return then_i if t else else_i
             return bcbr_node
@@ -1703,9 +1838,11 @@ class _BProgram(_DProgram):
             outside_i = self._bidx[id(i.operands[3])]
             attrs = i.attrs
 
+            ride_ok = self.pred_ride_ok
+
             def bpred_node(st, gc_=gc_, tok_i=tok_i, inside_i=inside_i,
                            outside_i=outside_i, attrs=attrs, opv=opv,
-                           nw=nw):
+                           nw=nw, ride_ok=ride_ok):
                 mask = st.mask
                 c = np.broadcast_to(gc_(st), mask.shape).astype(bool)
                 if attrs.get("negate", False):
@@ -1717,12 +1854,30 @@ class _BProgram(_DProgram):
                     _bset_mask(st, new_mask, nz)
                     return inside_i
                 if not nz.any():
+                    # no warp has live lanes left: every row leaves the
+                    # loop, restoring its own tmc_save'd entry mask —
+                    # rows that exited earlier (and rode along under an
+                    # empty mask) restore the exact mask their per-warp
+                    # counterparts restored at their own exit trip, since
+                    # the token is loop-invariant
                     _bcount(st, opv, nw)
                     tok = st.env[tok_i]
                     if tok.ndim == 1:
                         tok = np.broadcast_to(tok, mask.shape)
                     _bset_mask(st, tok.copy())
                     return outside_i
+                if ride_ok:
+                    # vx_pred loop ride-along: warps whose lanes all
+                    # failed the loop predicate keep walking the loop
+                    # body under an empty mask row instead of desyncing
+                    # the whole workgroup.  Empty rows issue zero stats
+                    # and all their stores are masked out, so ExecStats
+                    # and memory traffic stay bit-identical to the
+                    # per-warp schedule; the rows re-activate when the
+                    # last warp exits and the entry masks are restored.
+                    _bcount(st, opv, nw)
+                    _bset_mask(st, new_mask, nz)
+                    return inside_i
                 return _DESYNC              # warps disagree on the loop exit
             return bpred_node
         if op is Op.RET:
@@ -1772,7 +1927,11 @@ class _BProgram(_DProgram):
             return bbarrier_node
         if op is Op.CALL:
             callee: Function = i.operands[0]
-            if not _lockstep_pure(callee):
+            if not _lockstep_pure(callee) or (
+                    self.grid_mode and _contains_store(callee)):
+                # grid mode: a callee store could be one of several
+                # sites writing a buffer (undetectable from the caller's
+                # flat site count) — drain rows in workgroup order
                 return lambda st: _DESYNC
             ret_dtype = _TY_DTYPE.get(callee.ret_ty, np.float32)
             ri = self.reg_idx[id(i.result)] if i.result is not None else -1
@@ -1787,17 +1946,20 @@ class _BProgram(_DProgram):
                     binders.append((p, "val", g(a)))
             binders = tuple(binders)
             strict = self.strict
+            grid_mode = self.grid_mode
+            ride_along = self.ride_along
 
             def bcall_node(st, callee=callee, binders=binders, ri=ri,
                            ret_dtype=ret_dtype, opv=opv, W=W, nw=nw,
-                           strict=strict):
-                f = st.fuel
-                f[0] -= nw
-                if f[0] <= 0:
-                    raise ExecError("out of fuel (possible infinite loop)")
+                           strict=strict, grid_mode=grid_mode,
+                           ride_along=ride_along):
                 mask = st.mask
                 act = st.act_rows
                 n_act = st.active
+                f = st.fuel
+                f[0] -= max(n_act, 1)
+                if f[0] <= 0:
+                    raise ExecError("out of fuel (possible infinite loop)")
                 if n_act == 0:
                     if ri >= 0:
                         st.env[ri] = np.zeros(W, dtype=ret_dtype)
@@ -1814,7 +1976,9 @@ class _BProgram(_DProgram):
                         cargs[id(p)] = payload(st)
                     else:
                         raise ExecError("pointer arg must be param/global")
-                cprog = _decode_batched(callee, W, strict, nw)
+                cprog = _decode_batched(callee, W, strict, nw,
+                                        grid_mode=grid_mode,
+                                        ride_along=ride_along)
                 sub = _DState(cprog, cargs, mask.copy(), st.ctx, st.mem,
                               stt, st.fuel)
                 sub.warp_ctxs = st.warp_ctxs
@@ -1835,9 +1999,14 @@ class _BProgram(_DProgram):
 
 def _bcount(st: _DState, opv: str, nw: int) -> None:
     """Fuel + dynamic-issue accounting for one batched control node: one
-    fuel unit per warp, one issue per warp with a live mask."""
+    fuel unit and one issue per warp with a live mask.  Charging only
+    ACTIVE rows keeps the batched fuel burn aligned with the per-warp
+    oracle even when most rows are empty ride-alongs (a grid batch of 64
+    rows where one long ragged loop keeps the chunk alive must not
+    exhaust a budget the oracle finishes within); the max(..., 1) floor
+    keeps the infinite-loop guard armed when every row is empty."""
     f = st.fuel
-    f[0] -= nw
+    f[0] -= max(st.active, 1)
     if f[0] <= 0:
         raise ExecError("out of fuel (possible infinite loop)")
     n_act = st.active
@@ -2115,6 +2284,194 @@ def _run_wg_batched(bprog: "_BProgram", bst: _DState,
 
 
 # --------------------------------------------------------------------------
+# Grid-level batching
+#
+# spmv/bfs-style launches are many SMALL single-warp workgroups: the
+# workgroup-batched executor never engages (n_warps == 1) and every
+# workgroup pays a full Python node walk.  Grid-level batching packs up to
+# ``_GRID_BATCH_MAX`` single-warp workgroups of one launch into a single
+# (n_wg, W) activation and reuses the _BProgram machinery with rows =
+# workgroups instead of rows = warps:
+#
+#   * barriers synchronize only the single warp of their own workgroup,
+#     so the lockstep barrier node (trivial continue) is exact and the
+#     mixed-decision ride-alongs are barrier-safe even in functions with
+#     barriers (``grid_mode=True``);
+#   * on a desync event (atomic / print / impure call / un-rideable
+#     cross-row disagreement) the rows are sliced into ordinary per-warp
+#     states and each is DRAINED to completion in row order — exactly the
+#     oracle's workgroup order — with barrier events consumed (a
+#     single-warp workgroup's barrier trivially passes).  No re-merge is
+#     attempted: independent workgroups share no barriers.
+#
+# Eligibility is decided per launch by a static scan (``_grid_batchable``):
+#
+#   * no __shared__ memory anywhere in the call graph — rows would alias
+#     one workgroup-private allocation;
+#   * no buffer both read and written (transitively, resolved against the
+#     actual launch bindings, with an np.shares_memory check so
+#     overlapping views of one base array do not slip through) —
+#     interleaving rows per-instruction instead of workgroup-by-workgroup
+#     could change what a load observes (the old top-down ``bfs``
+#     kernel's visited[] is the canonical offender).  This is
+#     conservative: kernels like saxpy (y read+written, but each thread
+#     touches only its own element) fall back to the per-workgroup loop
+#     rather than risk a schedule-dependent result;
+# Buffers with MORE THAN ONE static store site (common from tail
+# duplication: a single source store can compile to several) are handled
+# at decode time instead of refused: those stores become grid-mode desync
+# nodes (``_BProgram._hazard_stores``) so clashing writes always execute
+# in workgroup order — within one store instruction the row-major scatter
+# already reproduces the oracle's last-workgroup-wins order, but across
+# two different store sites static instruction order would contradict
+# workgroup order.
+# --------------------------------------------------------------------------
+
+_GRID_BATCH_MAX = 64
+
+
+def _grid_batchable(fn: Function, argmap: Dict[int, Any],
+                    globals_mem: Optional[Dict[str, np.ndarray]] = None
+                    ) -> bool:
+    """True if a single-warp grid of ``fn`` may run row-batched: no
+    shared memory and no buffer both loaded and stored/RMW'd (resolved
+    through calls against the actual launch bindings, including
+    overlapping-view detection).  Multi-site stores through ONE root
+    pointer do not refuse — they desync at decode time instead
+    (``_BProgram._hazard_stores``); stores reaching one buffer through
+    DISTINCT root pointers (aliased params, a param aliasing a global,
+    caller + callee sites) are invisible to that per-pointer site count
+    and are refused here."""
+    loads: set = set()
+    writes: set = set()
+    arrays: Dict[Any, np.ndarray] = {}  # buffer key -> bound ndarray
+    write_roots: Dict[Any, set] = {}    # buffer key -> distinct ptr ids
+    ok = [True]
+
+    def resolve(ptr: Any, binding: Dict[int, Any]) -> Any:
+        if isinstance(ptr, GlobalVar):
+            if ptr.space is AddrSpace.SHARED:
+                ok[0] = False
+                return None
+            key = ("g", ptr.name)
+            if globals_mem is not None and ptr.name in globals_mem:
+                arrays[key] = globals_mem[ptr.name]
+            return key
+        if isinstance(ptr, Param):
+            return binding.get(id(ptr))
+        return None
+
+    def scan(f: Function, binding: Dict[int, Any], depth: int) -> None:
+        if depth > 8:              # runaway recursion: give up, stay safe
+            ok[0] = False
+            return
+        for i in f.instructions():
+            op = i.op
+            if op is Op.LOAD:
+                loads.add(resolve(i.operands[0], binding))
+            elif op is Op.STORE:
+                r = resolve(i.operands[0], binding)
+                writes.add(r)
+                write_roots.setdefault(r, set()).add(id(i.operands[0]))
+            elif op is Op.ATOMIC:
+                r = resolve(i.operands[1], binding)
+                loads.add(r)
+                writes.add(r)
+            elif op is Op.CALL:
+                callee: Function = i.operands[0]
+                sub: Dict[int, Any] = {}
+                for p, a in zip(callee.params, i.operands[1:]):
+                    if p.ty is Ty.PTR and isinstance(a, (Param, GlobalVar)):
+                        sub[id(p)] = resolve(a, binding)
+                scan(callee, sub, depth + 1)
+            if not ok[0]:
+                return
+
+    top: Dict[int, Any] = {}
+    for p in fn.params:
+        if p.ty is Ty.PTR:
+            a = argmap.get(id(p))
+            if isinstance(a, np.ndarray):
+                key = ("a", id(a))
+                top[id(p)] = key
+                arrays[key] = a
+            else:
+                top[id(p)] = None
+    scan(fn, top, 0)
+    if not ok[0]:
+        return False
+    if None in loads or None in writes:
+        return False               # unresolvable pointer: be conservative
+    if loads & writes:
+        return False
+    # one buffer stored through several distinct root pointers (aliased
+    # params, caller+callee sites): the decode-time per-pointer site
+    # count cannot see the clash, so refuse outright
+    if any(len(roots) > 1 for roots in write_roots.values()):
+        return False
+    # distinct ndarray objects can still be views of one base array
+    la = [arrays[k] for k in loads if k in arrays]
+    wa = [arrays[k] for k in writes if k in arrays]
+    for w in wa:
+        for l in la:
+            if np.shares_memory(w, l):
+                return False
+    for i_ in range(len(wa)):          # two stored views of one base
+        for j_ in range(i_ + 1, len(wa)):   # array = cross-instruction
+            if np.shares_memory(wa[i_], wa[j_]):   # write-write hazard
+                return False
+    return True
+
+
+def _stack_intrs(ctxs: Sequence[_WarpCtx], W: int,
+                 strict: bool) -> _WarpCtx:
+    """Batch per-row/_per-warp intrinsic contexts: row-varying values
+    stack into 2D rows, invariant ones stay 1D and broadcast."""
+    intr2: Dict[Tuple[str, int], np.ndarray] = {}
+    for key in ctxs[0].intr:
+        vals = [c.intr[key] for c in ctxs]
+        if all(v is vals[0] for v in vals):
+            intr2[key] = vals[0]
+        else:
+            intr2[key] = np.stack(vals)
+    return _WarpCtx(W, intr2, strict)
+
+
+def _run_grid_batched(bprog: "_BProgram", bst: _DState) -> None:
+    """Drive one (n_wg, W) batch of independent single-warp workgroups:
+    lockstep until a desync event, then drain each row to completion in
+    row order (the oracle's workgroup order), consuming barrier events."""
+    bi, ni = 0, 0
+    while True:
+        nodes = bprog.bblocks[bi].nodes
+        nn = len(nodes)
+        jump: Optional[int] = None
+        desync = False
+        while ni < nn:
+            r = nodes[ni](bst)
+            if r is None:
+                ni += 1
+                continue
+            if type(r) is int:
+                jump = r
+                break
+            desync = True
+            break
+        if desync:
+            for w in range(bprog.n_warps):
+                stw = _slice_state(bst, w, bst.warp_ctxs[w])
+                for _ in _resume_decoded(bprog, stw, bi, ni):
+                    pass       # barrier of a 1-warp workgroup: continue
+            return
+        if jump is None:
+            raise ExecError(
+                f"block %{bprog.bblocks[bi].label} fell through")
+        if jump < 0:
+            return
+        bi, ni = jump, 0
+
+
+# --------------------------------------------------------------------------
 # Kernel launch (grid scheduling = the thread-schedule code VOLT's
 # front-end inserts; here it lives in the host runtime)
 # --------------------------------------------------------------------------
@@ -2123,7 +2480,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
            params: LaunchParams,
            scalar_args: Optional[Dict[str, Any]] = None,
            globals_mem: Optional[Dict[str, np.ndarray]] = None,
-           *, decoded: bool = True, batched: bool = True) -> ExecStats:
+           *, decoded: bool = True, batched: bool = True,
+           ride_along: bool = True) -> ExecStats:
     """Execute a compiled kernel over the launch grid; returns stats.
     Buffers are mutated in place (device memory semantics).
 
@@ -2133,9 +2491,12 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     compare against.  ``batched=True`` (default) additionally runs
     multi-warp workgroups through the workgroup-batched lockstep executor
     (one (n_warps, W) node walk per workgroup while the warps agree on
-    control flow, transparent per-warp fallback otherwise); it engages
-    only when ``decoded`` is on, the workgroup has more than one warp and
-    OOB-load checking is off."""
+    control flow, transparent per-warp fallback otherwise) and packs
+    eligible single-warp grids into (n_wg, W) grid-level batches; both
+    engage only when ``decoded`` is on and OOB-load checking is off.
+    ``ride_along=False`` disables the vx_pred-loop ride-along and
+    grid-level batching (the PR 2 executor, kept as a benchmark
+    baseline)."""
     fn = module_fn
     scalar_args = scalar_args or {}
     mem = DeviceMemory(buffers, globals_mem)
@@ -2144,12 +2505,6 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     fuel = [params.fuel]
     n_wg = params.grid * params.grid_y
     n_warps = params.warps_per_wg
-    use_batched = bool(decoded and batched and n_warps > 1
-                       and not params.strict_oob_loads)
-    prog = _decode(fn, W, params.strict_oob_loads) \
-        if decoded and not use_batched else None
-    bprog = _decode_batched(fn, W, params.strict_oob_loads, n_warps) \
-        if use_batched else None
 
     # launch-invariant pieces, hoisted out of the grid loops: kernel
     # argument vectors and the constant CSR-backed intrinsics (all arrays
@@ -2166,6 +2521,17 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
             if v is None:
                 raise ExecError(f"no scalar bound for {p.name}")
             argmap[id(p)] = np.full(W, v, dtype=_TY_DTYPE[p.ty])
+
+    use_batched = bool(decoded and batched and n_warps > 1
+                       and not params.strict_oob_loads)
+    use_grid = bool(decoded and batched and ride_along and n_warps == 1
+                    and n_wg > 1 and not params.strict_oob_loads
+                    and _grid_batchable(fn, argmap, mem.globals_mem))
+    prog = _decode(fn, W, params.strict_oob_loads) \
+        if decoded and not use_batched and not use_grid else None
+    bprog = _decode_batched(fn, W, params.strict_oob_loads, n_warps,
+                            ride_along=ride_along) \
+        if use_batched else None
     base_intr = {
         ("local_size", 0): np.full(W, params.local_size, np.int32),
         ("local_size", 1): np.full(W, params.local_size_y, np.int32),
@@ -2181,6 +2547,47 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     }
     warp_ids = [np.full(W, wrp, np.int32)
                 for wrp in range(params.warps_per_wg)]
+
+    if use_grid:
+        # grid-level batching: pack single-warp workgroups into (n_wg, W)
+        # activations — rows are workgroups; per-workgroup intrinsics
+        # (group_id, global_id, core_id) stack into rows, the rest stay
+        # 1D and broadcast
+        lanes = np.arange(W)
+        active = lanes < params.wg_threads
+        lx = lanes % params.local_size
+        ly = lanes // params.local_size
+        row_base = dict(base_intr)
+        row_base[("local_id", 0)] = lx.astype(np.int32)
+        row_base[("local_id", 1)] = ly.astype(np.int32)
+        row_base[("lane_id", 0)] = lanes.astype(np.int32)
+        row_base[("warp_id", 0)] = warp_ids[0]
+        with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+            for c0 in range(0, n_wg, _GRID_BATCH_MAX):
+                nc = min(_GRID_BATCH_MAX, n_wg - c0)
+                gprog = _decode_batched(fn, W, params.strict_oob_loads,
+                                        nc, grid_mode=True)
+                row_ctxs: List[_WarpCtx] = []
+                for k in range(nc):
+                    gx = (c0 + k) % params.grid
+                    gy = (c0 + k) // params.grid
+                    intr = dict(row_base)
+                    intr[("group_id", 0)] = np.full(W, gx, np.int32)
+                    intr[("group_id", 1)] = np.full(W, gy, np.int32)
+                    intr[("core_id", 0)] = np.full(W, gx % 4, np.int32)
+                    intr[("global_id", 0)] = (gx * params.local_size
+                                              + lx).astype(np.int32)
+                    intr[("global_id", 1)] = (gy * params.local_size_y
+                                              + ly).astype(np.int32)
+                    row_ctxs.append(_WarpCtx(W, intr,
+                                             params.strict_oob_loads))
+                gctx = _stack_intrs(row_ctxs, W, params.strict_oob_loads)
+                gst = _DState(gprog, argmap,
+                              np.broadcast_to(active, (nc, W)).copy(),
+                              gctx, mem, stats, fuel)
+                gst.warp_ctxs = row_ctxs
+                _run_grid_batched(gprog, gst)
+        return stats
 
     for wg_lin in range(n_wg):
         gx = wg_lin % params.grid
@@ -2214,14 +2621,7 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
             # workgroup-batched lockstep execution: one 2D activation for
             # the whole workgroup; per-warp intrinsics stack into rows,
             # warp-invariant ones stay 1D and broadcast
-            intr2: Dict[Tuple[str, int], np.ndarray] = {}
-            for key in warp_ctxs[0].intr:
-                vals = [c.intr[key] for c in warp_ctxs]
-                if all(v is vals[0] for v in vals):
-                    intr2[key] = vals[0]
-                else:
-                    intr2[key] = np.stack(vals)
-            bctx = _WarpCtx(W, intr2, params.strict_oob_loads)
+            bctx = _stack_intrs(warp_ctxs, W, params.strict_oob_loads)
             bst = _DState(bprog, argmap, np.stack(warp_masks), bctx, mem,
                           stats, fuel)
             bst.warp_ctxs = warp_ctxs

@@ -257,6 +257,48 @@ def spmv(row_ptr: "ptr_i32 const", cols: "ptr_i32 const",
 
 
 @opencl.kernel
+def spmv_csr(row_ptr: "ptr_i32 const", cols: "ptr_i32 const",
+             vals: "ptr_f32 const", x: "ptr_f32 const", y: "ptr_f32",
+             n: "i32 uniform"):
+    # CSR sparse matrix-vector product over a ragged degree
+    # distribution: the per-row nonzero loop is RAGGED both within a warp
+    # (vx_pred masks lanes out as their rows run dry) and across warps
+    # (warps disagree on the loop exit -> vx_pred ride-along), and the
+    # grid is many single-warp workgroups (grid-level batching).
+    gid = get_global_id(0)
+    if gid < n:
+        acc = 0.0
+        for e in range(row_ptr[gid], row_ptr[gid + 1]):
+            acc += vals[e] * x[cols[e]]
+        y[gid] = acc
+
+
+@opencl.kernel
+def bfs_frontier(row_ptr: "ptr_i32 const", cols: "ptr_i32 const",
+                 frontier: "ptr_i32 const", next_frontier: "ptr_i32",
+                 visited: "ptr_i32 const", n: "i32 uniform"):
+    # bottom-up BFS step: node u joins the next frontier if it is
+    # unvisited and ANY in-neighbor is in the current frontier.  Unlike
+    # the top-down `bfs` kernel, every thread writes only its own cell
+    # and never reads a buffer the kernel writes, so results and
+    # ExecStats are schedule-independent — safe for lockstep batching.
+    # The edge scan has a data-dependent early exit (`break`), so warps
+    # leave the ragged loop at wildly different trip counts.
+    gid = get_global_id(0)
+    if gid < n:
+        found = 0
+        if visited[gid] == 0:
+            e = row_ptr[gid]
+            end = row_ptr[gid + 1]
+            while e < end:
+                if frontier[cols[e]] != 0:
+                    found = 1
+                    break
+                e += 1
+        next_frontier[gid] = found
+
+
+@opencl.kernel
 def srad_flag(img: "ptr_f32 const", out: "ptr_f32", lam: "f32 uniform",
               mode: "i32 uniform", n: "i32 uniform"):
     # Rodinia-srad-style: a heavy math body selected by a UNIFORM mode
@@ -758,6 +800,67 @@ def _ref_spmv(bufs, sc):
     return {**bufs, "y": y}
 
 
+def _ragged_csr(rng, n: int, base_deg: int = 16,
+                max_deg: int = 32) -> Tuple[np.ndarray, np.ndarray]:
+    """Ragged-degree CSR skeleton: uniformly scattered short rows, a few
+    heavy rows, and empty rows — trip counts diverge within warps (lanes
+    drop out of the vx_pred loop) AND across warps (warps disagree on the
+    loop exit), without a single pathological row dominating the walk."""
+    deg = rng.integers(0, base_deg, n)
+    hot = rng.uniform(0, 1, n) < 0.05
+    deg[hot] = rng.integers(base_deg, max_deg + 1, int(hot.sum()))
+    deg[rng.uniform(0, 1, n) < 0.15] = 0          # empty rows too
+    row_ptr = np.zeros(n + 1, np.int32)
+    row_ptr[1:] = np.cumsum(deg)
+    cols = rng.integers(0, n, int(row_ptr[-1])).astype(np.int32)
+    return row_ptr, cols
+
+
+def _mk_spmv_csr(rng):
+    g = 16
+    n = g * 32
+    row_ptr, cols = _ragged_csr(rng, n)
+    vals = rng.standard_normal(len(cols)).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    return {"row_ptr": row_ptr, "cols": cols, "vals": vals, "x": x,
+            "y": np.zeros(n, np.float32)}, {"n": n}, _params(g)
+
+
+def _ref_spmv_csr(bufs, sc):
+    n = sc["n"]
+    y = bufs["y"].copy()
+    for i in range(n):
+        lo, hi = bufs["row_ptr"][i], bufs["row_ptr"][i + 1]
+        y[i] = (bufs["vals"][lo:hi]
+                * bufs["x"][bufs["cols"][lo:hi]]).sum()
+    return {**bufs, "y": y}
+
+
+def _mk_bfs_frontier(rng):
+    g = 16
+    n = g * 32
+    row_ptr, cols = _ragged_csr(rng, n, base_deg=12, max_deg=32)
+    frontier = (rng.uniform(0, 1, n) < 0.1).astype(np.int32)
+    visited = (rng.uniform(0, 1, n) < 0.3).astype(np.int32)
+    return {"row_ptr": row_ptr, "cols": cols, "frontier": frontier,
+            "next_frontier": np.zeros(n, np.int32),
+            "visited": visited}, {"n": n}, _params(g)
+
+
+def _ref_bfs_frontier(bufs, sc):
+    n = sc["n"]
+    nf = bufs["next_frontier"].copy()
+    for u in range(n):
+        found = 0
+        if bufs["visited"][u] == 0:
+            for e in range(bufs["row_ptr"][u], bufs["row_ptr"][u + 1]):
+                if bufs["frontier"][bufs["cols"][e]]:
+                    found = 1
+                    break
+        nf[u] = found
+    return {**bufs, "next_frontier": nf}
+
+
 def _mk_srad(rng):
     g = 8
     n = g * 32
@@ -917,6 +1020,10 @@ BENCHES: Dict[str, Bench] = {
     "nearn": Bench("nearn", nearn, _mk_nearn, _ref_nearn),
     "stencil": Bench("stencil", stencil, _mk_stencil, _ref_stencil),
     "spmv": Bench("spmv", spmv, _mk_spmv, _ref_spmv, atol=1e-3),
+    "spmv_csr": Bench("spmv_csr", spmv_csr, _mk_spmv_csr, _ref_spmv_csr,
+                      atol=1e-3),
+    "bfs_frontier": Bench("bfs_frontier", bfs_frontier, _mk_bfs_frontier,
+                          _ref_bfs_frontier),
     "cfd_like": Bench("cfd_like", cfd_like, _mk_cfd, _ref_cfd),
     "srad_flag": Bench("srad_flag", srad_flag, _mk_srad, _ref_srad,
                        atol=1e-3),

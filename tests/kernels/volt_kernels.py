@@ -107,6 +107,121 @@ def atomics_kernel(x: "ptr_f32 const", hist: "ptr_i32", total: "ptr_f32",
         atomic_add(total, 0, v)
 
 
+# -- ragged-loop kernels (vx_pred ride-along / grid batching tests) ---------
+
+# the ragged-loop workloads themselves live in the bench suite; re-export
+# them so the executor tests exercise the SAME kernel objects (a fix to
+# one copy cannot silently leave a drifted twin behind)
+from repro.volt_bench.suite import bfs_frontier, spmv_csr  # noqa: F401
+
+
+@opencl.kernel
+def loop_store_conflict(trip: "ptr_i32 const", out: "ptr_f32",
+                        n: "i32 uniform"):
+    # SINGLE static store site inside a ragged loop, scattering to a
+    # fixed cell: naive lockstep would resolve cross-workgroup clashes
+    # in trip order (rows with more trips overwrite rows with fewer),
+    # the oracle resolves them in workgroup order — grid mode must
+    # desync the store (cyclic-block hazard rule)
+    gid = get_global_id(0)
+    i = 0
+    while i < trip[gid]:
+        out[0] = 1.0 * gid
+        i += 1
+
+
+@opencl.kernel
+def ragged_nested(trip: "ptr_i32 const", x: "ptr_f32 const",
+                  out: "ptr_f32", n: "i32 uniform"):
+    # driver for the ride-along property tests: a data-dependent
+    # trip-count loop with a nested vx_split diamond and a divergent
+    # early return inside the loop body
+    gid = get_global_id(0)
+    t = trip[gid]
+    acc = 0.0
+    i = 0
+    while i < t:
+        v = x[(gid + i * 7) % n]
+        if v > 0.0:
+            acc += v
+        else:
+            acc -= 0.5 * v
+        if acc > 6.0:
+            out[gid] = acc + 100.0
+            return
+        i += 1
+    out[gid] = acc
+
+
+@opencl.kernel
+def ragged_barrier_loop(trip: "ptr_i32 const", x: "ptr_f32 const",
+                        out: "ptr_f32", n: "i32 uniform"):
+    # barrier INSIDE a data-dependent loop: legal only when every thread
+    # of the workgroup runs the same trip count — ride-along must NOT
+    # engage here (it would fabricate barrier arrivals for exited warps);
+    # ragged trips must produce the same barrier-divergence error as the
+    # per-warp oracle
+    gid = get_global_id(0)
+    lid = get_local_id(0)
+    t = trip[gid]
+    acc = 0.0
+    i = 0
+    while i < t:
+        acc += x[(lid + i) % n]
+        barrier()
+        i += 1
+    out[gid] = acc
+
+
+@opencl.kernel
+def alias_two_params(p: "ptr_f32", q: "ptr_f32", n: "i32 uniform"):
+    # one single-site store per pointer param; launched with p and q
+    # bound to the SAME buffer the per-pointer hazard-store count cannot
+    # see the cell clash — the grid batcher's launch gate must refuse
+    gid = get_global_id(0)
+    if gid == 40:
+        p[0] = 1.0
+    if gid == 3:
+        q[0] = 2.0
+
+
+@opencl.device
+def poke0(buf: "ptr_f32", v: "f32") -> "f32":
+    buf[0] = v
+    return 0.0
+
+
+@opencl.kernel(deps=(poke0,))
+def callee_store_conflict(out: "ptr_f32", n: "i32 uniform"):
+    # a top-level single-site store plus a store to the SAME buffer
+    # hidden inside a device function: the flat per-pointer site count
+    # cannot attribute the callee's store, so in grid mode the presence
+    # of a store-containing callee must make every caller store a
+    # desync node — the later workgroup's top-level write has to win
+    gid = get_global_id(0)
+    if gid == 40:
+        out[0] = 1.0
+    if gid == 3:
+        t = poke0(out, 2.0)
+
+
+@opencl.kernel
+def two_store_conflict(out: "ptr_f32", n: "i32 uniform"):
+    # two static stores that clash on one cell from DIFFERENT workgroups:
+    # the oracle orders the writes by workgroup (the later workgroup's
+    # gid==40 store wins), naive lockstep row-batching would order them
+    # by static instruction (gid==3 would win) — in grid mode these
+    # stores must decode as desync nodes (_BProgram._hazard_stores) so
+    # the clash resolves in workgroup order
+    gid = get_global_id(0)
+    if gid == 40:
+        out[0] = 1.0
+    if gid == 3:
+        out[0] = 2.0
+    if gid < n:
+        out[gid + 1] = 3.0
+
+
 # -- multi-warp workgroup kernels (workgroup-batched executor tests) --------
 
 @opencl.kernel

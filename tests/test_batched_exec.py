@@ -30,18 +30,12 @@ FULL = ABLATION_LADDER[-1]
 MULTI_WARP_BENCHES = [
     "vecadd", "saxpy", "dotproduct", "transpose", "psort", "sfilter",
     "sgemm", "blackscholes", "pathfinder", "kmeans", "nearn", "stencil",
-    "spmv", "cfd_like", "srad_flag", "vote_hw", "bscan_hw",
-    "atomic_naive", "atomic_agg",
+    "spmv", "spmv_csr", "bfs_frontier", "cfd_like", "srad_flag",
+    "vote_hw", "bscan_hw", "atomic_naive", "atomic_agg",
 ]
 
 
-def _multi_warp(params: interp.LaunchParams,
-                factor: int = 4) -> interp.LaunchParams:
-    total = params.grid * params.local_size
-    local = min(params.local_size * factor, total)
-    return interp.LaunchParams(grid=(total + local - 1) // local,
-                               local_size=local,
-                               warp_size=params.warp_size)
+_multi_warp = interp.fold_warps
 
 
 def _assert_parity(name, fn, bufs0, params, scalars):
@@ -176,6 +170,193 @@ def test_barrier_divergence_error_names_warps():
         assert "workgroup (0, 0)" in msg
         assert "[0]" in msg, f"waiting warp not named: {msg}"
         assert "[1, 2, 3]" in msg, f"exited warps not named: {msg}"
+
+
+# -------------------------------------------------------------------------
+# vx_pred loop ride-along + grid-level batching
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["spmv_csr", "bfs_frontier"])
+def test_ragged_loop_ride_along_parity(name):
+    """Mixed loop-exit decisions stay in lockstep (ride-along) and remain
+    bit-identical to the oracle; the ride_along=False baseline (the PR 2
+    desync behavior) must agree too."""
+    b = BENCHES[name]
+    rng = np.random.default_rng(7)
+    bufs0, scalars, params = b.make(rng)
+    mod = b.handle.build(None)
+    ck = run_pipeline(mod, b.handle.name, FULL)
+    mp = _multi_warp(params)
+    bat, st = _assert_parity(name, ck.fn, bufs0, mp, scalars)
+    old = {k: v.copy() for k, v in bufs0.items()}
+    st_old = interp.launch(ck.fn, old, mp, scalar_args=scalars,
+                           decoded=True, batched=True, ride_along=False)
+    assert st_old.instrs == st.instrs and st_old.by_op == st.by_op
+    for k in old:
+        np.testing.assert_array_equal(old[k], bat[k])
+
+
+def test_grid_batchable_gate():
+    """The grid-level batcher refuses kernels with shared memory or a
+    buffer both read and written, and accepts pure-gather kernels."""
+    expected = {
+        "spmv": True,          # loads row_ptr/cols/vals/x, stores y
+        "spmv_csr": True,
+        "bfs_frontier": True,  # pull-style: never reads a written buffer
+        "vecadd": True,
+        "stencil": True,       # multi-site stores desync, not refuse
+        "bfs": False,          # reads AND writes visited[] (top-down)
+        "saxpy": False,        # y read+written (conservative refusal)
+        "reduce0": False,      # __shared__ tile
+        "dotproduct": False,   # atomic RMW counts as read+write
+    }
+    for name, want in expected.items():
+        b = BENCHES[name]
+        mod = b.handle.build(None)
+        ck = run_pipeline(mod, b.handle.name, FULL)
+        rng = np.random.default_rng(0)
+        bufs0, _, _ = b.make(rng)
+        argmap = {id(p): bufs0.get(p.name) for p in ck.fn.params}
+        got = interp._grid_batchable(ck.fn, argmap)
+        assert got == want, f"{name}: _grid_batchable={got}, want {want}"
+
+
+def test_grid_multi_store_conflict_ordered():
+    """Two static stores clashing on one cell from different workgroups
+    (reviewer repro): in grid mode stores to multi-site buffers are
+    desync nodes, so the clash executes in workgroup order — the later
+    workgroup's write must win exactly as in the oracle, bit-identical
+    stats included."""
+    mod = K.two_store_conflict.build(None)
+    ck = run_pipeline(mod, "two_store_conflict", FULL)
+    bufs0 = {"out": np.zeros(65, np.float32)}
+    prog = interp._decode_batched(ck.fn, 32, False, 2, grid_mode=True)
+    assert prog._hazard_stores, "conflicting stores must be flagged"
+    params = interp.LaunchParams(grid=2, local_size=32, warp_size=32)
+    bat, _ = _assert_parity("two_store_conflict", ck.fn, bufs0, params,
+                            {"n": 63})
+    assert bat["out"][0] == 1.0    # the later workgroup's write wins
+
+
+def test_grid_aliased_param_stores_refused():
+    """One ndarray bound to two pointer params, each with a single-site
+    store (reviewer repro): the per-pointer _hazard_stores count cannot
+    see the clash, so the launch gate must refuse — and the executors
+    must stay bit-identical via the per-workgroup fallback.  (Buffers
+    are NOT copied per run here: copying would silently un-alias them.)"""
+    mod = K.alias_two_params.build(None)
+    ck = run_pipeline(mod, "alias_two_params", FULL)
+    shared = np.zeros(2, np.float32)
+    argmap = {id(pp): shared for pp in ck.fn.params if pp.name in "pq"}
+    assert not interp._grid_batchable(ck.fn, argmap)
+    params = interp.LaunchParams(grid=2, local_size=32, warp_size=32)
+    outs = {}
+    for label, kw in (("oracle", dict(decoded=False)),
+                      ("batched", dict(decoded=True, batched=True))):
+        arr = np.zeros(2, np.float32)
+        st = interp.launch(ck.fn, {"p": arr, "q": arr}, params,
+                           scalar_args={"n": 63}, **kw)
+        outs[label] = (st, arr)
+    assert outs["oracle"][0].instrs == outs["batched"][0].instrs
+    np.testing.assert_array_equal(outs["oracle"][1], outs["batched"][1])
+    assert outs["batched"][1][0] == 1.0    # later workgroup's write wins
+
+
+def test_grid_callee_store_conflict_ordered():
+    """Caller store + callee store to the same buffer (reviewer repro):
+    the flat site count cannot attribute the callee's store, so a
+    store-containing callee makes every caller store a grid-mode desync
+    node — the clash must resolve in workgroup order."""
+    mod = K.callee_store_conflict.build(None)
+    ck = run_pipeline(mod, "callee_store_conflict", FULL)
+    prog = interp._decode_batched(ck.fn, 32, False, 2, grid_mode=True)
+    assert prog._hazard_stores, "caller store must be flagged hazardous"
+    bufs0 = {"out": np.zeros(1, np.float32)}
+    params = interp.LaunchParams(grid=2, local_size=32, warp_size=32)
+    bat, _ = _assert_parity("callee_store_conflict", ck.fn, bufs0,
+                            params, {"n": 64})
+    assert bat["out"][0] == 1.0    # wg1's top-level write wins
+
+
+def test_grid_loop_store_conflict_ordered():
+    """A SINGLE static store site inside a ragged loop (reviewer repro):
+    rows writing the same cell at different trip counts must resolve in
+    workgroup order, not trip order — grid mode flags stores in cyclic
+    blocks as desync nodes."""
+    mod = K.loop_store_conflict.build(None)
+    ck = run_pipeline(mod, "loop_store_conflict", FULL)
+    prog = interp._decode_batched(ck.fn, 32, False, 2, grid_mode=True)
+    assert prog._hazard_stores, "loop store must be flagged hazardous"
+    trip = np.zeros(64, np.int32)
+    trip[0] = 5      # wg0 keeps writing longest...
+    trip[32] = 2     # ...but wg1 is the LATER workgroup and must win
+    bufs0 = {"trip": trip, "out": np.zeros(1, np.float32)}
+    params = interp.LaunchParams(grid=2, local_size=32, warp_size=32)
+    bat, _ = _assert_parity("loop_store_conflict", ck.fn, bufs0, params,
+                            {"n": 64})
+    assert bat["out"][0] == 32.0
+
+
+def test_grid_view_alias_refused():
+    """Overlapping numpy views of one base array must not evade the
+    read-write-hazard refusal (distinct id()s, shared memory)."""
+    b = BENCHES["vecadd"]           # loads x, y; stores z — batchable
+    mod = b.handle.build(None)
+    ck = run_pipeline(mod, b.handle.name, FULL)
+    base = np.zeros(512, np.float32)
+    bufs = {"x": base[0:256], "y": np.zeros(256, np.float32),
+            "z": base[128:384]}     # z overlaps x in the base array
+    argmap = {id(p): bufs.get(p.name) for p in ck.fn.params}
+    assert not interp._grid_batchable(ck.fn, argmap)
+    bufs["z"] = np.zeros(256, np.float32)   # disjoint again: accepted
+    argmap = {id(p): bufs.get(p.name) for p in ck.fn.params}
+    assert interp._grid_batchable(ck.fn, argmap)
+
+
+def test_grid_fuel_tracks_oracle():
+    """Batched fuel burn must stay aligned with the oracle: a grid batch
+    where one ragged row loops long while sibling rows ride along empty
+    must not exhaust a budget the oracle completes within."""
+    b = BENCHES["spmv_csr"]
+    rng = np.random.default_rng(3)
+    bufs0, scalars, params = b.make(rng)
+    mod = b.handle.build(None)
+    ck = run_pipeline(mod, b.handle.name, FULL)
+    ref = {k: v.copy() for k, v in bufs0.items()}
+    st = interp.launch(ck.fn, ref, params, scalar_args=scalars,
+                       decoded=False)
+    tight = interp.LaunchParams(grid=params.grid,
+                                local_size=params.local_size,
+                                warp_size=params.warp_size,
+                                fuel=3 * st.instrs + 1000)
+    bat = {k: v.copy() for k, v in bufs0.items()}
+    st_bat = interp.launch(ck.fn, bat, tight, scalar_args=scalars,
+                           decoded=True, batched=True)
+    assert st_bat.instrs == st.instrs
+
+
+def test_grid_batching_parity_large_grid():
+    """A grid larger than one batch chunk (> _GRID_BATCH_MAX workgroups)
+    splits into several (chunk, W) activations, all parity-exact."""
+    b = BENCHES["spmv_csr"]
+    rng = np.random.default_rng(13)
+    bufs0, scalars, params = b.make(rng)
+    # stretch to 80 single-warp workgroups (> _GRID_BATCH_MAX = 64) by
+    # tiling the CSR inputs
+    n = 80 * 32
+    reps = (n + len(bufs0["y"]) - 1) // len(bufs0["y"])
+    deg = np.tile(np.diff(bufs0["row_ptr"]), reps)[:n]
+    rp = np.zeros(n + 1, np.int32)
+    rp[1:] = np.cumsum(deg)
+    cols = rng.integers(0, n, int(rp[-1])).astype(np.int32)
+    bufs0 = {"row_ptr": rp, "cols": cols,
+             "vals": rng.standard_normal(int(rp[-1])).astype(np.float32),
+             "x": rng.standard_normal(n).astype(np.float32),
+             "y": np.zeros(n, np.float32)}
+    params = interp.LaunchParams(grid=80, local_size=32, warp_size=32)
+    assert params.grid > interp._GRID_BATCH_MAX
+    ck = run_pipeline(b.handle.build(None), b.handle.name, FULL)
+    _assert_parity("spmv_csr/grid80", ck.fn, bufs0, params, {"n": n})
 
 
 # -------------------------------------------------------------------------
@@ -421,6 +602,45 @@ def test_disk_cache_disabled_by_env(tmp_path, monkeypatch):
     runtime.compile_kernel(BENCHES["vecadd"].handle, use_cache=False)
     assert list(tmp_path.glob("*.vck")) == []
     runtime.clear_compile_cache()
+
+
+# -------------------------------------------------------------------------
+# perf --check tolerance logic (pure function; the full gate is opt-in
+# below)
+# -------------------------------------------------------------------------
+
+def test_perf_check_per_entry_tolerance():
+    """check_regressions honors per-entry overrides from the committed
+    BENCH_perf.json "check_tolerances" key, falling back to the global
+    20% knob — so noisy small entries can be loosened without masking
+    regressions in the big stable ones."""
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.run import check_regressions
+
+    committed = {
+        "interp_speed": {"aggregate": {"suite_speedup": 3.0,
+                                       "geomean_speedup": 2.5}},
+        "interp_speed_ragged": {"aggregate": {"suite_speedup": 1.5,
+                                              "geomean_speedup": 1.5}},
+        "check_tolerances": {"interp_speed_ragged.suite_speedup": 0.40},
+    }
+    # ragged drops 30%: inside its 40% override, no failure;
+    # interp_speed drops 30%: beyond the default 20%, fails
+    fresh = {
+        "interp_speed": {"aggregate": {"suite_speedup": 2.1,
+                                       "geomean_speedup": 2.4}},
+        "interp_speed_ragged": {"aggregate": {"suite_speedup": 1.05,
+                                              "geomean_speedup": 1.45}},
+    }
+    failures = check_regressions(fresh, committed)
+    assert len(failures) == 1 and "interp_speed.suite_speedup" in \
+        failures[0], failures
+    # tightening the override flags the ragged drop too
+    committed["check_tolerances"]["interp_speed_ragged.suite_speedup"] \
+        = 0.10
+    failures = check_regressions(fresh, committed)
+    assert any("interp_speed_ragged.suite_speedup" in f
+               for f in failures), failures
 
 
 # -------------------------------------------------------------------------
