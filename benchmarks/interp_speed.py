@@ -3,8 +3,10 @@ original instruction-at-a-time loop, over the full volt_bench suite —
 plus the workgroup-batched lockstep executor on multi-warp reshapes of
 the suite (``--batched`` / ``main_batched``), the vx_pred loop
 ride-along on ragged-loop kernels vs the PR 2 desync-on-mixed-exit
-executor (``main_ragged``), and grid-level batching of single-warp
-workgroup grids (``--grid`` / ``main_grid``).
+executor (``main_ragged``), grid-level batching of single-warp
+workgroup grids (``--grid`` / ``main_grid``), and multi-warp grid
+batching of whole workgroups as grouped rows vs per-workgroup dispatch
+(``main_grid_mw``, also run by ``--grid``).
 
 ``--benches a b c`` restricts any mode to the named benches (the CI
 smoke runs ``--batched --benches spmv_csr bfs_frontier``).
@@ -61,7 +63,19 @@ RAGGED_BENCHES = ["spmv_csr", "bfs_frontier", "spmv"]
 GRID_BENCHES = [
     "vecadd", "transpose", "psort", "sfilter", "sgemm", "blackscholes",
     "pathfinder", "kmeans", "nearn", "stencil", "spmv", "spmv_csr",
-    "bfs_frontier", "cfd_like", "srad_flag", "vote_hw", "bscan_hw",
+    "spmv_tail", "bfs_frontier", "cfd_like", "srad_flag", "vote_hw",
+    "bscan_hw",
+]
+
+# Multi-warp refolds of grid-eligible launches: single-warp grid mode
+# cannot engage (warps_per_wg > 1), so before this PR these launches
+# paid one wg-batched node walk PER WORKGROUP.  The multi-warp grid
+# batcher packs whole workgroups as grouped rows with per-workgroup
+# barrier groups; measured against that per-workgroup dispatch
+# (launch(..., grid=False)).
+GRID_MW_BENCHES = [
+    "spmv_csr", "spmv_tail", "bfs_frontier", "psort", "blackscholes",
+    "kmeans", "stencil",
 ]
 
 
@@ -171,10 +185,14 @@ def run_batched(seed: int = 7, benches: Optional[List[str]] = None,
         ck = runtime.compile_kernel(b.handle, FULL)
 
         # ---- parity gate: batched == per-warp decoded == oracle -------
+        # (grid=False: this section isolates the per-WORKGROUP batched
+        # executor; multi-warp grid batching of the same launches is
+        # measured separately in run_grid_mw())
         runs = {}
         for label, kw in (("oracle", dict(decoded=False)),
                           ("decoded", dict(decoded=True, batched=False)),
-                          ("batched", dict(decoded=True, batched=True))):
+                          ("batched", dict(decoded=True, batched=True,
+                                           grid=False))):
             bufs = {k: v.copy() for k, v in bufs0.items()}
             st = interp.launch(ck.fn, bufs, mp, scalar_args=scalars, **kw)
             runs[label] = (st, bufs)
@@ -193,7 +211,7 @@ def run_batched(seed: int = 7, benches: Optional[List[str]] = None,
                 interp.launch(ck.fn, bufs, mp, scalar_args=scalars, **kw)
             return _best_of(body)
 
-        t_bat = timed(decoded=True, batched=True)
+        t_bat = timed(decoded=True, batched=True, grid=False)
         t_dec = timed(decoded=True, batched=False)
         t_ref = timed(decoded=False)
         out[name] = {
@@ -253,7 +271,8 @@ def run_ragged(seed: int = 7, benches: Optional[List[str]] = None,
         for label, kw in (("oracle", dict(decoded=False)),
                           ("pr2", dict(decoded=True, batched=True,
                                        ride_along=False)),
-                          ("ride", dict(decoded=True, batched=True))):
+                          ("ride", dict(decoded=True, batched=True,
+                                        grid=False))):
             bufs = {k: v.copy() for k, v in bufs0.items()}
             st = interp.launch(ck.fn, bufs, mp, scalar_args=scalars, **kw)
             runs[label] = (st, bufs)
@@ -268,7 +287,7 @@ def run_ragged(seed: int = 7, benches: Optional[List[str]] = None,
         # interleaved best-of: the reported number is a RATIO of two
         # variants, so alternate them within each rep — transient machine
         # load then hits both sides instead of skewing the quotient
-        variants = {"ride": dict(decoded=True, batched=True),
+        variants = {"ride": dict(decoded=True, batched=True, grid=False),
                     "pr2": dict(decoded=True, batched=True,
                                 ride_along=False),
                     "dec": dict(decoded=True, batched=False)}
@@ -374,6 +393,78 @@ def aggregate_grid(results: Dict) -> Dict[str, float]:
     }
 
 
+def run_grid_mw(seed: int = 7, benches: Optional[List[str]] = None,
+                factor: int = 2) -> Dict:
+    """Multi-warp workgroup grids (single-warp grid mode ineligible):
+    the multi-warp grid batcher — whole workgroups as grouped rows,
+    per-workgroup barrier groups — vs per-workgroup dispatch through the
+    wg-batched executor (``grid=False``), parity-gated against the
+    oracle."""
+    names = benches or GRID_MW_BENCHES
+    out: Dict[str, Dict[str, float]] = {}
+    for name in names:
+        b = BENCHES[name]
+        rng = np.random.default_rng(seed)
+        bufs0, scalars, params = b.make(rng)
+        mp = multi_warp_params(params, factor)
+        assert mp.warps_per_wg > 1, f"{name}: fold produced 1 warp/wg"
+        ck = runtime.compile_kernel(b.handle, FULL)
+
+        # ---- parity gate: grid == per-workgroup dispatch == oracle -----
+        runs = {}
+        for label, kw in (("oracle", dict(decoded=False)),
+                          ("perwg", dict(decoded=True, batched=True,
+                                         grid=False)),
+                          ("grid", dict(decoded=True, batched=True,
+                                        grid=True))):
+            bufs = {k: v.copy() for k, v in bufs0.items()}
+            st = interp.launch(ck.fn, bufs, mp, scalar_args=scalars, **kw)
+            runs[label] = (st, bufs)
+        for label in ("perwg", "grid"):
+            _assert_stats_equal(f"{name}/{label}", runs["oracle"][0],
+                                runs[label][0])
+            for k in bufs0:
+                np.testing.assert_array_equal(
+                    runs["oracle"][1][k], runs[label][1][k],
+                    err_msg=f"{name}/{label}: buffer {k} diverged")
+
+        # interleaved best-of (the reported number is a ratio)
+        variants = {"grid": dict(decoded=True, batched=True, grid=True),
+                    "perwg": dict(decoded=True, batched=True,
+                                  grid=False)}
+        best = {k: float("inf") for k in variants}
+        for _ in range(max(REPS, 5)):
+            for label, kw in variants.items():
+                bufs = {k: v.copy() for k, v in bufs0.items()}
+                t0 = time.perf_counter()
+                interp.launch(ck.fn, bufs, mp, scalar_args=scalars, **kw)
+                best[label] = min(best[label],
+                                  time.perf_counter() - t0)
+        t_grid, t_perwg = best["grid"], best["perwg"]
+        out[name] = {
+            "perwg_ms": t_perwg * 1e3, "grid_ms": t_grid * 1e3,
+            "speedup": t_perwg / t_grid,
+            "warps_per_wg": mp.warps_per_wg,
+            "workgroups": mp.grid * mp.grid_y,
+            "instrs": runs["grid"][0].instrs,
+        }
+    return out
+
+
+def aggregate_grid_mw(results: Dict) -> Dict[str, float]:
+    t_perwg = sum(v["perwg_ms"] for v in results.values())
+    t_grid = sum(v["grid_ms"] for v in results.values())
+    sp = [v["speedup"] for v in results.values()]
+    return {
+        "total_perwg_ms": t_perwg,
+        "total_grid_ms": t_grid,
+        "suite_speedup": t_perwg / t_grid,
+        "geomean_speedup": float(np.exp(np.mean(np.log(sp)))),
+        "min_speedup": min(sp),
+        "max_speedup": max(sp),
+    }
+
+
 def main(benches: Optional[List[str]] = None) -> Dict:
     results = run(benches=benches)
     agg = aggregate(results)
@@ -467,6 +558,30 @@ def main_grid(benches: Optional[List[str]] = None) -> Dict:
     return {"per_bench": results, "aggregate": agg}
 
 
+def main_grid_mw(benches: Optional[List[str]] = None) -> Dict:
+    results = run_grid_mw(benches=benches)
+    agg = aggregate_grid_mw(results)
+    print("# multi-warp grid batching — multi-warp workgroup grids "
+          "(vs per-workgroup dispatch)")
+    print("| bench | workgroups | warps/wg | per-wg ms | grid ms "
+          "| speedup |")
+    print("|---|---|---|---|---|---|")
+    for name, v in results.items():
+        print(f"| {name} | {v['workgroups']} | {v['warps_per_wg']} | "
+              f"{v['perwg_ms']:.1f} | {v['grid_ms']:.1f} | "
+              f"{v['speedup']:.2f}x |")
+    print(f"\nmulti-warp grid suite speedup vs per-workgroup dispatch: "
+          f"{agg['suite_speedup']:.2f}x "
+          f"(geomean {agg['geomean_speedup']:.2f}x, "
+          f"min {agg['min_speedup']:.2f}x, max {agg['max_speedup']:.2f}x)")
+    for name, v in results.items():
+        print(f"interp_speed_grid_mw/{name},{v['grid_ms'] * 1e3:.1f},"
+              f"speedup={v['speedup']:.3f}")
+    print(f"interp_speed_grid_mw/suite,{agg['total_grid_ms'] * 1e3:.1f},"
+          f"speedup={agg['suite_speedup']:.3f}")
+    return {"per_bench": results, "aggregate": agg}
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     only: Optional[List[str]] = None
@@ -484,8 +599,12 @@ if __name__ == "__main__":
             main_ragged(benches=ragged)
     elif "--grid" in argv:
         main_grid(benches=only)
+        mw = [n for n in (only or GRID_MW_BENCHES) if n in GRID_MW_BENCHES]
+        if mw:
+            main_grid_mw(benches=mw)
     else:
         main(benches=only)
         main_batched(benches=only)
         main_ragged()
         main_grid()
+        main_grid_mw()

@@ -15,6 +15,9 @@ markdown tables above them).  Sections:
                    vs the desync-on-mixed-exit (PR 2) executor
   interp_speed_grid : grid-level batching of single-warp workgroups vs
                    the per-workgroup decoded executor
+  interp_speed_grid_mw : multi-warp grid batching (whole workgroups as
+                   grouped rows, per-workgroup barrier groups) vs
+                   per-workgroup dispatch
   kernels        : Pallas kernel vs jnp-oracle timings (CPU interpret)
   roofline       : per (arch x shape x mesh) three-term roofline rows
 
@@ -45,6 +48,8 @@ CHECKED_METRICS = [
     ("interp_speed_ragged", "geomean_speedup"),
     ("interp_speed_grid", "suite_speedup"),
     ("interp_speed_grid", "geomean_speedup"),
+    ("interp_speed_grid_mw", "suite_speedup"),
+    ("interp_speed_grid_mw", "geomean_speedup"),
     ("compile_time", "suite_speedup"),
 ]
 # Default tolerance.  A single global knob lets noisy, small entries
@@ -83,7 +88,16 @@ def check_regressions(fresh: dict, committed: dict,
     for section, metric in CHECKED_METRICS:
         base = committed.get(section, {}).get("aggregate", {}).get(metric)
         new = fresh.get(section, {}).get("aggregate", {}).get(metric)
-        if base is None or new is None:
+        if base is None:
+            continue         # no committed baseline for this metric yet
+        if new is None:
+            # a section/metric present in the committed baseline but
+            # absent from the fresh run is a CHECK FAILURE, not a skip —
+            # a wiring regression (section renamed, driver dropped,
+            # bench crashed into a partial dict) must not silently pass
+            failures.append(
+                f"{section}.{metric}: missing from fresh run "
+                f"(committed {base:.3f})")
             continue
         tol = overrides.get(f"{section}.{metric}", tolerance)
         if new < base * (1.0 - tol):
@@ -106,6 +120,7 @@ def main() -> None:
         ("interp_speed_batched", interp_speed.main_batched),
         ("interp_speed_ragged", interp_speed.main_ragged),
         ("interp_speed_grid", interp_speed.main_grid),
+        ("interp_speed_grid_mw", interp_speed.main_grid_mw),
         ("kernels", kernels_bench.main),
         ("roofline", roofline_bench.main),
     ]
@@ -115,7 +130,7 @@ def main() -> None:
     only = args[0] if args else None
     perf_sections = {"interp_speed", "interp_speed_batched",
                      "interp_speed_ragged", "interp_speed_grid",
-                     "compile_time"}
+                     "interp_speed_grid_mw", "compile_time"}
     perf: dict = {}
     for name, fn in sections:
         if only == "perf":

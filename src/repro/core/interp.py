@@ -1383,24 +1383,26 @@ _BARRIER = object()   # per-warp node (batched program): top-level barrier
 
 def _decode_batched(fn: Function, W: int, strict: bool, n_warps: int,
                     grid_mode: bool = False,
-                    ride_along: bool = True) -> "_BProgram":
+                    ride_along: bool = True,
+                    wg_rows: int = 1) -> "_BProgram":
     """Decode ``fn`` for workgroup-batched execution (memoized like
     _decode, in the same ir_version-keyed cache).  ``grid_mode`` batches
-    independent single-warp workgroups (rows are workgroups, barriers
-    synchronize trivially); ``ride_along=False`` restores the stricter
+    independent workgroups (rows are warps grouped ``wg_rows`` per
+    workgroup; a barrier synchronizes only the rows of its own
+    workgroup); ``ride_along=False`` restores the stricter
     desync-on-mixed-loop-exit behavior (used as a benchmark baseline)."""
     cache = getattr(fn, "_decode_cache", None)
     if cache is None:
         cache = {}
         fn._decode_cache = cache  # type: ignore[attr-defined]
     key = (fn.ir_version, W, bool(strict), "wg", n_warps, bool(grid_mode),
-           bool(ride_along))
+           bool(ride_along), int(wg_rows))
     prog = cache.get(key)
     if prog is None:
         for k in [k for k in cache if k[0] != fn.ir_version]:
             del cache[k]
         prog = _BProgram(fn, W, bool(strict), n_warps, grid_mode=grid_mode,
-                         ride_along=ride_along)
+                         ride_along=ride_along, wg_rows=wg_rows)
         cache[key] = prog
     return prog
 
@@ -1455,6 +1457,120 @@ def _contains_store(fn: Function, _seen: Optional[set] = None) -> bool:
     return False
 
 
+#: intrinsics whose value is identical for every thread of the LAUNCH
+#: (group_id/local_id/warp_id/lane_id vary and are excluded on purpose)
+_LAUNCH_UNIFORM_INTRS = {"local_size", "num_groups", "global_size",
+                         "num_threads", "num_warps", "grid_dim"}
+
+
+def _stores_thread_private(fn: Function) -> bool:
+    """True if every top-level STORE's index provably never clashes
+    ACROSS workgroups: an affine chain ``global_id(0)|group_id(0)
+    (+|-) launch-uniform`` / ``* nonzero-const`` (through single-store
+    entry-block slots).  global_id(0) is injective per thread and
+    group_id(0) per workgroup — either keeps store cells pairwise
+    disjoint across workgroups (a workgroup's own rows never decouple
+    from each other, so intra-wg clashes keep their row-major = warp
+    order), making cross-wg store ORDER unobservable — the licence for
+    row compaction and for re-merging a batch some of whose workgroups
+    already ran ahead.  Both claims hold only for 1-D launches
+    (grid_y == local_size_y == 1: a 2-D grid repeats global_id(0)
+    across gy), which launch() checks separately.  Conservative:
+    anything unrecognized (uniform indices, modulo wraps, select/cmov
+    mixes) returns False and the run-ahead paths stay off — lockstep
+    and full wg-order drains handle clashing stores exactly without
+    them."""
+    defs: Dict[int, Instr] = {}
+    slot_stores: Dict[int, List[Instr]] = {}
+    entry_instrs = set(id(i) for i in fn.entry.instrs)
+    for i in fn.instructions():
+        if i.result is not None:
+            defs[id(i.result)] = i
+        if i.op is Op.SLOT_STORE:
+            slot_stores.setdefault(id(i.operands[0]), []).append(i)
+
+    def classify(v: Value, depth: int) -> Optional[str]:
+        # -> "gid" (injective per thread), "uni" (launch-uniform), None
+        if depth > 12:
+            return None
+        if isinstance(v, Const):
+            return "uni"
+        if isinstance(v, Param):
+            return None if v.ty is Ty.PTR else "uni"  # launch scalar
+        if not isinstance(v, Reg):
+            return None
+        i = defs.get(id(v))
+        if i is None:
+            return None
+        op = i.op
+        if op is Op.INTR:
+            if (i.operands[0] in ("global_id", "group_id")
+                    and i.operands[1] == 0):
+                return "gid"
+            if i.operands[0] in _LAUNCH_UNIFORM_INTRS:
+                return "uni"
+            return None
+        if op is Op.SLOT_LOAD:
+            ss = slot_stores.get(id(i.operands[0]), [])
+            # exactly one store, in the entry block: it dominates every
+            # load, so the load can never observe the slot's zero init
+            if len(ss) != 1 or id(ss[0]) not in entry_instrs:
+                return None
+            return classify(ss[0].operands[1], depth + 1)
+        if op in (Op.ADD, Op.SUB):
+            a = classify(i.operands[0], depth + 1)
+            b = classify(i.operands[1], depth + 1)
+            if a == "uni" and b == "uni":
+                return "uni"
+            if (a == "gid" and b == "uni") or (op is Op.ADD
+                                               and a == "uni"
+                                               and b == "gid"):
+                return "gid"
+            return None
+        if op is Op.MUL:
+            a = classify(i.operands[0], depth + 1)
+            b = classify(i.operands[1], depth + 1)
+            if a == "uni" and b == "uni":
+                return "uni"
+            if (a == "gid" and isinstance(i.operands[1], Const)
+                    and i.operands[1].value):
+                return "gid"
+            if (b == "gid" and isinstance(i.operands[0], Const)
+                    and i.operands[0].value):
+                return "gid"
+            return None
+        return None
+
+    for i in fn.instructions():
+        if i.op is Op.STORE and classify(i.operands[1], 0) != "gid":
+            return False
+    return True
+
+
+def _ordering_sensitive(fn: Function, _seen: Optional[set] = None) -> bool:
+    """True if ``fn`` can produce effects whose ORDER across workgroups
+    is observable: prints (stats.prints is ordered), atomics (the
+    returned old values depend on the global interleaving) or stores
+    hidden inside callees (the caller's flat site count cannot attribute
+    them, so any caller store may clash with them out of order).
+    Top-level non-hazard stores and barriers are NOT ordering-sensitive —
+    the grid gate already guarantees their effects commute."""
+    if _seen is None:
+        _seen = set()
+    if id(fn) in _seen:
+        return False
+    _seen.add(id(fn))
+    for i in fn.instructions():
+        if i.op in (Op.PRINT, Op.ATOMIC):
+            return True
+        if i.op is Op.CALL:
+            callee: Function = i.operands[0]
+            if _contains_store(callee) or _ordering_sensitive(callee,
+                                                              _seen):
+                return True
+    return False
+
+
 class _BProgram(_DProgram):
     """Decoded program with two parallel node tables sharing one numbering:
     ``blocks`` (per-warp handlers, the desync fallback) and ``bblocks``
@@ -1466,10 +1582,16 @@ class _BProgram(_DProgram):
 
     def __init__(self, fn: Function, W: int, strict: bool,
                  n_warps: int, *, grid_mode: bool = False,
-                 ride_along: bool = True) -> None:
+                 ride_along: bool = True, wg_rows: int = 1) -> None:
         self.n_warps = n_warps
         self.grid_mode = grid_mode
         self.ride_along = ride_along
+        # rows per workgroup: 1 except in multi-warp grid mode, where a
+        # batch stacks (n_wg x wg_rows) rows and a barrier synchronizes
+        # only the rows belonging to the same workgroup
+        self.wg_rows = wg_rows if grid_mode else n_warps
+        if grid_mode and n_warps % wg_rows:
+            raise ExecError("grid batch rows must be whole workgroups")
         # The mixed-split and vx_pred-loop ride-alongs (see the CBR/PRED
         # nodes) walk single-sided / loop-exited warps through code their
         # oracle counterparts never reach, under an empty mask.  That is
@@ -1478,13 +1600,16 @@ class _BProgram(_DProgram):
         # reaches.  Functions containing barriers therefore desync on
         # mixed split/loop-exit decisions instead (calls cannot hide
         # barriers from lockstep: a barrier-containing callee is impure
-        # and desyncs).  In grid mode the rows are INDEPENDENT
-        # single-warp workgroups — a barrier synchronizes only the one
-        # warp of its own workgroup, so an empty ride-along row crossing
-        # it has no cross-warp effect and ride-along stays safe.
+        # and desyncs).  In grid mode with SINGLE-warp workgroups a
+        # barrier synchronizes only the one warp of its own workgroup,
+        # so an empty ride-along row crossing it has no cross-warp
+        # effect and ride-along stays safe; with multi-warp workgroups
+        # an empty row crossing a barrier would fabricate an arrival for
+        # its workgroup's barrier group, so the wg-mode rule applies.
         self.has_barrier = any(i.op is Op.BARRIER
                                for i in fn.instructions())
-        barrier_safe = grid_mode or not self.has_barrier
+        barrier_safe = ((grid_mode and wg_rows == 1)
+                        or not self.has_barrier)
         # mixed vx_split ride-along: PR 2 behavior, always on where safe.
         self.split_ride_ok = barrier_safe
         # vx_pred loop ride-along: the PR 3 extension; ride_along=False
@@ -1526,6 +1651,19 @@ class _BProgram(_DProgram):
                 if i.op is Op.STORE and (callee_stores
                                          or sites[id(i.operands[0])] > 1
                                          or id(b) in cyclic)}
+        # Ordering freedom (grid mode): order_free = no prints/atomics,
+        # no callee stores, no hazard stores; private_stores adds that
+        # every store writes cross-workgroup-disjoint cells.  Together
+        # (plus launch()'s 1-D shape check) NO effect's cross-workgroup
+        # order is observable, which licences the paths that let
+        # workgroups RUN AHEAD of each other: parking at a barrier for
+        # re-merge while later workgroups drain past, and row
+        # compaction.  Everything else takes the exact wg-order
+        # drain-to-completion path.
+        self.order_free = bool(grid_mode and not self._hazard_stores
+                               and not _ordering_sensitive(fn))
+        self.private_stores = bool(self.order_free
+                                   and _stores_thread_private(fn))
         super().__init__(fn, W, strict)
         self.bblocks: List[_DBlock] = [self._decode_block_batched(b)
                                        for b in fn.blocks]
@@ -1948,11 +2086,12 @@ class _BProgram(_DProgram):
             strict = self.strict
             grid_mode = self.grid_mode
             ride_along = self.ride_along
+            wg_rows = self.wg_rows if grid_mode else 1
 
             def bcall_node(st, callee=callee, binders=binders, ri=ri,
                            ret_dtype=ret_dtype, opv=opv, W=W, nw=nw,
                            strict=strict, grid_mode=grid_mode,
-                           ride_along=ride_along):
+                           ride_along=ride_along, wg_rows=wg_rows):
                 mask = st.mask
                 act = st.act_rows
                 n_act = st.active
@@ -1978,7 +2117,8 @@ class _BProgram(_DProgram):
                         raise ExecError("pointer arg must be param/global")
                 cprog = _decode_batched(callee, W, strict, nw,
                                         grid_mode=grid_mode,
-                                        ride_along=ride_along)
+                                        ride_along=ride_along,
+                                        wg_rows=wg_rows)
                 sub = _DState(cprog, cargs, mask.copy(), st.ctx, st.mem,
                               stt, st.fuel)
                 sub.warp_ctxs = st.warp_ctxs
@@ -2055,61 +2195,12 @@ def _slice_state(bst: _DState, w: int, ctx: _WarpCtx) -> _DState:
     return st
 
 
-def _stack_rows(vals: List[Any]) -> Any:
-    """Merge per-warp env/slot entries back into one batched entry."""
-    first = None
-    for v in vals:
-        if v is not None:
-            first = v
-            break
-    if first is None:
-        return None
-    if all(v is vals[0] for v in vals):
-        return vals[0]            # still the shared warp-invariant array
-    rows = [np.zeros_like(first) if v is None else v for v in vals]
-    return np.stack(rows)
-
-
 def _merge_states(bprog: "_BProgram", wstates: List[_DState],
                   proto: _DState) -> Optional[_DState]:
     """Re-merge per-warp states into a batched state, or None if the warps
-    are not congruent (different IPDOM shape / pending split)."""
-    s0 = wstates[0]
-    depth = len(s0.stack)
-    for st in wstates:
-        if st.pending is not None or len(st.stack) != depth:
-            return None
-    for lvl in range(depth):
-        if (len({st.stack[lvl][0] for st in wstates}) != 1
-                or len({st.stack[lvl][2] for st in wstates}) != 1):
-            return None
-    bst = _DState.__new__(_DState)
-    bst.env = [_stack_rows([st.env[i] for st in wstates])
-               for i in range(bprog.n_regs)]
-    bst.slots = [_stack_rows([st.slots[i] for st in wstates])
-                 for i in range(bprog.n_slots)]
-    bst.args = proto.args
-    bst.argmap = proto.argmap
-    bst.mem_arrs = proto.mem_arrs
-    bst.mask = np.stack([st.mask for st in wstates])
-    ar = bst.mask.any(axis=1)
-    bst.act_rows = ar
-    bst.active = int(ar.sum())
-    bst.stack = [(s0.stack[lvl][0],
-                  np.stack([st.stack[lvl][1] for st in wstates]),
-                  s0.stack[lvl][2],
-                  None if s0.stack[lvl][3] is None else
-                  np.stack([st.stack[lvl][3] for st in wstates]))
-                 for lvl in range(depth)]
-    bst.pending = None
-    bst.ret = None
-    bst.intr = proto.intr
-    bst.ctx = proto.ctx
-    bst.mem = proto.mem
-    bst.stats = proto.stats
-    bst.fuel = proto.fuel
-    bst.warp_ctxs = proto.warp_ctxs
-    return bst
+    are not congruent (different IPDOM shape / pending split).  The
+    all-rows-live case of the grid-mode `_merge_rows`."""
+    return _merge_rows(bprog, wstates, [True] * len(wstates), proto)
 
 
 def _resume_decoded(prog: "_BProgram", st: _DState, bi: int, ni: int
@@ -2286,23 +2377,40 @@ def _run_wg_batched(bprog: "_BProgram", bst: _DState,
 # --------------------------------------------------------------------------
 # Grid-level batching
 #
-# spmv/bfs-style launches are many SMALL single-warp workgroups: the
-# workgroup-batched executor never engages (n_warps == 1) and every
-# workgroup pays a full Python node walk.  Grid-level batching packs up to
-# ``_GRID_BATCH_MAX`` single-warp workgroups of one launch into a single
-# (n_wg, W) activation and reuses the _BProgram machinery with rows =
-# workgroups instead of rows = warps:
+# spmv/bfs-style launches are many SMALL workgroups: the workgroup
+# batcher amortizes nothing across them (single-warp workgroups never
+# even engage it) and every workgroup pays a full Python node walk.
+# Grid-level batching packs up to ``_GRID_BATCH_MAX`` ROWS — whole
+# workgroups of ``wg_rows`` warps each, so (n_wg x n_warps, W) — of one
+# launch into a single activation and reuses the _BProgram machinery:
 #
-#   * barriers synchronize only the single warp of their own workgroup,
-#     so the lockstep barrier node (trivial continue) is exact and the
-#     mixed-decision ride-alongs are barrier-safe even in functions with
-#     barriers (``grid_mode=True``);
+#   * rows are warps, grouped ``wg_rows`` consecutive rows per
+#     workgroup.  In lockstep every row reaches a barrier together, so
+#     each PER-WORKGROUP barrier group is trivially satisfied and the
+#     lockstep barrier node (trivial continue) is exact for any
+#     ``wg_rows``; the mixed-decision ride-alongs stay barrier-safe only
+#     for single-warp workgroups (an empty multi-warp row crossing a
+#     barrier would fabricate an arrival for its workgroup's group), so
+#     multi-warp grids fall back to the wg-mode desync rule in barrier
+#     functions;
 #   * on a desync event (atomic / print / impure call / un-rideable
 #     cross-row disagreement) the rows are sliced into ordinary per-warp
-#     states and each is DRAINED to completion in row order — exactly the
-#     oracle's workgroup order — with barrier events consumed (a
-#     single-warp workgroup's barrier trivially passes).  No re-merge is
-#     attempted: independent workgroups share no barriers.
+#     states and DRAINED workgroup by workgroup in workgroup order —
+#     exactly the oracle's schedule — with the rows of one workgroup
+#     synchronizing at barrier events among themselves (_drive_wg);
+#   * when run-ahead is licenced (``private_stores`` + 1-D launch: no
+#     effect's cross-workgroup order is observable) a drained workgroup
+#     may instead PARK at its first top-level barrier; when every
+#     surviving workgroup parks at the same congruent barrier the rows
+#     RE-MERGE into one batch and lockstep resumes (_drain_grid),
+#     instead of the desync permanently ending batched execution for
+#     the chunk;
+#   * when ride-along leaves most rows of a batch empty (pareto-tail
+#     ragged loops: a few workgroups loop on while the rest wait at the
+#     collective exit), the live rows COMPACT into a dense sub-batch and
+#     the exited workgroups drain their epilogues immediately
+#     (_compact_grid, same licence) — dead rows stop paying batched
+#     work.
 #
 # Eligibility is decided per launch by a static scan (``_grid_batchable``):
 #
@@ -2437,11 +2545,298 @@ def _stack_intrs(ctxs: Sequence[_WarpCtx], W: int,
     return _WarpCtx(W, intr2, strict)
 
 
-def _run_grid_batched(bprog: "_BProgram", bst: _DState) -> None:
-    """Drive one (n_wg, W) batch of independent single-warp workgroups:
-    lockstep until a desync event, then drain each row to completion in
-    row order (the oracle's workgroup order), consuming barrier events."""
-    bi, ni = 0, 0
+#: live-workgroup fraction at or below which a private-store grid batch
+#: compacts its live rows into a dense sub-batch at a loop back-edge
+#: (0.0 disables compaction, 1.0 compacts whenever any row is dead)
+_COMPACT_FRACTION = 0.25
+#: don't bother compacting batches smaller than this many workgroups
+_COMPACT_MIN_WGS = 8
+
+
+class _GridTelemetry:
+    """Per-process counters for the batch-preserving grid-mode paths.
+
+    NOT part of ExecStats (stats stay bit-identical across executors by
+    contract); tests reset and read these to prove re-merge / compaction
+    actually fire on crafted workloads."""
+    __slots__ = ("remerges", "compactions", "desyncs", "batches")
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self.remerges = 0
+        self.compactions = 0
+        self.desyncs = 0
+        self.batches = 0
+
+
+GRID_TELEMETRY = _GridTelemetry()
+
+
+def _drive_wg(bprog: "_BProgram", gens: List[Any], rows: Sequence[int],
+              wg: Tuple[int, int], park: bool
+              ) -> Optional[Tuple[int, int]]:
+    """Advance one workgroup's row-generators with intra-workgroup
+    barrier synchronization (the oracle's co-routine schedule).  With
+    ``park=True`` (run-ahead licenced) the workgroup stops at the first
+    top-level barrier ALL its rows reach congruently and returns that
+    (block, node) position — a re-merge candidate; otherwise runs to
+    completion and returns None.  Barrier divergence (some rows return
+    while others wait) raises exactly like the per-warp scheduler."""
+    alive = list(rows)
+    exited: List[int] = []
+    base = rows[0]
+    while alive:
+        events: Dict[int, Any] = {}
+        done: List[int] = []
+        for r in alive:
+            try:
+                events[r] = next(gens[r])
+            except StopIteration:
+                done.append(r)
+        exited.extend(done)
+        if events and done:
+            raise _barrier_divergence_error(
+                wg, [r - base for r in events],
+                [r - base for r in exited])
+        if not events:
+            return None            # every row of the workgroup returned
+        alive = sorted(events)
+        if park and len(alive) == len(rows):
+            evs = list(events.values())
+            if all(type(e) is tuple for e in evs) and len(set(evs)) == 1:
+                return evs[0][1], evs[0][2]
+    return None
+
+
+def _merge_rows(bprog: "_BProgram", wstates: List[_DState],
+                live: Sequence[bool], proto: _DState
+                ) -> Optional[_DState]:
+    """Re-merge per-row states into one batched state; rows with
+    ``live[r]`` False (workgroups that already returned) become empty
+    rows: all-zero mask, zero env/slot/stack rows, so every mask source
+    they could restore from (tmc tokens, IPDOM saves) keeps them dead.
+    Returns None if the live rows are not congruent (different IPDOM
+    shape / pending split)."""
+    lives = [st for st, lv in zip(wstates, live) if lv]
+    s0 = lives[0]
+    depth = len(s0.stack)
+    for st in lives:
+        if st.pending is not None or len(st.stack) != depth:
+            return None
+    for lvl in range(depth):
+        if (len({st.stack[lvl][0] for st in lives}) != 1
+                or len({st.stack[lvl][2] for st in lives}) != 1):
+            return None
+
+    def stack_col(vals: List[Any]) -> Any:
+        first = None
+        for v, lv in zip(vals, live):
+            if lv and v is not None:
+                first = v
+                break
+        if first is None:
+            return None
+        if all(live) and all(v is vals[0] for v in vals):
+            return vals[0]        # still the shared row-invariant array
+        rows = [np.zeros_like(first) if (not lv or v is None) else v
+                for v, lv in zip(vals, live)]
+        return np.stack(rows)
+
+    bst = _DState.__new__(_DState)
+    bst.env = [stack_col([st.env[i] for st in wstates])
+               for i in range(bprog.n_regs)]
+    bst.slots = [stack_col([st.slots[i] for st in wstates])
+                 for i in range(bprog.n_slots)]
+    bst.args = proto.args
+    bst.argmap = proto.argmap
+    bst.mem_arrs = proto.mem_arrs
+    W = bprog.W
+    bst.mask = np.stack([st.mask if lv else np.zeros(W, dtype=bool)
+                         for st, lv in zip(wstates, live)])
+    ar = bst.mask.any(axis=1)
+    bst.act_rows = ar
+    bst.active = int(ar.sum())
+    bst.stack = [
+        (s0.stack[lvl][0],
+         np.stack([st.stack[lvl][1] if lv else np.zeros(W, dtype=bool)
+                   for st, lv in zip(wstates, live)]),
+         s0.stack[lvl][2],
+         None if s0.stack[lvl][3] is None else
+         np.stack([st.stack[lvl][3] if lv else np.zeros(W, dtype=bool)
+                   for st, lv in zip(wstates, live)]))
+        for lvl in range(depth)]
+    bst.pending = None
+    bst.ret = None
+    bst.intr = proto.intr
+    bst.ctx = proto.ctx
+    bst.mem = proto.mem
+    bst.stats = proto.stats
+    bst.fuel = proto.fuel
+    bst.warp_ctxs = proto.warp_ctxs
+    return bst
+
+
+def _drain_grid(bprog: "_BProgram", bst: _DState, bi: int, ni: int,
+                wg_ids: Sequence[Tuple[int, int]], runahead: bool
+                ) -> Optional[Tuple[_DState, int, int]]:
+    """Grid-mode desync: slice the batch and drive each workgroup's rows
+    per-warp in workgroup order (the oracle's schedule).  When run-ahead
+    is licenced (private stores, 1-D launch — parking workgroup g while
+    g+1 drains past it reorders nothing observable), workgroups park at
+    their first congruent top-level barrier; if every workgroup that did
+    not return parks at the SAME position with congruent stacks, the
+    rows re-merge and the caller resumes lockstep there — returns
+    (merged state, block, node).  Returns None when everything drained
+    to completion."""
+    wg_rows = bprog.wg_rows
+    n_rows = bprog.n_warps
+    n_wgs = n_rows // wg_rows
+    GRID_TELEMETRY.desyncs += 1
+    wstates = [_slice_state(bst, r, bst.warp_ctxs[r])
+               for r in range(n_rows)]
+    gens = [_resume_decoded(bprog, wstates[r], bi, ni)
+            for r in range(n_rows)]
+    park = bprog.private_stores and runahead
+    parked: Dict[int, Tuple[int, int]] = {}
+    for g in range(n_wgs):
+        rows = range(g * wg_rows, (g + 1) * wg_rows)
+        loc = _drive_wg(bprog, gens, rows, wg_ids[g], park)
+        if loc is not None:
+            parked[g] = loc
+    if not parked:
+        return None
+    merged: Optional[_DState] = None
+    locs = set(parked.values())
+    if len(locs) == 1:
+        live = [False] * n_rows
+        for g in parked:
+            for r in range(g * wg_rows, (g + 1) * wg_rows):
+                live[r] = True
+        merged = _merge_rows(bprog, wstates, live, bst)
+    if merged is None:
+        # no congruent merge point: finish the parked workgroups (their
+        # stores are private, so completing them after their peers
+        # already ran ahead is oracle-exact)
+        for g in sorted(parked):
+            _drive_wg(bprog, gens,
+                      range(g * wg_rows, (g + 1) * wg_rows),
+                      wg_ids[g], False)
+        return None
+    GRID_TELEMETRY.remerges += 1
+    pbi, pni = next(iter(locs))
+    return merged, pbi, pni
+
+
+def _gather_rows(subprog: "_BProgram", bst: _DState,
+                 idx: Sequence[int], row_ctxs: List[_WarpCtx],
+                 W: int, strict: bool) -> _DState:
+    """Dense sub-batch of ``bst`` keeping rows ``idx`` (in order); rows
+    beyond len(idx) up to the sub-program's width are zero padding —
+    all-zero masks and states, so they stay dead forever."""
+    n_sub = subprog.n_warps
+    k = len(idx)
+
+    def take(v: Any) -> Any:
+        if v is None or v.ndim == 1:
+            return v              # shared row-invariant array
+        out = np.zeros((n_sub,) + v.shape[1:], v.dtype)
+        out[:k] = v[idx]
+        return out
+
+    st = _DState.__new__(_DState)
+    st.env = [take(v) for v in bst.env]
+    st.slots = [take(v) for v in bst.slots]
+    st.args = bst.args
+    st.argmap = bst.argmap
+    st.mem_arrs = bst.mem_arrs
+    mask = np.zeros((n_sub, W), dtype=bst.mask.dtype)
+    mask[:k] = bst.mask[idx]
+    st.mask = mask
+    ar = mask.any(axis=1)
+    st.act_rows = ar
+    st.active = int(ar.sum())
+    st.stack = [(tok, take(saved), ebi,
+                 None if em is None else take(em))
+                for (tok, saved, ebi, em) in bst.stack]
+    st.pending = None             # compaction happens at block entry
+    intr2: Dict[Tuple[str, int], np.ndarray] = {}
+    for key, v in bst.intr.items():
+        intr2[key] = take(v)
+    st.ctx = _WarpCtx(W, intr2, strict)
+    st.intr = intr2
+    st.mem = bst.mem
+    st.stats = bst.stats
+    st.fuel = bst.fuel
+    st.warp_ctxs = row_ctxs
+    return st
+
+
+def _split_batch(bprog: "_BProgram", bst: _DState,
+                 wg_ids: Sequence[Tuple[int, int]], gs: List[int],
+                 bi: int, runahead: bool) -> None:
+    """Run the workgroups ``gs`` of ``bst`` as one dense sub-batch
+    resuming at block ``bi`` (padded to a power of two so the decode
+    cache sees a bounded set of widths)."""
+    wg_rows = bprog.wg_rows
+    W = bprog.W
+    sub_wgs = 1
+    while sub_wgs < len(gs):
+        sub_wgs *= 2
+    subprog = _decode_batched(bprog.fn, W, bprog.strict,
+                              sub_wgs * wg_rows, grid_mode=True,
+                              ride_along=bprog.ride_along,
+                              wg_rows=wg_rows)
+    idx = [r for g in gs
+           for r in range(g * wg_rows, (g + 1) * wg_rows)]
+    row_ctxs = [bst.warp_ctxs[r] for r in idx]
+    while len(row_ctxs) < sub_wgs * wg_rows:
+        row_ctxs.append(bst.warp_ctxs[idx[-1]])
+    sub_ids = [wg_ids[g] for g in gs]
+    while len(sub_ids) < sub_wgs:
+        sub_ids.append((-1, -1))
+    sub = _gather_rows(subprog, bst, idx, row_ctxs, W, bprog.strict)
+    _run_grid_batched(subprog, sub, sub_ids, bi, 0, runahead)
+
+
+def _compact_grid(bprog: "_BProgram", bst: _DState, bi: int,
+                  wg_ids: Sequence[Tuple[int, int]],
+                  runahead: bool) -> None:
+    """Row compaction (private-store programs, at a loop back-edge): the
+    batch splits into a DEAD sub-batch — workgroups whose rows all ride
+    along empty; they collectively take the vx_pred exit at the next
+    loop head, restore their tokens and run the epilogue in lockstep,
+    finishing almost immediately — and a dense LIVE sub-batch that keeps
+    looping without paying batched work on the dead rows.  Completes the
+    whole batch."""
+    wg_rows = bprog.wg_rows
+    n_rows = bprog.n_warps
+    n_wgs = n_rows // wg_rows
+    live_wg = bst.act_rows.reshape(n_wgs, wg_rows).any(axis=1)
+    GRID_TELEMETRY.compactions += 1
+    dead_gs = [g for g in range(n_wgs) if not live_wg[g]]
+    live_gs = [g for g in range(n_wgs) if live_wg[g]]
+    _split_batch(bprog, bst, wg_ids, dead_gs, bi, runahead)
+    _split_batch(bprog, bst, wg_ids, live_gs, bi, runahead)
+
+
+def _run_grid_batched(bprog: "_BProgram", bst: _DState,
+                      wg_ids: Sequence[Tuple[int, int]],
+                      bi: int = 0, ni: int = 0,
+                      runahead: bool = True) -> None:
+    """Drive one (n_wg x wg_rows, W) batch of independent workgroups:
+    lockstep until a desync event, then drain workgroup by workgroup in
+    workgroup order — re-merging at a congruent top-level barrier when
+    the program's stores are private and the launch is 1-D
+    (``runahead``).  At loop back-edges, mostly-empty such batches
+    compact their live rows into a dense sub-batch."""
+    GRID_TELEMETRY.batches += 1
+    n_rows = bprog.n_warps
+    n_wgs = n_rows // bprog.wg_rows
+    compact_ok = (bprog.private_stores and runahead
+                  and n_wgs >= _COMPACT_MIN_WGS
+                  and _COMPACT_FRACTION > 0.0)
     while True:
         nodes = bprog.bblocks[bi].nodes
         nn = len(nodes)
@@ -2458,16 +2853,31 @@ def _run_grid_batched(bprog: "_BProgram", bst: _DState) -> None:
             desync = True
             break
         if desync:
-            for w in range(bprog.n_warps):
-                stw = _slice_state(bst, w, bst.warp_ctxs[w])
-                for _ in _resume_decoded(bprog, stw, bi, ni):
-                    pass       # barrier of a 1-warp workgroup: continue
-            return
+            m = _drain_grid(bprog, bst, bi, ni, wg_ids, runahead)
+            if m is None:
+                return
+            bst, bi, ni = m
+            continue
         if jump is None:
             raise ExecError(
                 f"block %{bprog.bblocks[bi].label} fell through")
         if jump < 0:
             return
+        if (compact_ok and jump <= bi
+                and 0 < bst.active <= _COMPACT_FRACTION * n_rows):
+            live_wg = bst.act_rows.reshape(
+                n_wgs, bprog.wg_rows).any(axis=1)
+            n_live = int(live_wg.sum())
+            sub_wgs = 1
+            while sub_wgs < n_live:
+                sub_wgs *= 2
+            # the padded sub-batch must be strictly smaller, or a
+            # permissive threshold (tests sweep 1.0) would recurse on a
+            # same-width batch forever
+            if 0 < n_live <= _COMPACT_FRACTION * n_wgs \
+                    and sub_wgs < n_wgs:
+                _compact_grid(bprog, bst, jump, wg_ids, runahead)
+                return
         bi, ni = jump, 0
 
 
@@ -2481,7 +2891,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
            scalar_args: Optional[Dict[str, Any]] = None,
            globals_mem: Optional[Dict[str, np.ndarray]] = None,
            *, decoded: bool = True, batched: bool = True,
-           ride_along: bool = True) -> ExecStats:
+           ride_along: bool = True,
+           grid: Optional[bool] = None) -> ExecStats:
     """Execute a compiled kernel over the launch grid; returns stats.
     Buffers are mutated in place (device memory semantics).
 
@@ -2492,11 +2903,16 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     multi-warp workgroups through the workgroup-batched lockstep executor
     (one (n_warps, W) node walk per workgroup while the warps agree on
     control flow, transparent per-warp fallback otherwise) and packs
-    eligible single-warp grids into (n_wg, W) grid-level batches; both
-    engage only when ``decoded`` is on and OOB-load checking is off.
-    ``ride_along=False`` disables the vx_pred-loop ride-along and
-    grid-level batching (the PR 2 executor, kept as a benchmark
-    baseline)."""
+    eligible grids — single-warp AND multi-warp workgroups — into
+    (n_wg x n_warps, W) grid-level batches with per-workgroup barrier
+    groups; both engage only when ``decoded`` is on and OOB-load checking
+    is off.  ``grid`` pins the grid-level batcher: ``True`` attempts it
+    even when ``ride_along`` is off, ``False`` never engages it (the
+    per-workgroup dispatch the benchmarks baseline against), ``None``
+    (default) engages it whenever the launch is eligible.
+    ``ride_along=False`` disables the vx_pred-loop ride-along and (unless
+    ``grid=True``) grid-level batching (the PR 2 executor, kept as a
+    benchmark baseline)."""
     fn = module_fn
     scalar_args = scalar_args or {}
     mem = DeviceMemory(buffers, globals_mem)
@@ -2522,11 +2938,13 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
                 raise ExecError(f"no scalar bound for {p.name}")
             argmap[id(p)] = np.full(W, v, dtype=_TY_DTYPE[p.ty])
 
-    use_batched = bool(decoded and batched and n_warps > 1
-                       and not params.strict_oob_loads)
-    use_grid = bool(decoded and batched and ride_along and n_warps == 1
+    want_grid = ride_along if grid is None else grid
+    use_grid = bool(decoded and batched and want_grid
                     and n_wg > 1 and not params.strict_oob_loads
                     and _grid_batchable(fn, argmap, mem.globals_mem))
+    use_batched = bool(decoded and batched and n_warps > 1
+                       and not params.strict_oob_loads
+                       and not use_grid)
     prog = _decode(fn, W, params.strict_oob_loads) \
         if decoded and not use_batched and not use_grid else None
     bprog = _decode_batched(fn, W, params.strict_oob_loads, n_warps,
@@ -2549,44 +2967,65 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
                 for wrp in range(params.warps_per_wg)]
 
     if use_grid:
-        # grid-level batching: pack single-warp workgroups into (n_wg, W)
-        # activations — rows are workgroups; per-workgroup intrinsics
-        # (group_id, global_id, core_id) stack into rows, the rest stay
-        # 1D and broadcast
+        # grid-level batching: pack whole workgroups into
+        # (n_wg x n_warps, W) activations — rows are warps, grouped
+        # n_warps consecutive rows per workgroup; per-row intrinsics
+        # (group_id, global_id, warp/local/lane ids) stack into rows,
+        # the launch-invariant ones stay 1D and broadcast
         lanes = np.arange(W)
-        active = lanes < params.wg_threads
-        lx = lanes % params.local_size
-        ly = lanes // params.local_size
-        row_base = dict(base_intr)
-        row_base[("local_id", 0)] = lx.astype(np.int32)
-        row_base[("local_id", 1)] = ly.astype(np.int32)
-        row_base[("lane_id", 0)] = lanes.astype(np.int32)
-        row_base[("warp_id", 0)] = warp_ids[0]
+        warp_tmpl: List[Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              Dict]] = []
+        for wrp in range(n_warps):
+            tid_lin = wrp * W + lanes
+            wactive = tid_lin < params.wg_threads
+            lx = (tid_lin % params.local_size).astype(np.int32)
+            ly = (tid_lin // params.local_size).astype(np.int32)
+            wbase = dict(base_intr)
+            wbase[("local_id", 0)] = lx
+            wbase[("local_id", 1)] = ly
+            wbase[("lane_id", 0)] = lanes.astype(np.int32)
+            wbase[("warp_id", 0)] = warp_ids[wrp]
+            warp_tmpl.append((wactive, lx, ly, wbase))
+        wg_chunk = max(1, _GRID_BATCH_MAX // n_warps)
+        # run-ahead (re-merge past returned workgroups, row compaction)
+        # additionally needs a 1-D launch: _stores_thread_private's
+        # injectivity claims for global_id(0)/group_id(0) break when a
+        # second grid dimension repeats them across gy
+        runahead = params.grid_y == 1 and params.local_size_y == 1
         with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
-            for c0 in range(0, n_wg, _GRID_BATCH_MAX):
-                nc = min(_GRID_BATCH_MAX, n_wg - c0)
+            for c0 in range(0, n_wg, wg_chunk):
+                nc = min(wg_chunk, n_wg - c0)
                 gprog = _decode_batched(fn, W, params.strict_oob_loads,
-                                        nc, grid_mode=True)
+                                        nc * n_warps, grid_mode=True,
+                                        ride_along=ride_along,
+                                        wg_rows=n_warps)
                 row_ctxs: List[_WarpCtx] = []
+                row_masks: List[np.ndarray] = []
+                chunk_ids: List[Tuple[int, int]] = []
                 for k in range(nc):
                     gx = (c0 + k) % params.grid
                     gy = (c0 + k) // params.grid
-                    intr = dict(row_base)
-                    intr[("group_id", 0)] = np.full(W, gx, np.int32)
-                    intr[("group_id", 1)] = np.full(W, gy, np.int32)
-                    intr[("core_id", 0)] = np.full(W, gx % 4, np.int32)
-                    intr[("global_id", 0)] = (gx * params.local_size
-                                              + lx).astype(np.int32)
-                    intr[("global_id", 1)] = (gy * params.local_size_y
-                                              + ly).astype(np.int32)
-                    row_ctxs.append(_WarpCtx(W, intr,
-                                             params.strict_oob_loads))
+                    chunk_ids.append((gx, gy))
+                    for wactive, lx, ly, wbase in warp_tmpl:
+                        intr = dict(wbase)
+                        intr[("group_id", 0)] = np.full(W, gx, np.int32)
+                        intr[("group_id", 1)] = np.full(W, gy, np.int32)
+                        intr[("core_id", 0)] = np.full(W, gx % 4,
+                                                       np.int32)
+                        intr[("global_id", 0)] = (gx * params.local_size
+                                                  + lx).astype(np.int32)
+                        intr[("global_id", 1)] = (
+                            gy * params.local_size_y + ly).astype(
+                                np.int32)
+                        row_ctxs.append(_WarpCtx(
+                            W, intr, params.strict_oob_loads))
+                        row_masks.append(wactive)
                 gctx = _stack_intrs(row_ctxs, W, params.strict_oob_loads)
-                gst = _DState(gprog, argmap,
-                              np.broadcast_to(active, (nc, W)).copy(),
-                              gctx, mem, stats, fuel)
+                gst = _DState(gprog, argmap, np.stack(row_masks), gctx,
+                              mem, stats, fuel)
                 gst.warp_ctxs = row_ctxs
-                _run_grid_batched(gprog, gst)
+                _run_grid_batched(gprog, gst, chunk_ids,
+                                  runahead=runahead)
         return stats
 
     for wg_lin in range(n_wg):

@@ -38,13 +38,13 @@ MULTI_WARP_BENCHES = [
 _multi_warp = interp.fold_warps
 
 
-def _assert_parity(name, fn, bufs0, params, scalars):
+def _assert_parity(name, fn, bufs0, params, scalars, **kw):
     ref = {k: v.copy() for k, v in bufs0.items()}
     st_ref = interp.launch(fn, ref, params, scalar_args=scalars,
                            decoded=False)
     bat = {k: v.copy() for k, v in bufs0.items()}
     st_bat = interp.launch(fn, bat, params, scalar_args=scalars,
-                           decoded=True, batched=True)
+                           decoded=True, batched=True, **kw)
     assert st_ref.instrs == st_bat.instrs, name
     assert st_ref.by_op == st_bat.by_op, name
     assert st_ref.mem_requests == st_bat.mem_requests, name
@@ -360,6 +360,157 @@ def test_grid_batching_parity_large_grid():
 
 
 # -------------------------------------------------------------------------
+# multi-warp grid batching: per-workgroup barrier groups + the
+# desync-ordering repros at 2 and 4 warps per workgroup
+# -------------------------------------------------------------------------
+
+def _compiled_k(handle, name):
+    return run_pipeline(handle.build(None), name, FULL).fn
+
+
+@pytest.mark.parametrize("factor", [2, 4])
+def test_grid_multiwarp_engages_and_parity(factor):
+    """Multi-warp folds of a grid-eligible ragged launch must take the
+    grid path (not silently fall back to per-workgroup dispatch) and
+    stay bit-identical to the oracle."""
+    b = BENCHES["spmv_csr"]
+    rng = np.random.default_rng(7)
+    bufs0, scalars, params = b.make(rng)
+    mp = _multi_warp(params, factor)
+    assert mp.warps_per_wg == factor and mp.grid > 1
+    fn = _compiled_k(b.handle, b.handle.name)
+    t = interp.GRID_TELEMETRY
+    t.reset()
+    _assert_parity(f"spmv_csr/grid_x{factor}", fn, bufs0, mp, scalars,
+                   grid=True)
+    assert t.batches > 0, "multi-warp launch must engage grid batching"
+
+
+@pytest.mark.parametrize("factor", [2, 4])
+def test_grid_multiwarp_two_store_conflict(factor):
+    """Reviewer repro under MULTI-warp grid mode: the two clashing
+    static stores now sit in different WARPS of one workgroup (and in
+    different workgroups at wider grids); hazard-store desync must drain
+    whole workgroups with intra-workgroup oracle scheduling, so the
+    clash resolves exactly as the per-warp schedule does."""
+    fn = _compiled_k(K.two_store_conflict, "two_store_conflict")
+    params = _multi_warp(
+        interp.LaunchParams(grid=4, local_size=32, warp_size=32), factor)
+    if params.grid == 1:
+        pytest.skip("fold left a single workgroup: grid mode ineligible")
+    t = interp.GRID_TELEMETRY
+    t.reset()
+    bat, _ = _assert_parity(f"two_store/grid_x{factor}", fn,
+                            {"out": np.zeros(130, np.float32)}, params,
+                            {"n": 120}, grid=True)
+    assert t.desyncs > 0, "hazard stores must desync the batch"
+
+
+@pytest.mark.parametrize("factor", [2])
+def test_grid_multiwarp_loop_store_conflict(factor):
+    """Cross-trip single-site clash under multi-warp grid mode: trip
+    order must never beat workgroup order."""
+    fn = _compiled_k(K.loop_store_conflict, "loop_store_conflict")
+    trip = np.zeros(128, np.int32)
+    trip[0] = 5      # wg0/warp0 writes longest...
+    trip[64] = 2     # ...but wg1 is the later workgroup and must win
+    params = _multi_warp(
+        interp.LaunchParams(grid=4, local_size=32, warp_size=32), factor)
+    bat, _ = _assert_parity(f"loop_store/grid_x{factor}", fn,
+                            {"trip": trip, "out": np.zeros(1, np.float32)},
+                            params, {"n": 128}, grid=True)
+    assert bat["out"][0] == 64.0
+
+
+@pytest.mark.parametrize("factor", [1, 2])
+def test_grid_multiwarp_callee_store_refused(factor):
+    """The callee-store repro reaches one buffer through two distinct
+    root pointers, so the launch gate refuses it at EVERY warps/wg; the
+    grid=True launch must behave exactly like the fallback executor it
+    lands on (per-workgroup decoded at 1 warp — oracle-exact; the
+    wg-batched executor and its documented PR 2 contract at >1)."""
+    fn = _compiled_k(K.callee_store_conflict, "callee_store_conflict")
+    bufs0 = {"out": np.zeros(1, np.float32)}
+    argmap = {id(p): bufs0["out"] for p in fn.params
+              if p.ty is not None and p.name == "out"}
+    assert not interp._grid_batchable(fn, argmap)
+    params = _multi_warp(
+        interp.LaunchParams(grid=4, local_size=32, warp_size=32), factor)
+    if factor == 1:
+        _assert_parity("callee_store/grid_x1", fn, bufs0, params,
+                       {"n": 128}, grid=True)
+        return
+    for_g = {k: v.copy() for k, v in bufs0.items()}
+    st_g = interp.launch(fn, for_g, params, scalar_args={"n": 128},
+                         grid=True)
+    for_w = {k: v.copy() for k, v in bufs0.items()}
+    st_w = interp.launch(fn, for_w, params, scalar_args={"n": 128},
+                         grid=False)
+    assert st_g.instrs == st_w.instrs and st_g.by_op == st_w.by_op
+    np.testing.assert_array_equal(for_g["out"], for_w["out"])
+
+
+@pytest.mark.parametrize("factor", [1, 2])
+def test_grid_multiwarp_alias_refused(factor):
+    """Aliased-param stores stay refused at every warps/wg and the
+    grid=True launch matches its fallback executor bit for bit."""
+    fn = _compiled_k(K.alias_two_params, "alias_two_params")
+    shared = np.zeros(2, np.float32)
+    argmap = {id(p): shared for p in fn.params if p.name in "pq"}
+    assert not interp._grid_batchable(fn, argmap)
+    params = _multi_warp(
+        interp.LaunchParams(grid=2, local_size=32, warp_size=32), factor)
+    outs = {}
+    for label, kw in (("grid", dict(grid=True)), ("wg", dict(grid=False))):
+        arr = np.zeros(2, np.float32)
+        st = interp.launch(fn, {"p": arr, "q": arr}, params,
+                           scalar_args={"n": 63}, **kw)
+        outs[label] = (st, arr)
+    assert outs["grid"][0].instrs == outs["wg"][0].instrs
+    np.testing.assert_array_equal(outs["grid"][1], outs["wg"][1])
+
+
+@pytest.mark.parametrize("factor", [2, 4])
+def test_grid_multiwarp_barrier_groups(factor):
+    """Barrier-in-loop under multi-warp grid mode: per-workgroup barrier
+    groups must neither fabricate nor drop arrivals.  Per-wg-uniform
+    trips (ragged ACROSS workgroups) are legal and must be bit-identical
+    — the by_op barrier count in _assert_parity proves every arrival;
+    trips ragged WITHIN a workgroup are barrier divergence and must
+    raise the oracle's exact error class."""
+    fn = _compiled_k(K.ragged_barrier_loop, "ragged_barrier_loop")
+    rng = np.random.default_rng(23)
+    W = 32
+    grid = 5
+    local = factor * W
+    total = grid * local
+    params = interp.LaunchParams(grid=grid, local_size=local, warp_size=W)
+    trips = np.repeat(rng.integers(0, 5, grid), local).astype(np.int32)
+    bufs0 = {"trip": trips,
+             "x": rng.standard_normal(total).astype(np.float32),
+             "out": np.zeros(total, np.float32)}
+    _assert_parity(f"barrier_loop/grid_x{factor}", fn, bufs0, params,
+                   {"n": total}, grid=True)
+
+    # ragged within a workgroup: same error class as the oracle
+    bad = trips.copy()
+    bad[:W] += 1                    # warp 0 of wg 0 loops one trip more
+    bufs_bad = {"trip": bad, "x": bufs0["x"],
+                "out": np.zeros(total, np.float32)}
+    errs = {}
+    for label, kw in (("oracle", dict(decoded=False)),
+                      ("grid", dict(grid=True))):
+        try:
+            interp.launch(fn, {k: v.copy() for k, v in bufs_bad.items()},
+                          params, scalar_args={"n": total}, **kw)
+            errs[label] = None
+        except interp.ExecError as e:
+            errs[label] = type(e).__name__
+    assert errs["oracle"] is not None
+    assert errs["grid"] == errs["oracle"]
+
+
+# -------------------------------------------------------------------------
 # hypothesis: random warp / workgroup shapes
 # -------------------------------------------------------------------------
 
@@ -641,6 +792,48 @@ def test_perf_check_per_entry_tolerance():
     failures = check_regressions(fresh, committed)
     assert any("interp_speed_ragged.suite_speedup" in f
                for f in failures), failures
+
+
+def test_perf_check_missing_section_fails():
+    """A section (or metric) present in the committed BENCH_perf.json but
+    absent from the fresh run must FAIL the check, not silently pass — a
+    renamed section or a dropped driver is a wiring regression.  The
+    converse (a brand-new section with no committed baseline) stays
+    legal, otherwise the first run after adding a bench could never
+    commit it."""
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.run import check_regressions
+
+    committed = {
+        "interp_speed": {"aggregate": {"suite_speedup": 3.0,
+                                       "geomean_speedup": 2.5}},
+        "interp_speed_grid": {"aggregate": {"suite_speedup": 4.0,
+                                            "geomean_speedup": 3.0}},
+    }
+    # whole section missing from the fresh run
+    fresh = {"interp_speed": {"aggregate": {"suite_speedup": 3.0,
+                                            "geomean_speedup": 2.5}}}
+    failures = check_regressions(fresh, committed)
+    assert len(failures) == 2 and \
+        all("missing from fresh run" in f for f in failures), failures
+    assert any("interp_speed_grid.suite_speedup" in f
+               for f in failures), failures
+
+    # one metric missing from an otherwise-present section
+    fresh = {
+        "interp_speed": {"aggregate": {"suite_speedup": 3.0,
+                                       "geomean_speedup": 2.5}},
+        "interp_speed_grid": {"aggregate": {"suite_speedup": 4.0}},
+    }
+    failures = check_regressions(fresh, committed)
+    assert len(failures) == 1 and \
+        "interp_speed_grid.geomean_speedup" in failures[0], failures
+
+    # fresh-only sections (no committed baseline) never fail
+    fresh["interp_speed_grid"]["aggregate"]["geomean_speedup"] = 3.0
+    fresh["interp_speed_grid_mw"] = {
+        "aggregate": {"suite_speedup": 2.0, "geomean_speedup": 2.0}}
+    assert check_regressions(fresh, committed) == []
 
 
 # -------------------------------------------------------------------------

@@ -1,0 +1,310 @@
+"""Metamorphic tests for the grid-level batcher's scheduling freedoms.
+
+The grid executor earns its speed from three internal degrees of freedom
+that must all be semantically invisible:
+
+  * CHUNKING — a launch is split into (#wg x warps/wg)-row batches of at
+    most ``interp._GRID_BATCH_MAX`` rows; results must not depend on
+    where the chunk boundaries fall ({1, 3, 64} sweeps both the
+    degenerate one-workgroup-per-batch case and odd boundaries);
+  * COMPACTION — when ride-along leaves most rows empty, live rows move
+    into a dense sub-batch (``interp._COMPACT_FRACTION``); results must
+    be identical with compaction off (0.0), default (0.25) and maximally
+    eager (1.0);
+  * RE-MERGE — desynced workgroups rejoin lockstep at congruent
+    top-level barriers; parity across warps/wg shapes exercises it.
+
+Each sweep asserts BIT-identical ExecStats + buffers against the
+``decoded=False`` oracle, so any schedule leak — a store resolving in
+batch order instead of workgroup order, a fabricated barrier arrival, a
+resurrected compacted row — fails loudly.  A workgroup-permutation test
+adds the classic metamorphic relation: permuting which workgroup owns
+which CSR row must permute the output the same way, bit for bit.
+
+Deterministic sweeps run everywhere; a hypothesis section fuzzes ragged
+trip vectors, grid shapes and config combinations (skipped without
+hypothesis; CI installs it from requirements-dev.txt and caps the
+example budget via VOLT_HYPOTHESIS_MAX_EXAMPLES).
+"""
+import os
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent / "kernels"))
+
+from repro.core import interp
+from repro.core.passes.pipeline import ABLATION_LADDER, run_pipeline
+from repro.volt_bench import BENCHES
+
+import volt_kernels as K
+
+FULL = ABLATION_LADDER[-1]
+
+_CK_CACHE = {}
+
+
+def _compiled(handle, name):
+    fn = _CK_CACHE.get(name)
+    if fn is None:
+        fn = run_pipeline(handle.build(None), handle.name, FULL).fn
+        _CK_CACHE[name] = fn
+    return fn
+
+
+def _stats_tuple(st: interp.ExecStats):
+    return (st.instrs, dict(st.by_op), st.mem_requests, st.mem_insts,
+            st.shared_requests, st.atomic_serial, st.max_ipdom_depth,
+            st.prints)
+
+
+def _launch(fn, bufs0, params, scalars, **kw):
+    bufs = {k: v.copy() for k, v in bufs0.items()}
+    st = interp.launch(fn, bufs, params, scalar_args=scalars, **kw)
+    return _stats_tuple(st), bufs
+
+
+def _assert_same(name, a, b):
+    assert a[0] == b[0], f"{name}: ExecStats diverged"
+    for k in a[1]:
+        np.testing.assert_array_equal(a[1][k], b[1][k],
+                                      err_msg=f"{name}: buffer {k}")
+
+
+def _ragged_cases(seed=7):
+    """(name, fn, bufs, scalars, params) for the grid-mode targets."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for bname in ("spmv_csr", "spmv_tail", "bfs_frontier"):
+        b = BENCHES[bname]
+        bufs, sc, params = b.make(rng)
+        out.append((bname, _compiled(b.handle, bname), bufs, sc, params))
+    return out
+
+
+# --------------------------------------------------------------------------
+# deterministic sweeps (always run)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 3, 64])
+@pytest.mark.parametrize("factor", [1, 2, 4])
+def test_chunk_size_invariance(monkeypatch, chunk, factor):
+    """Results must not depend on where grid-chunk boundaries fall, at
+    any warps/wg (chunk=1 degenerates to one workgroup per batch, which
+    for multi-warp folds still exercises per-wg barrier groups)."""
+    monkeypatch.setattr(interp, "_GRID_BATCH_MAX", chunk)
+    for name, fn, bufs, sc, params in _ragged_cases():
+        p = interp.fold_warps(params, factor)
+        oracle = _launch(fn, bufs, p, sc, decoded=False)
+        got = _launch(fn, bufs, p, sc, grid=True)
+        _assert_same(f"{name} x{factor} chunk={chunk}", oracle, got)
+
+
+@pytest.mark.parametrize("fraction", [0.0, 0.25, 1.0])
+@pytest.mark.parametrize("factor", [1, 2])
+def test_compaction_threshold_invariance(monkeypatch, fraction, factor):
+    """Compaction off / default / maximally eager must be bit-invisible
+    (min-wgs floor lowered so small test grids can compact at all)."""
+    monkeypatch.setattr(interp, "_COMPACT_FRACTION", fraction)
+    monkeypatch.setattr(interp, "_COMPACT_MIN_WGS", 2)
+    for name, fn, bufs, sc, params in _ragged_cases():
+        p = interp.fold_warps(params, factor)
+        oracle = _launch(fn, bufs, p, sc, decoded=False)
+        got = _launch(fn, bufs, p, sc, grid=True)
+        _assert_same(f"{name} x{factor} compact={fraction}", oracle, got)
+
+
+@pytest.mark.parametrize("factor", [1, 2])
+def test_workgroup_permutation(factor):
+    """Permuting which workgroup owns which CSR row permutes the output
+    identically: y'[i] == y[perm[i]] bit for bit (per-row accumulation
+    order is preserved, only the row-to-workgroup assignment moves)."""
+    rng = np.random.default_rng(11)
+    b = BENCHES["spmv_tail"]
+    bufs, sc, params = b.make(rng)
+    fn = _compiled(b.handle, "spmv_tail")
+    n = sc["n"]
+    p = interp.fold_warps(params, factor)
+    _, out1 = _launch(fn, bufs, p, sc, grid=True)
+
+    # thread-level permutation moving whole 32-thread workgroup blocks
+    wg_perm = rng.permutation(params.grid)
+    tperm = (wg_perm[:, None] * params.local_size
+             + np.arange(params.local_size)).ravel()
+    rp, cols, vals = bufs["row_ptr"], bufs["cols"], bufs["vals"]
+    deg = np.diff(rp)
+    deg2 = deg[tperm]
+    rp2 = np.zeros(n + 1, np.int32)
+    rp2[1:] = np.cumsum(deg2)
+    cols2 = np.zeros_like(cols)
+    vals2 = np.zeros_like(vals)
+    for i in range(n):
+        src = tperm[i]
+        cols2[rp2[i]:rp2[i + 1]] = cols[rp[src]:rp[src + 1]]
+        vals2[rp2[i]:rp2[i + 1]] = vals[rp[src]:rp[src + 1]]
+    bufs2 = dict(bufs, row_ptr=rp2, cols=cols2, vals=vals2)
+    _, out2 = _launch(fn, bufs2, p, sc, grid=True)
+    np.testing.assert_array_equal(out2["y"], out1["y"][tperm],
+                                  err_msg="permuted grid output")
+
+
+def test_remerge_fires_and_stays_exact(monkeypatch):
+    """Crafted workload for the desync re-merge: a multi-warp grid of a
+    barrier-in-loop kernel with per-WORKGROUP-uniform but cross-workgroup
+    ragged trips.  Ride-along is off (barrier function, multi-warp), so
+    every trip-count disagreement desyncs; the batch must re-merge at
+    the loop barrier instead of draining, and stay bit-exact."""
+    fn = _compiled(K.ragged_barrier_loop, "ragged_barrier_loop")
+    rng = np.random.default_rng(5)
+    W, n_warps, grid = 32, 2, 6
+    local = n_warps * W
+    total = grid * local
+    params = interp.LaunchParams(grid=grid, local_size=local, warp_size=W)
+    trips = np.repeat(rng.integers(1, 6, grid), local).astype(np.int32)
+    bufs = {"trip": trips,
+            "x": rng.standard_normal(total).astype(np.float32),
+            "out": np.zeros(total, np.float32)}
+    sc = {"n": total}
+    t = interp.GRID_TELEMETRY
+    t.reset()
+    oracle = _launch(fn, bufs, params, sc, decoded=False)
+    got = _launch(fn, bufs, params, sc, grid=True)
+    _assert_same("remerge barrier loop", oracle, got)
+    assert t.desyncs > 0, "crafted workload must desync"
+    assert t.remerges > 0, "desynced workgroups must re-merge at the " \
+                           "congruent loop barrier"
+
+
+def test_compaction_fires_and_stays_exact(monkeypatch):
+    """Crafted workload for row compaction: the pareto-tail CSR leaves a
+    handful of workgroups looping hundreds of trips after the rest of
+    the chunk went empty — the live-row fraction must cross the
+    threshold, compaction must fire, and results stay bit-exact."""
+    monkeypatch.setattr(interp, "_COMPACT_MIN_WGS", 4)
+    b = BENCHES["spmv_tail"]
+    rng = np.random.default_rng(7)
+    bufs, sc, params = b.make(rng)
+    fn = _compiled(b.handle, "spmv_tail")
+    t = interp.GRID_TELEMETRY
+    for factor in (1, 2):
+        p = interp.fold_warps(params, factor)
+        t.reset()
+        oracle = _launch(fn, bufs, p, sc, decoded=False)
+        got = _launch(fn, bufs, p, sc, grid=True)
+        _assert_same(f"compaction x{factor}", oracle, got)
+        assert t.compactions > 0, \
+            f"x{factor}: pareto-tail workload must compact"
+
+
+def test_compaction_needs_private_stores():
+    """A kernel whose store index is NOT provably thread-private (a
+    fixed-cell scatter) must never take the run-ahead paths: its store
+    order across workgroups is observable, so order_free/private_stores
+    stay False and compaction/partial-park never fire."""
+    fn = _compiled(K.loop_store_conflict, "loop_store_conflict")
+    prog = interp._decode_batched(fn, 32, False, 4, grid_mode=True)
+    assert not prog.order_free
+    assert not prog.private_stores
+    fn2 = _compiled(BENCHES["spmv_tail"].handle, "spmv_tail")
+    prog2 = interp._decode_batched(fn2, 32, False, 4, grid_mode=True)
+    assert prog2.order_free and prog2.private_stores
+
+
+# --------------------------------------------------------------------------
+# hypothesis fuzzing
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not _HAVE_HYPOTHESIS,
+    reason="property tests need hypothesis "
+           "(pip install -r requirements-dev.txt)")
+
+_H_EXAMPLES = int(os.environ.get("VOLT_HYPOTHESIS_MAX_EXAMPLES", "25"))
+
+
+if _HAVE_HYPOTHESIS:
+    # monkeypatch is function-scoped but every example re-sets the same
+    # module attributes, so sharing it across examples is safe
+    _FIXTURE_OK = dict(
+        suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+    @needs_hypothesis
+    @settings(max_examples=min(25, _H_EXAMPLES), deadline=None,
+              **_FIXTURE_OK)
+    @given(n_warps=st.sampled_from([1, 2, 4]),
+           grid=st.integers(2, 10),
+           chunk=st.sampled_from([1, 3, 5, 64]),
+           fraction=st.sampled_from([0.0, 0.25, 0.6, 1.0]),
+           max_trip=st.integers(0, 40),
+           seed=st.integers(0, 2**31 - 1))
+    def test_grid_config_invariance_random(monkeypatch, n_warps, grid,
+                                           chunk, fraction, max_trip,
+                                           seed):
+        """Random ragged trips x grid shape x chunk size x compaction
+        threshold: the grid executor must match the oracle bit for bit
+        under every configuration."""
+        monkeypatch.setattr(interp, "_GRID_BATCH_MAX", chunk)
+        monkeypatch.setattr(interp, "_COMPACT_FRACTION", fraction)
+        monkeypatch.setattr(interp, "_COMPACT_MIN_WGS", 2)
+        rng = np.random.default_rng(seed)
+        W = 32
+        local = n_warps * W
+        total = grid * local
+        params = interp.LaunchParams(grid=grid, local_size=local,
+                                     warp_size=W)
+        fn = _compiled(K.ragged_nested, "ragged_nested")
+        bufs = {"trip": rng.integers(0, max_trip + 1,
+                                     total).astype(np.int32),
+                "x": (rng.standard_normal(total) * 2).astype(np.float32),
+                "out": np.zeros(total, np.float32)}
+        sc = {"n": total}
+        oracle = _launch(fn, bufs, params, sc, decoded=False)
+        got = _launch(fn, bufs, params, sc, grid=True)
+        _assert_same(f"cfg{(n_warps, grid, chunk, fraction, seed)}",
+                     oracle, got)
+
+    @needs_hypothesis
+    @settings(max_examples=min(20, _H_EXAMPLES), deadline=None,
+              **_FIXTURE_OK)
+    @given(n_warps=st.sampled_from([2, 4]),
+           grid=st.integers(2, 8),
+           chunk=st.sampled_from([1, 3, 64]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_grid_barrier_remerge_random(monkeypatch, n_warps, grid,
+                                         chunk, seed):
+        """Multi-warp grids of the barrier-in-loop kernel with random
+        per-workgroup trips: per-wg barrier groups + re-merge must never
+        fabricate or drop an arrival (stats count every barrier issue)."""
+        monkeypatch.setattr(interp, "_GRID_BATCH_MAX", chunk)
+        rng = np.random.default_rng(seed)
+        W = 32
+        local = n_warps * W
+        total = grid * local
+        params = interp.LaunchParams(grid=grid, local_size=local,
+                                     warp_size=W)
+        fn = _compiled(K.ragged_barrier_loop, "ragged_barrier_loop")
+        trips = np.repeat(rng.integers(0, 6, grid), local)
+        bufs = {"trip": trips.astype(np.int32),
+                "x": rng.standard_normal(total).astype(np.float32),
+                "out": np.zeros(total, np.float32)}
+        sc = {"n": total}
+        oracle = _launch(fn, bufs, params, sc, decoded=False)
+        got = _launch(fn, bufs, params, sc, grid=True)
+        _assert_same(f"barrier{(n_warps, grid, chunk, seed)}",
+                     oracle, got)
+else:
+    @needs_hypothesis
+    def test_grid_config_invariance_random():
+        pass
+
+    @needs_hypothesis
+    def test_grid_barrier_remerge_random():
+        pass

@@ -11,6 +11,7 @@
    verified block structure.
 4. JAX backend equivalence on randomized inputs.
 """
+import os
 import sys
 from pathlib import Path
 
@@ -22,6 +23,10 @@ pytest.importorskip(
     reason="property tests need hypothesis (pip install -r "
            "requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
+
+# CI caps the example budget (VOLT_HYPOTHESIS_MAX_EXAMPLES=10) so the
+# hypothesis-enabled job stays fast while local runs keep full coverage
+_H_EXAMPLES = int(os.environ.get("VOLT_HYPOTHESIS_MAX_EXAMPLES", "25"))
 
 sys.path.insert(0, str(Path(__file__).parent / "kernels"))
 
@@ -37,7 +42,7 @@ import volt_kernels as K
 PARAMS = interp.LaunchParams(grid=2, local_size=32, warp_size=32)
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=min(20, _H_EXAMPLES), deadline=None)
 @given(data=st.data())
 def test_simt_equals_scalar_oracle(data):
     seed = data.draw(st.integers(0, 2**31 - 1))
@@ -60,7 +65,7 @@ def test_simt_equals_scalar_oracle(data):
     np.testing.assert_allclose(simt["out"], ref["out"], atol=1e-5)
 
 
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=min(20, _H_EXAMPLES), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1),
        thresh=st.floats(-2.0, 2.0))
 def test_uniformity_soundness_under_random_inputs(seed, thresh):
@@ -115,7 +120,7 @@ def _random_cfg(rng: np.random.Generator, n_blocks: int) -> Function:
     return fn
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=min(25, _H_EXAMPLES), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 10))
 def test_structurize_random_cfgs(seed, n):
     rng = np.random.default_rng(seed)
@@ -131,7 +136,7 @@ def test_structurize_random_cfgs(seed, n):
     vir.verify(fn)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=min(10, _H_EXAMPLES), deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
 def test_jax_backend_equivalence(seed):
     import jax.numpy as jnp
