@@ -12,7 +12,11 @@ The compiled IR is asserted identical in tests/test_perf_caches.py.
 It also measures the persistent disk compile cache (core/runtime.py):
 two FRESH interpreter processes compile the same kernels into a fresh
 cache directory — the second process must hit the disk cache for every
-kernel and compile measurably faster (the PR acceptance gate).
+kernel and compile measurably faster (the PR acceptance gate).  Since
+the decode-plan cache landed (the interpreter's per-function static
+decode analysis persisting next to the compile cache, see
+runtime._decode_plan_load), the same two-process run also DECODES every
+kernel and reports the second process's decode-plan hits.
 """
 from __future__ import annotations
 
@@ -38,12 +42,14 @@ DISK_NAMES = ["vecadd", "sgemm", "cfd_like", "blackscholes", "reduce0",
 
 _DISK_SNIPPET = """
 import json, sys, time
-from repro.core import runtime
+from repro.core import interp, runtime
 from repro.volt_bench import BENCHES
 names = sys.argv[1].split(",")
 t0 = time.perf_counter()
 for n in names:
-    runtime.compile_kernel(BENCHES[n].handle)
+    ck = runtime.compile_kernel(BENCHES[n].handle)
+    # decode too: a plan-cache hit skips the static decode analysis
+    interp._decode_batched(ck.fn, 32, False, 1, grid_mode=True)
 dt = time.perf_counter() - t0
 print(json.dumps({"ms": dt * 1e3, **runtime.DISK_CACHE_STATS}))
 """
@@ -70,6 +76,8 @@ def run_disk() -> Dict[str, float]:
             "speedup": cold["ms"] / warm["ms"],
             "second_process_hits": warm["hits"],
             "second_process_misses": warm["misses"],
+            "second_process_decode_hits": warm["decode_hits"],
+            "second_process_decode_misses": warm["decode_misses"],
             "kernels": len(DISK_NAMES)}
 
 
@@ -131,11 +139,14 @@ def main() -> Dict:
           f"processes): cold {disk['cold_ms']:.0f}ms -> warm "
           f"{disk['warm_ms']:.0f}ms ({disk['speedup']:.2f}x, "
           f"{disk['second_process_hits']} hits / "
-          f"{disk['second_process_misses']} misses in process 2)")
+          f"{disk['second_process_misses']} misses in process 2; "
+          f"decode plans: {disk['second_process_decode_hits']} hits / "
+          f"{disk['second_process_decode_misses']} misses)")
     print(f"compile_time/geomean,0,ratio={geo:.4f}")
     print(f"compile_time/cache_speedup,0,speedup={total_speedup:.4f}")
     print(f"compile_time/disk_cache,0,speedup={disk['speedup']:.4f};"
-          f"hits={disk['second_process_hits']}")
+          f"hits={disk['second_process_hits']};"
+          f"decode_hits={disk['second_process_decode_hits']}")
     return {"per_bench": res,
             "aggregate": {**agg, "suite_speedup": total_speedup},
             "disk": disk}

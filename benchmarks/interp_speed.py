@@ -4,9 +4,12 @@ plus the workgroup-batched lockstep executor on multi-warp reshapes of
 the suite (``--batched`` / ``main_batched``), the vx_pred loop
 ride-along on ragged-loop kernels vs the PR 2 desync-on-mixed-exit
 executor (``main_ragged``), grid-level batching of single-warp
-workgroup grids (``--grid`` / ``main_grid``), and multi-warp grid
+workgroup grids (``--grid`` / ``main_grid``), multi-warp grid
 batching of whole workgroups as grouped rows vs per-workgroup dispatch
-(``main_grid_mw``, also run by ``--grid``).
+(``main_grid_mw``, also run by ``--grid``), and the PR 5 memory
+subsystem — vectorized/analytic coalescing engine + private-shared
+tile grid batching — on the memory-bound benches vs the PR 4
+configuration (``--mem`` / ``main_mem``).
 
 ``--benches a b c`` restricts any mode to the named benches (the CI
 smoke runs ``--batched --benches spmv_csr bfs_frontier``).
@@ -29,7 +32,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import interp, runtime
+from repro.core import interp, interp_mem, runtime
 from repro.core.passes.pipeline import ABLATION_LADDER
 from repro.volt_bench import BENCHES
 
@@ -76,6 +79,24 @@ GRID_BENCHES = [
 GRID_MW_BENCHES = [
     "spmv_csr", "spmv_tail", "bfs_frontier", "psort", "blackscholes",
     "kmeans", "stencil",
+]
+
+# Memory-bound benches for the coalescing-engine section
+# (``interp_speed_mem``): streaming kernels, gather-heavy ragged
+# kernels, and the __shared__-tile kernels that PR 5's private-tile
+# grid batching moved off per-workgroup dispatch.  The NEW memory
+# subsystem (vectorized/analytic coalescing counts + tile-sliced grid
+# batching) is measured against the PR 4 configuration: per-access
+# ``np.unique`` counting (interp_mem.reference_counting) and — for
+# shared-memory kernels, which the old launch gate refused —
+# per-workgroup dispatch (``grid=False``).  A separate column isolates
+# the engine alone (reference vs fast counting on the SAME executor
+# path) — see the honest note in docs/performance.md: at warp width 32
+# the engine alone is a modest win, the unlocked grid path is the big
+# one.
+MEM_BENCHES = [
+    "vecadd", "transpose", "pathfinder", "sfilter", "stencil",
+    "spmv_csr", "spmv_tail", "reduce0", "psum", "shuffle_sw", "vote_sw",
 ]
 
 
@@ -465,6 +486,168 @@ def aggregate_grid_mw(results: Dict) -> Dict[str, float]:
     }
 
 
+def run_mem(seed: int = 7, benches: Optional[List[str]] = None) -> Dict:
+    """Memory-bound benches: the PR 5 memory subsystem (vectorized /
+    analytic coalescing engine + private-shared-tile grid batching) vs
+    the PR 4 configuration (per-access np.unique, shared kernels on
+    per-workgroup dispatch), parity-gated against the oracle.
+
+    Reported per bench:
+      * ``speedup``        — full subsystem vs the PR 4 configuration;
+      * ``engine_speedup`` — counting engine alone (reference vs fast
+        counting on the SAME executor path);
+      * ``compaction_win`` (spmv_tail only) — row compaction on/off
+        under the fast engine; per-access work is width-proportional
+        now, so dropping dead rows pays roughly proportionally (the
+        widened win PR 4's honest note predicted)."""
+    names = benches or MEM_BENCHES
+    out: Dict[str, Dict[str, float]] = {}
+    for name in names:
+        b = BENCHES[name]
+        rng = np.random.default_rng(seed)
+        bufs0, scalars, params = b.make(rng)
+        ck = runtime.compile_kernel(b.handle, FULL)
+        # the PR 4 configuration: np.unique counting; shared-memory
+        # kernels fell back to per-workgroup dispatch (the old launch
+        # gate refused their tiles)
+        pre_kw = dict(grid=False) if b.uses_shared else {}
+
+        # ---- parity gate: new == pre-PR configuration == oracle ------
+        runs = {}
+        for label, kw, ref_counting in (
+                ("oracle", dict(decoded=False), False),
+                ("pre", dict(decoded=True, batched=True, **pre_kw), True),
+                ("new", dict(decoded=True, batched=True), False)):
+            bufs = {k: v.copy() for k, v in bufs0.items()}
+            if ref_counting:
+                with interp_mem.reference_counting():
+                    st = interp.launch(ck.fn, bufs, params,
+                                       scalar_args=scalars, **kw)
+            else:
+                st = interp.launch(ck.fn, bufs, params,
+                                   scalar_args=scalars, **kw)
+            runs[label] = (st, bufs)
+        for label in ("pre", "new"):
+            _assert_stats_equal(f"{name}/{label}", runs["oracle"][0],
+                                runs[label][0])
+            for k in bufs0:
+                np.testing.assert_array_equal(
+                    runs["oracle"][1][k], runs[label][1][k],
+                    err_msg=f"{name}/{label}: buffer {k} diverged")
+
+        # interleaved best-of (every reported number is a ratio).  For
+        # non-shared benches the PR 4 configuration IS the
+        # reference-counting run on the default path, so one timing
+        # serves both columns.
+        variants = {
+            "new": (dict(decoded=True, batched=True), False),
+            "pre": (dict(decoded=True, batched=True, **pre_kw), True),
+        }
+        if pre_kw:
+            variants["ref_path"] = (dict(decoded=True, batched=True),
+                                    True)
+        best = {k: float("inf") for k in variants}
+        for _ in range(max(REPS, 5)):
+            for label, (kw, ref_counting) in variants.items():
+                bufs = {k: v.copy() for k, v in bufs0.items()}
+                if ref_counting:
+                    with interp_mem.reference_counting():
+                        t0 = time.perf_counter()
+                        interp.launch(ck.fn, bufs, params,
+                                      scalar_args=scalars, **kw)
+                        dt = time.perf_counter() - t0
+                else:
+                    t0 = time.perf_counter()
+                    interp.launch(ck.fn, bufs, params,
+                                  scalar_args=scalars, **kw)
+                    dt = time.perf_counter() - t0
+                best[label] = min(best[label], dt)
+        if "ref_path" not in best:
+            best["ref_path"] = best["pre"]
+        out[name] = {
+            "pre_ms": best["pre"] * 1e3, "new_ms": best["new"] * 1e3,
+            "speedup": best["pre"] / best["new"],
+            "engine_speedup": best["ref_path"] / best["new"],
+            "uses_shared": bool(b.uses_shared),
+            "instrs": runs["new"][0].instrs,
+        }
+        if name == "spmv_tail":
+            # compaction on/off under the fast engine (interleaved)
+            cbest = {0.25: float("inf"), 0.0: float("inf")}
+            saved = interp._COMPACT_FRACTION
+            for _ in range(max(REPS, 5)):
+                for frac in cbest:
+                    interp._COMPACT_FRACTION = frac
+                    bufs = {k: v.copy() for k, v in bufs0.items()}
+                    t0 = time.perf_counter()
+                    interp.launch(ck.fn, bufs, params,
+                                  scalar_args=scalars)
+                    cbest[frac] = min(cbest[frac],
+                                      time.perf_counter() - t0)
+            interp._COMPACT_FRACTION = saved
+            out[name]["compaction_win"] = cbest[0.0] / cbest[0.25]
+    return out
+
+
+def aggregate_mem(results: Dict) -> Dict[str, float]:
+    t_pre = sum(v["pre_ms"] for v in results.values())
+    t_new = sum(v["new_ms"] for v in results.values())
+    sp = [v["speedup"] for v in results.values()]
+    esp = [v["engine_speedup"] for v in results.values()]
+    agg = {
+        "total_pre_ms": t_pre,
+        "total_new_ms": t_new,
+        "suite_speedup": t_pre / t_new,
+        "geomean_speedup": float(np.exp(np.mean(np.log(sp)))),
+        "min_speedup": min(sp),
+        "max_speedup": max(sp),
+        "geomean_engine_speedup": float(np.exp(np.mean(np.log(esp)))),
+    }
+    shared = [v["speedup"] for v in results.values() if v["uses_shared"]]
+    if shared:
+        agg["geomean_shared_grid_speedup"] = float(
+            np.exp(np.mean(np.log(shared))))
+    cw = [v["compaction_win"] for v in results.values()
+          if "compaction_win" in v]
+    if cw:
+        agg["compaction_win"] = cw[0]
+    return agg
+
+
+def main_mem(benches: Optional[List[str]] = None) -> Dict:
+    results = run_mem(benches=benches)
+    agg = aggregate_mem(results)
+    print("# coalescing engine + private-shared grid batching — "
+          "memory-bound benches (vs PR 4 config: np.unique counting, "
+          "shared kernels per-workgroup)")
+    print("| bench | shared | pre ms | new ms | speedup | engine alone |")
+    print("|---|---|---|---|---|---|")
+    for name, v in results.items():
+        print(f"| {name} | {'y' if v['uses_shared'] else ''} | "
+              f"{v['pre_ms']:.1f} | {v['new_ms']:.1f} | "
+              f"{v['speedup']:.2f}x | {v['engine_speedup']:.2f}x |")
+    print(f"\nmem suite speedup vs PR 4 config: "
+          f"{agg['suite_speedup']:.2f}x "
+          f"(geomean {agg['geomean_speedup']:.2f}x, "
+          f"min {agg['min_speedup']:.2f}x, max {agg['max_speedup']:.2f}x); "
+          f"engine alone geomean {agg['geomean_engine_speedup']:.2f}x")
+    if "geomean_shared_grid_speedup" in agg:
+        print(f"shared-memory kernels on the grid path: "
+              f"{agg['geomean_shared_grid_speedup']:.2f}x geomean over "
+              f"per-workgroup dispatch")
+    if "compaction_win" in agg:
+        print(f"spmv_tail row-compaction win under the fast engine: "
+              f"{agg['compaction_win']:.2f}x (PR 4 measured ~1.2x with "
+              f"per-access np.unique)")
+    for name, v in results.items():
+        print(f"interp_speed_mem/{name},{v['new_ms'] * 1e3:.1f},"
+              f"speedup={v['speedup']:.3f};"
+              f"engine={v['engine_speedup']:.3f}")
+    print(f"interp_speed_mem/suite,{agg['total_new_ms'] * 1e3:.1f},"
+          f"speedup={agg['suite_speedup']:.3f}")
+    return {"per_bench": results, "aggregate": agg}
+
+
 def main(benches: Optional[List[str]] = None) -> Dict:
     results = run(benches=benches)
     agg = aggregate(results)
@@ -602,9 +785,12 @@ if __name__ == "__main__":
         mw = [n for n in (only or GRID_MW_BENCHES) if n in GRID_MW_BENCHES]
         if mw:
             main_grid_mw(benches=mw)
+    elif "--mem" in argv:
+        main_mem(benches=only)
     else:
         main(benches=only)
         main_batched(benches=only)
         main_ragged()
         main_grid()
         main_grid_mw()
+        main_mem()

@@ -18,6 +18,9 @@ markdown tables above them).  Sections:
   interp_speed_grid_mw : multi-warp grid batching (whole workgroups as
                    grouped rows, per-workgroup barrier groups) vs
                    per-workgroup dispatch
+  interp_speed_mem : vectorized/analytic coalescing engine +
+                   private-shared-tile grid batching on the
+                   memory-bound benches vs the PR 4 configuration
   kernels        : Pallas kernel vs jnp-oracle timings (CPU interpret)
   roofline       : per (arch x shape x mesh) three-term roofline rows
 
@@ -30,8 +33,17 @@ later sessions can diff regressions:
   python benchmarks/run.py perf --check  # measure fresh and exit non-zero
                                           # on a >20% regression against
                                           # the committed BENCH_perf.json
+  python benchmarks/run.py perf --profile # additionally run each section
+                                          # under cProfile and print its
+                                          # top functions by cumulative
+                                          # time — so the NEXT hot-spot
+                                          # hunt starts from data, not
+                                          # folklore
 """
+import cProfile
+import io
 import json
+import pstats
 import sys
 from pathlib import Path
 
@@ -50,8 +62,13 @@ CHECKED_METRICS = [
     ("interp_speed_grid", "geomean_speedup"),
     ("interp_speed_grid_mw", "suite_speedup"),
     ("interp_speed_grid_mw", "geomean_speedup"),
+    ("interp_speed_mem", "suite_speedup"),
+    ("interp_speed_mem", "geomean_speedup"),
     ("compile_time", "suite_speedup"),
 ]
+
+#: top-N functions shown per section under ``--profile``
+PROFILE_TOP_N = 15
 # Default tolerance.  A single global knob lets noisy, small entries
 # (sub-ms compile timings, tiny kernels) mask real regressions in big
 # ones, so the committed BENCH_perf.json may override it per entry under
@@ -121,16 +138,19 @@ def main() -> None:
         ("interp_speed_ragged", interp_speed.main_ragged),
         ("interp_speed_grid", interp_speed.main_grid),
         ("interp_speed_grid_mw", interp_speed.main_grid_mw),
+        ("interp_speed_mem", interp_speed.main_mem),
         ("kernels", kernels_bench.main),
         ("roofline", roofline_bench.main),
     ]
     args = [a for a in sys.argv[1:]]
     check = "--check" in args
-    args = [a for a in args if a != "--check"]
+    profile = "--profile" in args
+    args = [a for a in args if a not in ("--check", "--profile")]
     only = args[0] if args else None
     perf_sections = {"interp_speed", "interp_speed_batched",
                      "interp_speed_ragged", "interp_speed_grid",
-                     "interp_speed_grid_mw", "compile_time"}
+                     "interp_speed_grid_mw", "interp_speed_mem",
+                     "compile_time"}
     perf: dict = {}
     for name, fn in sections:
         if only == "perf":
@@ -139,10 +159,34 @@ def main() -> None:
         elif only and name != only:
             continue
         print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
-        result = fn()
+        if profile:
+            prof = cProfile.Profile()
+            prof.enable()
+            result = fn()
+            prof.disable()
+            buf = io.StringIO()
+            pstats.Stats(prof, stream=buf).sort_stats(
+                "cumulative").print_stats(PROFILE_TOP_N)
+            print(f"\n[run] --profile: top {PROFILE_TOP_N} by cumulative "
+                  f"time for section {name}", flush=True)
+            # strip the pstats banner down to the table
+            lines = buf.getvalue().splitlines()
+            start = next((j for j, ln in enumerate(lines)
+                          if ln.lstrip().startswith("ncalls")), 0)
+            print("\n".join(lines[start:start + PROFILE_TOP_N + 1]),
+                  flush=True)
+        else:
+            result = fn()
         if name in perf_sections and isinstance(result, dict):
             perf[name] = result
     if not perf:
+        return
+    if profile:
+        # profiled timings carry cProfile overhead — never let them
+        # replace the committed baseline numbers or trip the
+        # regression gate
+        print("\n[run] --profile run: BENCH_perf.json left untouched, "
+              "--check skipped", flush=True)
         return
     if check:
         committed = {}

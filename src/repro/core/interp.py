@@ -31,6 +31,8 @@ from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import interp_mem as _mem
+from .passes.analysis import affine_mem_facts
 from .vir import (AddrSpace, BINOPS, Block, Const, Function, GlobalVar,
                   Instr, Module, Op, Param, Reg, Slot, Ty, UNOPS, Value)
 
@@ -43,7 +45,9 @@ class UniformityViolation(ExecError):
     """A branch the compiler claimed uniform diverged at run time."""
 
 
-CACHE_LINE_ELEMS = 16   # 64-byte lines of 4-byte elements
+#: re-exported from the shared coalescing engine (interp_mem) — the one
+#: definition every executor and the cycle model agree on
+CACHE_LINE_ELEMS = _mem.CACHE_LINE_ELEMS
 
 
 @dataclass
@@ -191,6 +195,28 @@ def _np_unop(op: Op, a: np.ndarray) -> np.ndarray:
 _TY_DTYPE = {Ty.I32: np.int32, Ty.F32: np.float32, Ty.BOOL: np.bool_}
 
 
+def _atomic_rmw(kind: str, buf: np.ndarray, ix: np.ndarray,
+                lanes: np.ndarray, v: np.ndarray,
+                old: np.ndarray) -> None:
+    """The contended-RMW serialization ladder, shared by every executor
+    (like the _BIN_FNS/_UN_FNS tables): lane-ordered, deterministic."""
+    for ln in lanes:
+        a = int(ix[ln])
+        old[ln] = buf[a]
+        if kind == "add":
+            buf[a] += v[ln]
+        elif kind == "max":
+            buf[a] = max(buf[a], v[ln])
+        elif kind == "min":
+            buf[a] = min(buf[a], v[ln])
+        elif kind == "xchg":
+            buf[a] = v[ln]
+        elif kind == "cas":
+            pass  # cas(ptr, cmp, val) simplified: no-op compare
+        else:
+            raise ExecError(f"unknown atomic {kind}")
+
+
 def _const_vec(c: Const, w: int) -> np.ndarray:
     return np.full((w,), c.value, dtype=_TY_DTYPE.get(c.ty, np.float32))
 
@@ -207,6 +233,11 @@ class DeviceMemory:
         self.buffers = buffers
         self.globals_mem = globals_mem or {}
         self.shared: Dict[int, np.ndarray] = {}   # id(GlobalVar) -> array
+        # grid-level batching of private-shared-memory kernels: when set
+        # (per chunk, by launch), shared vars allocate a (n_wgs, size)
+        # TILE TABLE — one private row slice per batched workgroup —
+        # instead of one workgroup's array
+        self.grid_wgs: Optional[int] = None
 
     def resolve(self, ptr: Value, argmap: Dict[int, Any]) -> Tuple[np.ndarray, bool]:
         """-> (array, is_shared)"""
@@ -221,7 +252,12 @@ class DeviceMemory:
             if ptr.space is AddrSpace.SHARED:
                 arr = self.shared.get(id(ptr))
                 if arr is None:
-                    arr = np.zeros(ptr.size, dtype=_TY_DTYPE[ptr.elem_ty])
+                    if self.grid_wgs is not None:
+                        arr = np.zeros((self.grid_wgs, ptr.size),
+                                       dtype=_TY_DTYPE[ptr.elem_ty])
+                    else:
+                        arr = np.zeros(ptr.size,
+                                       dtype=_TY_DTYPE[ptr.elem_ty])
                     self.shared[id(ptr)] = arr
                 return arr, True
             arr = self.globals_mem.get(ptr.name)
@@ -238,10 +274,18 @@ class DeviceMemory:
 
 class _WarpCtx:
     def __init__(self, W: int, intr: Dict[Tuple[str, int], np.ndarray],
-                 strict_loads: bool = False) -> None:
+                 strict_loads: bool = False, affine_ok: bool = False,
+                 affine_span: int = 0) -> None:
         self.W = W
         self.intr = intr
         self.strict_loads = strict_loads
+        # launch-layout licence for the coalescing engine's analytic
+        # fast path (interp_mem.AffineFact.ok): global_id(0)/local_id(0)
+        # are lane-affine only when no warp wraps a local_size boundary
+        # mid-row, and the monotone claim needs the chain's int32
+        # arithmetic to be wrap-free over the launch's index span
+        self.affine_ok = affine_ok
+        self.affine_span = affine_span
 
 
 def _exec_warp(fn: Function, argmap: Dict[int, Any], mask0: np.ndarray,
@@ -412,11 +456,11 @@ def _exec_warp(fn: Function, argmap: Dict[int, Any], mask0: np.ndarray,
                     raise ExecError(
                         f"OOB load in @{fn.name}: idx={a_ix} size={len(buf)}")
                 a_ix = np.clip(a_ix, 0, len(buf) - 1)
-                lines = np.unique(a_ix // CACHE_LINE_ELEMS)
+                uniq = _mem.count_gathered(a_ix)
                 if _shared:
-                    stats.shared_requests += len(lines)
+                    stats.shared_requests += uniq
                 else:
-                    stats.mem_requests += len(lines)
+                    stats.mem_requests += uniq
                 stats.mem_insts += 1
             safe = np.clip(ix, 0, len(buf) - 1)
             env[id(i.result)] = buf[safe]
@@ -431,11 +475,11 @@ def _exec_warp(fn: Function, argmap: Dict[int, Any], mask0: np.ndarray,
                 if (a_ix < 0).any() or (a_ix >= len(buf)).any():
                     raise ExecError(
                         f"OOB store in @{fn.name}: idx={a_ix} size={len(buf)}")
-                lines = np.unique(a_ix // CACHE_LINE_ELEMS)
+                uniq = _mem.count_gathered(a_ix)
                 if _shared:
-                    stats.shared_requests += len(lines)
+                    stats.shared_requests += uniq
                 else:
-                    stats.mem_requests += len(lines)
+                    stats.mem_requests += uniq
                 stats.mem_insts += 1
                 buf[a_ix] = v[mask].astype(buf.dtype)
             idx += 1
@@ -451,25 +495,11 @@ def _exec_warp(fn: Function, argmap: Dict[int, Any], mask0: np.ndarray,
                 a_ix = ix[lanes]
                 if (a_ix < 0).any() or (a_ix >= len(buf)).any():
                     raise ExecError(f"OOB atomic in @{fn.name}")
-                stats.mem_requests += len(np.unique(a_ix // CACHE_LINE_ELEMS))
+                stats.mem_requests += _mem.count_gathered(a_ix)
                 stats.mem_insts += 1
                 # contended RMW serializes per address (hardware behavior)
                 stats.atomic_serial += len(lanes)
-                for ln in lanes:     # lane-ordered, deterministic
-                    a = int(ix[ln])
-                    old[ln] = buf[a]
-                    if kind == "add":
-                        buf[a] += v[ln]
-                    elif kind == "max":
-                        buf[a] = max(buf[a], v[ln])
-                    elif kind == "min":
-                        buf[a] = min(buf[a], v[ln])
-                    elif kind == "xchg":
-                        buf[a] = v[ln]
-                    elif kind == "cas":
-                        pass  # cas(ptr, cmp, val) simplified: no-op compare
-                    else:
-                        raise ExecError(f"unknown atomic {kind}")
+                _atomic_rmw(kind, buf, ix, lanes, v, old)
             env[id(i.result)] = old
             idx += 1
             continue
@@ -676,7 +706,8 @@ class _DState:
     with a (n_warps, W) mask — one batched workgroup activation)."""
     __slots__ = ("env", "slots", "args", "argmap", "mem_arrs", "mask",
                  "active", "act_rows", "stack", "pending", "ret", "intr",
-                 "ctx", "mem", "stats", "fuel", "warp_ctxs")
+                 "ctx", "mem", "stats", "fuel", "warp_ctxs",
+                 "shared_row")
 
     def __init__(self, prog: "_DProgram", argmap: Dict[int, Any],
                  mask: np.ndarray, ctx: _WarpCtx, mem: DeviceMemory,
@@ -703,6 +734,9 @@ class _DState:
         self.stats = stats
         self.fuel = fuel
         self.warp_ctxs: Optional[List[_WarpCtx]] = None
+        # grid-mode per-warp slices: which (n_wgs, size) tile row this
+        # state's workgroup owns (set by _slice_state)
+        self.shared_row: Optional[int] = None
 
 
 class _DBlock:
@@ -738,6 +772,10 @@ class _DProgram:
         self.fn = fn
         self.W = W
         self.strict = strict
+        # decode-time affine index facts: licence for the coalescing
+        # engine's analytic fast path (closed-form / sort-free counts);
+        # served by the (optionally disk-persistent) decode plan
+        self.mem_facts = _decode_plan(fn)["facts_obj"]
         self.params = list(fn.params)
         # dense indices -------------------------------------------------
         self.reg_idx: Dict[int, int] = {}
@@ -929,26 +967,27 @@ class _DProgram:
             ri = self.reg_idx[id(i.result)]
             strict = self.strict
             fname = self.fn.name
+            fact = self.mem_facts.index_fact.get(id(i))
 
-            def h(st, mi=mi, gi_=gi_, ri=ri, strict=strict, fname=fname):
+            def h(st, mi=mi, gi_=gi_, ri=ri, strict=strict, fname=fname,
+                  fact=fact):
                 buf, shared = st.mem_arrs[mi]
                 ix = gi_(st).astype(np.int64)
+                safe = np.clip(ix, 0, len(buf) - 1)
                 if st.active:
-                    a_ix = ix[st.mask]
-                    if strict and ((a_ix < 0).any()
-                                   or (a_ix >= len(buf)).any()):
-                        raise ExecError(
-                            f"OOB load in @{fname}: idx={a_ix} "
-                            f"size={len(buf)}")
-                    a_ix = np.clip(a_ix, 0, len(buf) - 1)
-                    lines = np.unique(a_ix // CACHE_LINE_ELEMS)
+                    if strict:
+                        a_ix = ix[st.mask]
+                        if (a_ix < 0).any() or (a_ix >= len(buf)).any():
+                            raise ExecError(
+                                f"OOB load in @{fname}: idx={a_ix} "
+                                f"size={len(buf)}")
+                    uniq = _mem.count_warp(safe, st.mask, fact, st.ctx)
                     stt = st.stats
                     if shared:
-                        stt.shared_requests += len(lines)
+                        stt.shared_requests += uniq
                     else:
-                        stt.mem_requests += len(lines)
+                        stt.mem_requests += uniq
                     stt.mem_insts += 1
-                safe = np.clip(ix, 0, len(buf) - 1)
                 st.env[ri] = buf[safe]
             return h
         if op is Op.STORE:
@@ -956,8 +995,9 @@ class _DProgram:
             gi_ = g(i.operands[1])
             gv = g(i.operands[2])
             fname = self.fn.name
+            fact = self.mem_facts.index_fact.get(id(i))
 
-            def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname):
+            def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname, fact=fact):
                 buf, shared = st.mem_arrs[mi]
                 ix = gi_(st).astype(np.int64)
                 v = gv(st)
@@ -967,12 +1007,12 @@ class _DProgram:
                         raise ExecError(
                             f"OOB store in @{fname}: idx={a_ix} "
                             f"size={len(buf)}")
-                    lines = np.unique(a_ix // CACHE_LINE_ELEMS)
+                    uniq = _mem.count_gathered(a_ix, fact, st.ctx)
                     stt = st.stats
                     if shared:
-                        stt.shared_requests += len(lines)
+                        stt.shared_requests += uniq
                     else:
-                        stt.mem_requests += len(lines)
+                        stt.mem_requests += uniq
                     stt.mem_insts += 1
                     buf[a_ix] = v[st.mask].astype(buf.dtype)
             return h
@@ -983,9 +1023,10 @@ class _DProgram:
             gv = g(i.operands[3])
             ri = self.reg_idx[id(i.result)]
             fname = self.fn.name
+            fact = self.mem_facts.index_fact.get(id(i))
 
             def h(st, kind=kind, mi=mi, gi_=gi_, gv=gv, ri=ri, fname=fname,
-                  W=W):
+                  W=W, fact=fact):
                 buf, _shared = st.mem_arrs[mi]
                 ix = gi_(st).astype(np.int64)
                 v = gv(st)
@@ -996,25 +1037,11 @@ class _DProgram:
                     if (a_ix < 0).any() or (a_ix >= len(buf)).any():
                         raise ExecError(f"OOB atomic in @{fname}")
                     stt = st.stats
-                    stt.mem_requests += len(
-                        np.unique(a_ix // CACHE_LINE_ELEMS))
+                    stt.mem_requests += _mem.count_gathered(a_ix, fact,
+                                                            st.ctx)
                     stt.mem_insts += 1
                     stt.atomic_serial += len(lanes)
-                    for ln in lanes:     # lane-ordered, deterministic
-                        a = int(ix[ln])
-                        old[ln] = buf[a]
-                        if kind == "add":
-                            buf[a] += v[ln]
-                        elif kind == "max":
-                            buf[a] = max(buf[a], v[ln])
-                        elif kind == "min":
-                            buf[a] = min(buf[a], v[ln])
-                        elif kind == "xchg":
-                            buf[a] = v[ln]
-                        elif kind == "cas":
-                            pass
-                        else:
-                            raise ExecError(f"unknown atomic {kind}")
+                    _atomic_rmw(kind, buf, ix, lanes, v, old)
                 st.env[ri] = old
             return h
         if op is Op.INTR:
@@ -1457,94 +1484,49 @@ def _contains_store(fn: Function, _seen: Optional[set] = None) -> bool:
     return False
 
 
-#: intrinsics whose value is identical for every thread of the LAUNCH
-#: (group_id/local_id/warp_id/lane_id vary and are excluded on purpose)
-_LAUNCH_UNIFORM_INTRS = {"local_size", "num_groups", "global_size",
-                         "num_threads", "num_warps", "grid_dim"}
+def _shared_ptr(v: Value) -> bool:
+    """Is this pointer operand statically a __shared__ tile?"""
+    return isinstance(v, GlobalVar) and v.space is AddrSpace.SHARED
 
 
-def _stores_thread_private(fn: Function) -> bool:
-    """True if every top-level STORE's index provably never clashes
-    ACROSS workgroups: an affine chain ``global_id(0)|group_id(0)
-    (+|-) launch-uniform`` / ``* nonzero-const`` (through single-store
-    entry-block slots).  global_id(0) is injective per thread and
-    group_id(0) per workgroup — either keeps store cells pairwise
-    disjoint across workgroups (a workgroup's own rows never decouple
-    from each other, so intra-wg clashes keep their row-major = warp
-    order), making cross-wg store ORDER unobservable — the licence for
-    row compaction and for re-merging a batch some of whose workgroups
-    already ran ahead.  Both claims hold only for 1-D launches
-    (grid_y == local_size_y == 1: a 2-D grid repeats global_id(0)
-    across gy), which launch() checks separately.  Conservative:
-    anything unrecognized (uniform indices, modulo wraps, select/cmov
-    mixes) returns False and the run-ahead paths stay off — lockstep
-    and full wg-order drains handle clashing stores exactly without
-    them."""
-    defs: Dict[int, Instr] = {}
-    slot_stores: Dict[int, List[Instr]] = {}
-    entry_instrs = set(id(i) for i in fn.entry.instrs)
+def _store_privacy(fn: Function) -> Optional[str]:
+    """Weakest store-privacy level over the top-level STOREs of ``fn``
+    (per the affine index facts of ``passes.analysis``):
+
+      * "2d"  — every store index is an affine chain
+        ``s*(global_id(0) + global_id(1)*global_size(0))`` or
+        ``s*(group_id(0) + group_id(1)*num_groups(0))`` plus uniforms:
+        injective per thread / per workgroup across the WHOLE launch,
+         1-D or 2-D;
+      * "1d"  — at least one store relies on a bare
+        ``s*global_id(0)`` / ``s*group_id(0)`` chain, which is injective
+        only when the launch is 1-D (a second grid dimension repeats
+        global_id(0) across gy);
+      * None — some store is unrecognized (uniform indices, modulo
+        wraps, select/cmov mixes) and cross-workgroup store order may
+        be observable.
+
+    Either level keeps store cells pairwise disjoint across workgroups
+    (a workgroup's own rows never decouple from each other, so intra-wg
+    clashes keep their row-major = warp order), making cross-wg store
+    ORDER unobservable — the licence for row compaction and for
+    re-merging a batch some of whose workgroups already ran ahead.
+    __shared__-tile stores are exempt: in grid mode every workgroup owns
+    a private tile slice, so their cross-workgroup order is never
+    observable regardless of the index shape."""
+    facts = affine_mem_facts(fn)
+    level = "2d"
     for i in fn.instructions():
-        if i.result is not None:
-            defs[id(i.result)] = i
-        if i.op is Op.SLOT_STORE:
-            slot_stores.setdefault(id(i.operands[0]), []).append(i)
-
-    def classify(v: Value, depth: int) -> Optional[str]:
-        # -> "gid" (injective per thread), "uni" (launch-uniform), None
-        if depth > 12:
+        if i.op is not Op.STORE:
+            continue
+        if _shared_ptr(i.operands[0]):
+            continue
+        p = facts.store_privacy.get(id(i))
+        if p is None:
             return None
-        if isinstance(v, Const):
-            return "uni"
-        if isinstance(v, Param):
-            return None if v.ty is Ty.PTR else "uni"  # launch scalar
-        if not isinstance(v, Reg):
-            return None
-        i = defs.get(id(v))
-        if i is None:
-            return None
-        op = i.op
-        if op is Op.INTR:
-            if (i.operands[0] in ("global_id", "group_id")
-                    and i.operands[1] == 0):
-                return "gid"
-            if i.operands[0] in _LAUNCH_UNIFORM_INTRS:
-                return "uni"
-            return None
-        if op is Op.SLOT_LOAD:
-            ss = slot_stores.get(id(i.operands[0]), [])
-            # exactly one store, in the entry block: it dominates every
-            # load, so the load can never observe the slot's zero init
-            if len(ss) != 1 or id(ss[0]) not in entry_instrs:
-                return None
-            return classify(ss[0].operands[1], depth + 1)
-        if op in (Op.ADD, Op.SUB):
-            a = classify(i.operands[0], depth + 1)
-            b = classify(i.operands[1], depth + 1)
-            if a == "uni" and b == "uni":
-                return "uni"
-            if (a == "gid" and b == "uni") or (op is Op.ADD
-                                               and a == "uni"
-                                               and b == "gid"):
-                return "gid"
-            return None
-        if op is Op.MUL:
-            a = classify(i.operands[0], depth + 1)
-            b = classify(i.operands[1], depth + 1)
-            if a == "uni" and b == "uni":
-                return "uni"
-            if (a == "gid" and isinstance(i.operands[1], Const)
-                    and i.operands[1].value):
-                return "gid"
-            if (b == "gid" and isinstance(i.operands[0], Const)
-                    and i.operands[0].value):
-                return "gid"
-            return None
-        return None
-
-    for i in fn.instructions():
-        if i.op is Op.STORE and classify(i.operands[1], 0) != "gid":
-            return False
-    return True
+        if p == "1d":
+            level = "1d"
+    return level
 
 
 def _ordering_sensitive(fn: Function, _seen: Optional[set] = None) -> bool:
@@ -1569,6 +1551,112 @@ def _ordering_sensitive(fn: Function, _seen: Optional[set] = None) -> bool:
                                                               _seen):
                 return True
     return False
+
+
+# --------------------------------------------------------------------------
+# Decode plans — the decoder's per-function STATIC analysis (affine index
+# facts, store privacy, cyclic blocks, ordering sensitivity, callee
+# purity) bundled into one serializable record.  Computed once per
+# (function, ir_version) and memoized on the function; when core.runtime
+# installs DECODE_PLAN_HOOKS, plans also persist on disk next to the
+# compile cache, keyed by a content hash of the function (plus transitive
+# callees), so a second process decoding an identical kernel skips the
+# whole static scan.  The decoded HANDLER TABLES are closures and never
+# persist — only the analysis does.  Stale entries are impossible (any
+# IR change changes the content hash); corrupt entries fall back to a
+# fresh computation.
+# --------------------------------------------------------------------------
+
+#: (loader(fn) -> plan | None, saver(fn, plan)) installed by core.runtime
+DECODE_PLAN_HOOKS: Optional[Tuple[Any, Any]] = None
+
+_DECODE_PLAN_SCHEMA = 1
+
+
+def _compute_decode_plan(fn: Function) -> Tuple[Dict[str, Any], Any]:
+    """-> (serializable plan, materialized _MemFacts)."""
+    facts = affine_mem_facts(fn)
+    fact_rows: List[Tuple] = []
+    cyclic = _cyclic_blocks(fn)
+    cyclic_bis: List[int] = []
+    for bi, b in enumerate(fn.blocks):
+        if id(b) in cyclic:
+            cyclic_bis.append(bi)
+        for ii, i in enumerate(b.instrs):
+            if i.op not in (Op.LOAD, Op.STORE, Op.ATOMIC):
+                continue
+            f = facts.index_fact.get(id(i))
+            priv = facts.store_privacy.get(id(i)) \
+                if i.op is Op.STORE else None
+            if f is not None or i.op is Op.STORE:
+                fact_rows.append(
+                    (bi, ii,
+                     None if f is None else (f.kind, f.layout,
+                                             f.span_mul, f.span_add),
+                     priv))
+    plan = {
+        "schema": _DECODE_PLAN_SCHEMA,
+        "facts": fact_rows,
+        "privacy": _store_privacy(fn),
+        "cyclic": cyclic_bis,
+        "ordering_sensitive": _ordering_sensitive(fn),
+        "callee_stores": any(
+            i.op is Op.CALL and _contains_store(i.operands[0])
+            for i in fn.instructions()),
+        "lockstep_pure": _lockstep_pure(fn),
+        "contains_store": _contains_store(fn),
+    }
+    return plan, facts
+
+
+def _materialize_facts(fn: Function, plan: Dict[str, Any]):
+    """Rebuild the id-keyed _MemFacts of a deserialized plan against
+    THIS process's instruction objects (positional mapping)."""
+    from .passes.analysis import _MemFacts
+    facts = _MemFacts()
+    blocks = fn.blocks
+    for bi, ii, f, priv in plan["facts"]:
+        i = blocks[bi].instrs[ii]
+        if i.op not in (Op.LOAD, Op.STORE, Op.ATOMIC):
+            raise ValueError("decode plan out of sync with IR")
+        if f is not None:
+            facts.index_fact[id(i)] = _mem.AffineFact(*f)
+        if i.op is Op.STORE:
+            facts.store_privacy[id(i)] = priv
+    # seed the affine_mem_facts memo so every consumer agrees
+    fn._mem_facts = (fn.ir_version, facts)  # type: ignore[attr-defined]
+    return facts
+
+
+def _decode_plan(fn: Function) -> Dict[str, Any]:
+    """The function's decode plan (memoized by ir_version; disk-backed
+    when DECODE_PLAN_HOOKS is installed)."""
+    cached = getattr(fn, "_decode_plan", None)
+    if cached is not None and cached[0] == fn.ir_version:
+        return cached[1]
+    plan = None
+    facts = None
+    if DECODE_PLAN_HOOKS is not None:
+        try:
+            plan = DECODE_PLAN_HOOKS[0](fn)
+            if plan is not None:
+                if plan.get("schema") != _DECODE_PLAN_SCHEMA:
+                    raise ValueError("decode plan schema mismatch")
+                facts = _materialize_facts(fn, plan)
+        except Exception:
+            plan = None            # corrupt/stale payload: recompute
+            facts = None
+    if plan is None:
+        plan, facts = _compute_decode_plan(fn)
+        if DECODE_PLAN_HOOKS is not None:
+            try:
+                DECODE_PLAN_HOOKS[1](fn, plan)
+            except Exception:
+                pass
+    plan = dict(plan)
+    plan["facts_obj"] = facts
+    fn._decode_plan = (fn.ir_version, plan)  # type: ignore[attr-defined]
+    return plan
 
 
 class _BProgram(_DProgram):
@@ -1631,39 +1719,51 @@ class _BProgram(_DProgram):
         # is oracle-exact.  (The wg-batched mode keeps the PR 2
         # contract: cross-warp store clashes are excluded by the curated
         # bench lists instead.)
+        plan = _decode_plan(fn)
         self._hazard_stores: set = set()
         if grid_mode:
+            # __shared__-tile stores are exempt from every hazard rule:
+            # in grid mode each workgroup writes its own private tile
+            # slice, so cross-workgroup clashes are impossible, and
+            # intra-workgroup clashes keep exactly the wg-batched
+            # lockstep semantics (rows of one workgroup never decouple)
             sites: Counter = Counter()
             for i in fn.instructions():
-                if i.op is Op.STORE:
+                if i.op is Op.STORE and not _shared_ptr(i.operands[0]):
                     sites[id(i.operands[0])] += 1
-            cyclic = _cyclic_blocks(fn)
+            cyclic = {id(fn.blocks[bi]) for bi in plan["cyclic"]}
             # a store-containing callee is a store site this flat count
             # cannot attribute to a buffer (its pointer params bind at
             # the call, and module globals are shared objects), so its
             # presence makes EVERY caller store order-hazardous — the
             # call itself already desyncs (see the CALL node)
-            callee_stores = any(
-                i.op is Op.CALL and _contains_store(i.operands[0])
-                for i in fn.instructions())
+            callee_stores = plan["callee_stores"]
             self._hazard_stores = {
                 id(i) for b in fn.blocks for i in b.instrs
-                if i.op is Op.STORE and (callee_stores
-                                         or sites[id(i.operands[0])] > 1
-                                         or id(b) in cyclic)}
+                if i.op is Op.STORE and not _shared_ptr(i.operands[0])
+                and (callee_stores
+                     or sites[id(i.operands[0])] > 1
+                     or id(b) in cyclic)}
         # Ordering freedom (grid mode): order_free = no prints/atomics,
         # no callee stores, no hazard stores; private_stores adds that
         # every store writes cross-workgroup-disjoint cells.  Together
-        # (plus launch()'s 1-D shape check) NO effect's cross-workgroup
+        # (plus a matching launch shape) NO effect's cross-workgroup
         # order is observable, which licences the paths that let
         # workgroups RUN AHEAD of each other: parking at a barrier for
         # re-merge while later workgroups drain past, and row
-        # compaction.  Everything else takes the exact wg-order
+        # compaction.  ``private_stores`` is the 1-D-launch licence
+        # (bare global_id(0)/group_id(0) chains); ``private_stores_2d``
+        # additionally requires full 2-D linear-id chains, so 2-D
+        # launches may run ahead too.  launch() picks the bit matching
+        # the grid shape.  Everything else takes the exact wg-order
         # drain-to-completion path.
+        privacy = plan["privacy"] if grid_mode else None
         self.order_free = bool(grid_mode and not self._hazard_stores
-                               and not _ordering_sensitive(fn))
+                               and not plan["ordering_sensitive"])
         self.private_stores = bool(self.order_free
-                                   and _stores_thread_private(fn))
+                                   and privacy is not None)
+        self.private_stores_2d = bool(self.order_free
+                                      and privacy == "2d")
         super().__init__(fn, W, strict)
         self.bblocks: List[_DBlock] = [self._decode_block_batched(b)
                                        for b in fn.blocks]
@@ -1685,6 +1785,100 @@ class _BProgram(_DProgram):
         if run:
             parts.append(("run", run))
         return parts
+
+    # -- per-warp side: __shared__ accesses bind the row's private tile
+    # slice in grid mode (rows are whole workgroups; the launch-wide
+    # tile table is (n_wgs, size) and _slice_state pins shared_row) ----
+    def _plain(self, i: Instr):
+        if self.grid_mode:
+            if i.op in (Op.LOAD, Op.STORE) and _shared_ptr(i.operands[0]):
+                return self._plain_tile(i)
+            if i.op is Op.ATOMIC and _shared_ptr(i.operands[1]):
+                return self._plain_tile(i)
+        return super()._plain(i)
+
+    def _plain_tile(self, i: Instr):
+        """Per-warp (desync-fallback) handlers for grid-mode __shared__
+        accesses: identical to the _DProgram handlers except the buffer
+        is the state's own workgroup row of the (n_wgs, size) tile
+        table.  Bounds and coalescing counts use TILE-LOCAL indices, so
+        ExecStats and error behavior match the per-workgroup oracle
+        bit for bit."""
+        op = i.op
+        W = self.W
+        g = self._getter
+        fname = self.fn.name
+        fact = self.mem_facts.index_fact.get(id(i))
+        if op is Op.LOAD:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+            strict = self.strict
+
+            def h(st, mi=mi, gi_=gi_, ri=ri, strict=strict, fname=fname,
+                  fact=fact):
+                buf = st.mem_arrs[mi][0][st.shared_row]
+                ix = gi_(st).astype(np.int64)
+                safe = np.clip(ix, 0, len(buf) - 1)
+                if st.active:
+                    if strict:
+                        a_ix = ix[st.mask]
+                        if (a_ix < 0).any() or (a_ix >= len(buf)).any():
+                            raise ExecError(
+                                f"OOB load in @{fname}: idx={a_ix} "
+                                f"size={len(buf)}")
+                    st.stats.shared_requests += _mem.count_warp(
+                        safe, st.mask, fact, st.ctx)
+                    st.stats.mem_insts += 1
+                st.env[ri] = buf[safe]
+            return h
+        if op is Op.STORE:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            gv = g(i.operands[2])
+
+            def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname, fact=fact):
+                buf = st.mem_arrs[mi][0][st.shared_row]
+                ix = gi_(st).astype(np.int64)
+                v = gv(st)
+                if st.active:
+                    a_ix = ix[st.mask]
+                    if (a_ix < 0).any() or (a_ix >= len(buf)).any():
+                        raise ExecError(
+                            f"OOB store in @{fname}: idx={a_ix} "
+                            f"size={len(buf)}")
+                    st.stats.shared_requests += _mem.count_gathered(
+                        a_ix, fact, st.ctx)
+                    st.stats.mem_insts += 1
+                    buf[a_ix] = v[st.mask].astype(buf.dtype)
+            return h
+        if op is Op.ATOMIC:
+            kind = i.operands[0]
+            mi = self._memref(i.operands[1])
+            gi_ = g(i.operands[2])
+            gv = g(i.operands[3])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, kind=kind, mi=mi, gi_=gi_, gv=gv, ri=ri,
+                  fname=fname, W=W, fact=fact):
+                buf = st.mem_arrs[mi][0][st.shared_row]
+                ix = gi_(st).astype(np.int64)
+                v = gv(st)
+                old = np.zeros(W, dtype=buf.dtype)
+                if st.active:
+                    lanes = np.nonzero(st.mask)[0]
+                    a_ix = ix[lanes]
+                    if (a_ix < 0).any() or (a_ix >= len(buf)).any():
+                        raise ExecError(f"OOB atomic in @{fname}")
+                    stt = st.stats
+                    stt.mem_requests += _mem.count_gathered(a_ix, fact,
+                                                            st.ctx)
+                    stt.mem_insts += 1
+                    stt.atomic_serial += len(lanes)
+                    _atomic_rmw(kind, buf, ix, lanes, v, old)
+                st.env[ri] = old
+            return h
+        raise ExecError(f"no tile handler for {op}")
 
     # -- per-warp side: atomics/prints (and order-hazardous grid-mode
     # stores) become standalone nodes --------------------------------------
@@ -1769,24 +1963,25 @@ class _BProgram(_DProgram):
         W = self.W
         nw = self.n_warps
         g = self._getter
-        rowoff = np.arange(nw, dtype=np.int64)[:, None]
+        if self.grid_mode and op in (Op.LOAD, Op.STORE) \
+                and _shared_ptr(i.operands[0]):
+            return self._bplain_tile(i)
         if op is Op.LOAD:
             mi = self._memref(i.operands[0])
             gi_ = g(i.operands[1])
             ri = self.reg_idx[id(i.result)]
+            fact = self.mem_facts.index_fact.get(id(i))
 
-            def h(st, mi=mi, gi_=gi_, ri=ri, nw=nw, rowoff=rowoff):
+            def h(st, mi=mi, gi_=gi_, ri=ri, nw=nw, fact=fact):
                 buf, shared = st.mem_arrs[mi]
                 ix = gi_(st).astype(np.int64)
                 if ix.ndim == 1:
                     ix = np.broadcast_to(ix, (nw, len(ix)))
                 safe = np.clip(ix, 0, len(buf) - 1)
                 if st.active:
-                    # per-warp coalesced lines: offset each row into its
-                    # own line-id space, then one global unique
-                    nlines = len(buf) // CACHE_LINE_ELEMS + 1
-                    keys = safe // CACHE_LINE_ELEMS + rowoff * nlines
-                    uniq = len(np.unique(keys[st.mask]))
+                    # each row counts its own coalesced lines
+                    uniq = _mem.count_rows(safe, st.mask, st.active,
+                                           len(buf), fact, st.ctx)
                     stt = st.stats
                     if shared:
                         stt.shared_requests += uniq
@@ -1800,9 +1995,10 @@ class _BProgram(_DProgram):
             gi_ = g(i.operands[1])
             gv = g(i.operands[2])
             fname = self.fn.name
+            fact = self.mem_facts.index_fact.get(id(i))
 
             def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname, nw=nw,
-                  rowoff=rowoff):
+                  fact=fact):
                 buf, shared = st.mem_arrs[mi]
                 ix = gi_(st).astype(np.int64)
                 if ix.ndim == 1:
@@ -1817,9 +2013,11 @@ class _BProgram(_DProgram):
                         raise ExecError(
                             f"OOB store in @{fname}: idx={a_ix} "
                             f"size={len(buf)}")
-                    nlines = len(buf) // CACHE_LINE_ELEMS + 1
-                    keys = ix // CACHE_LINE_ELEMS + rowoff * nlines
-                    uniq = len(np.unique(keys[mask]))
+                    # active lanes are validated in-bounds, so the raw
+                    # indices already satisfy the engine's
+                    # clipped-count rule
+                    uniq = _mem.count_rows(ix, mask, st.active,
+                                           len(buf), fact, st.ctx)
                     stt = st.stats
                     if shared:
                         stt.shared_requests += uniq
@@ -1867,6 +2065,71 @@ class _BProgram(_DProgram):
                 st.env[ri] = v[np.arange(nw)[:, None], src]
             return h
         raise ExecError(f"no batched handler for {op}")
+
+    def _bplain_tile(self, i: Instr):
+        """Batched (lockstep) handlers for grid-mode __shared__
+        accesses.  The tile table is (n_wgs, size); row r of the batch
+        belongs to workgroup r // wg_rows, a decode-time constant map.
+        Bounds checks and per-row coalescing counts use TILE-LOCAL
+        indices (each warp coalesces within its own workgroup's tile,
+        exactly like the per-workgroup oracle), and the 2-D scatter is
+        row-major so intra-workgroup clashes keep the oracle's
+        last-warp-wins order."""
+        op = i.op
+        nw = self.n_warps
+        g = self._getter
+        fname = self.fn.name
+        fact = self.mem_facts.index_fact.get(id(i))
+        rowwg = (np.arange(nw, dtype=np.int64)
+                 // self.wg_rows)[:, None]
+        if op is Op.LOAD:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, mi=mi, gi_=gi_, ri=ri, nw=nw, rowwg=rowwg,
+                  fact=fact):
+                tile = st.mem_arrs[mi][0]
+                tn = tile.shape[1]
+                ix = gi_(st).astype(np.int64)
+                if ix.ndim == 1:
+                    ix = np.broadcast_to(ix, (nw, len(ix)))
+                safe = np.clip(ix, 0, tn - 1)
+                if st.active:
+                    st.stats.shared_requests += _mem.count_rows(
+                        safe, st.mask, st.active, tn, fact, st.ctx)
+                    st.stats.mem_insts += st.active
+                st.env[ri] = tile[rowwg, safe]
+            return h
+        if op is Op.STORE:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            gv = g(i.operands[2])
+
+            def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname, nw=nw,
+                  rowwg=rowwg, fact=fact):
+                tile = st.mem_arrs[mi][0]
+                tn = tile.shape[1]
+                ix = gi_(st).astype(np.int64)
+                if ix.ndim == 1:
+                    ix = np.broadcast_to(ix, (nw, len(ix)))
+                v = gv(st)
+                if v.ndim == 1:
+                    v = np.broadcast_to(v, ix.shape)
+                mask = st.mask
+                if st.active:
+                    a_ix = ix[mask]
+                    if (a_ix < 0).any() or (a_ix >= tn).any():
+                        raise ExecError(
+                            f"OOB store in @{fname}: idx={a_ix} "
+                            f"size={tn}")
+                    st.stats.shared_requests += _mem.count_rows(
+                        ix, mask, st.active, tn, fact, st.ctx)
+                    st.stats.mem_insts += st.active
+                    rows = np.broadcast_to(rowwg, ix.shape)[mask]
+                    tile[rows, a_ix] = v[mask].astype(tile.dtype)
+            return h
+        raise ExecError(f"no batched tile handler for {op}")
 
     # -- batched control nodes ---------------------------------------------
     def _bcontrol(self, i: Instr, b: Block):
@@ -2065,8 +2328,9 @@ class _BProgram(_DProgram):
             return bbarrier_node
         if op is Op.CALL:
             callee: Function = i.operands[0]
-            if not _lockstep_pure(callee) or (
-                    self.grid_mode and _contains_store(callee)):
+            cplan = _decode_plan(callee)
+            if not cplan["lockstep_pure"] or (
+                    self.grid_mode and cplan["contains_store"]):
                 # grid mode: a callee store could be one of several
                 # sites writing a buffer (undetectable from the caller's
                 # flat site count) — drain rows in workgroup order
@@ -2166,9 +2430,12 @@ def _bset_mask(st: _DState, m: np.ndarray,
     st.active = int(ar.sum())
 
 
-def _slice_state(bst: _DState, w: int, ctx: _WarpCtx) -> _DState:
-    """Row ``w`` of a batched state as an ordinary per-warp _DState."""
+def _slice_state(bst: _DState, w: int, ctx: _WarpCtx,
+                 wg_rows: int = 0) -> _DState:
+    """Row ``w`` of a batched state as an ordinary per-warp _DState.
+    ``wg_rows`` (grid mode) pins the row's workgroup tile slice."""
     st = _DState.__new__(_DState)
+    st.shared_row = (w // wg_rows) if wg_rows else None
     st.env = [v if (v is None or v.ndim == 1) else v[w] for v in bst.env]
     st.slots = [v if (v is None or v.ndim == 1) else v[w]
                 for v in bst.slots]
@@ -2441,10 +2708,15 @@ _GRID_BATCH_MAX = 64
 def _grid_batchable(fn: Function, argmap: Dict[int, Any],
                     globals_mem: Optional[Dict[str, np.ndarray]] = None
                     ) -> bool:
-    """True if a single-warp grid of ``fn`` may run row-batched: no
-    shared memory and no buffer both loaded and stored/RMW'd (resolved
-    through calls against the actual launch bindings, including
-    overlapping-view detection).  Multi-site stores through ONE root
+    """True if a grid of ``fn`` may run row-batched: no buffer both
+    loaded and stored/RMW'd (resolved through calls against the actual
+    launch bindings, including overlapping-view detection).  __shared__
+    tiles used directly by the kernel body are allowed — grid mode
+    gives every batched workgroup its own PRIVATE (n_wgs, size) tile
+    row, so tile traffic can never alias across rows and is exempt from
+    the read-write-hazard rule; shared vars reached through callees or
+    passed as call arguments stay refused (the tile-slice plumbing only
+    covers top-level accesses).  Multi-site stores through ONE root
     pointer do not refuse — they desync at decode time instead
     (``_BProgram._hazard_stores``); stores reaching one buffer through
     DISTINCT root pointers (aliased params, a param aliasing a global,
@@ -2456,11 +2728,16 @@ def _grid_batchable(fn: Function, argmap: Dict[int, Any],
     write_roots: Dict[Any, set] = {}    # buffer key -> distinct ptr ids
     ok = [True]
 
-    def resolve(ptr: Any, binding: Dict[int, Any]) -> Any:
+    def resolve(ptr: Any, binding: Dict[int, Any], depth: int) -> Any:
         if isinstance(ptr, GlobalVar):
             if ptr.space is AddrSpace.SHARED:
-                ok[0] = False
-                return None
+                if depth > 0:
+                    # a tile touched inside a device function: the
+                    # per-row slice plumbing only specializes top-level
+                    # accesses — refuse, fall back to per-wg dispatch
+                    ok[0] = False
+                    return None
+                return ("s", id(ptr))   # private per-row tile
             key = ("g", ptr.name)
             if globals_mem is not None and ptr.name in globals_mem:
                 arrays[key] = globals_mem[ptr.name]
@@ -2469,6 +2746,9 @@ def _grid_batchable(fn: Function, argmap: Dict[int, Any],
             return binding.get(id(ptr))
         return None
 
+    def _tile(key: Any) -> bool:
+        return isinstance(key, tuple) and key[0] == "s"
+
     def scan(f: Function, binding: Dict[int, Any], depth: int) -> None:
         if depth > 8:              # runaway recursion: give up, stay safe
             ok[0] = False
@@ -2476,21 +2756,29 @@ def _grid_batchable(fn: Function, argmap: Dict[int, Any],
         for i in f.instructions():
             op = i.op
             if op is Op.LOAD:
-                loads.add(resolve(i.operands[0], binding))
+                r = resolve(i.operands[0], binding, depth)
+                if not _tile(r):
+                    loads.add(r)
             elif op is Op.STORE:
-                r = resolve(i.operands[0], binding)
-                writes.add(r)
-                write_roots.setdefault(r, set()).add(id(i.operands[0]))
+                r = resolve(i.operands[0], binding, depth)
+                if not _tile(r):
+                    writes.add(r)
+                    write_roots.setdefault(r, set()).add(
+                        id(i.operands[0]))
             elif op is Op.ATOMIC:
-                r = resolve(i.operands[1], binding)
-                loads.add(r)
-                writes.add(r)
+                r = resolve(i.operands[1], binding, depth)
+                if not _tile(r):
+                    loads.add(r)
+                    writes.add(r)
             elif op is Op.CALL:
                 callee: Function = i.operands[0]
                 sub: Dict[int, Any] = {}
                 for p, a in zip(callee.params, i.operands[1:]):
+                    if _shared_ptr(a):
+                        ok[0] = False   # tile escaping into a callee
+                        return
                     if p.ty is Ty.PTR and isinstance(a, (Param, GlobalVar)):
-                        sub[id(p)] = resolve(a, binding)
+                        sub[id(p)] = resolve(a, binding, depth)
                 scan(callee, sub, depth + 1)
             if not ok[0]:
                 return
@@ -2542,7 +2830,8 @@ def _stack_intrs(ctxs: Sequence[_WarpCtx], W: int,
             intr2[key] = vals[0]
         else:
             intr2[key] = np.stack(vals)
-    return _WarpCtx(W, intr2, strict)
+    return _WarpCtx(W, intr2, strict, ctxs[0].affine_ok,
+                    ctxs[0].affine_span)
 
 
 #: live-workgroup fraction at or below which a private-store grid batch
@@ -2669,6 +2958,7 @@ def _merge_rows(bprog: "_BProgram", wstates: List[_DState],
         for lvl in range(depth)]
     bst.pending = None
     bst.ret = None
+    bst.shared_row = None
     bst.intr = proto.intr
     bst.ctx = proto.ctx
     bst.mem = proto.mem
@@ -2683,8 +2973,9 @@ def _drain_grid(bprog: "_BProgram", bst: _DState, bi: int, ni: int,
                 ) -> Optional[Tuple[_DState, int, int]]:
     """Grid-mode desync: slice the batch and drive each workgroup's rows
     per-warp in workgroup order (the oracle's schedule).  When run-ahead
-    is licenced (private stores, 1-D launch — parking workgroup g while
-    g+1 drains past it reorders nothing observable), workgroups park at
+    is licenced (``runahead``: store privacy matching the launch shape,
+    computed once in launch() — parking workgroup g while g+1 drains
+    past it then reorders nothing observable), workgroups park at
     their first congruent top-level barrier; if every workgroup that did
     not return parks at the SAME position with congruent stacks, the
     rows re-merge and the caller resumes lockstep there — returns
@@ -2694,11 +2985,11 @@ def _drain_grid(bprog: "_BProgram", bst: _DState, bi: int, ni: int,
     n_rows = bprog.n_warps
     n_wgs = n_rows // wg_rows
     GRID_TELEMETRY.desyncs += 1
-    wstates = [_slice_state(bst, r, bst.warp_ctxs[r])
+    wstates = [_slice_state(bst, r, bst.warp_ctxs[r], wg_rows)
                for r in range(n_rows)]
     gens = [_resume_decoded(bprog, wstates[r], bi, ni)
             for r in range(n_rows)]
-    park = bprog.private_stores and runahead
+    park = runahead            # the full licence, computed at launch
     parked: Dict[int, Tuple[int, int]] = {}
     for g in range(n_wgs):
         rows = range(g * wg_rows, (g + 1) * wg_rows)
@@ -2745,12 +3036,29 @@ def _gather_rows(subprog: "_BProgram", bst: _DState,
         out[:k] = v[idx]
         return out
 
+    wg_rows = subprog.wg_rows
+
+    def take_mem(entry):
+        arr, shared = entry
+        if shared and arr.ndim == 2:
+            # gather the sub-batch workgroups' PRIVATE tile rows (tile
+            # state travels with its workgroup; nothing outside the
+            # batch ever reads a tile, so the copy is unobservable)
+            n_sub_wgs = n_sub // wg_rows
+            gsel = [idx[j] // wg_rows for j in range(0, len(idx),
+                                                     wg_rows)]
+            out = np.zeros((n_sub_wgs,) + arr.shape[1:], arr.dtype)
+            out[:len(gsel)] = arr[gsel]
+            return (out, True)
+        return entry
+
     st = _DState.__new__(_DState)
+    st.shared_row = None
     st.env = [take(v) for v in bst.env]
     st.slots = [take(v) for v in bst.slots]
     st.args = bst.args
     st.argmap = bst.argmap
-    st.mem_arrs = bst.mem_arrs
+    st.mem_arrs = [take_mem(e) for e in bst.mem_arrs]
     mask = np.zeros((n_sub, W), dtype=bst.mask.dtype)
     mask[:k] = bst.mask[idx]
     st.mask = mask
@@ -2764,7 +3072,8 @@ def _gather_rows(subprog: "_BProgram", bst: _DState,
     intr2: Dict[Tuple[str, int], np.ndarray] = {}
     for key, v in bst.intr.items():
         intr2[key] = take(v)
-    st.ctx = _WarpCtx(W, intr2, strict)
+    st.ctx = _WarpCtx(W, intr2, strict, bst.ctx.affine_ok,
+                      bst.ctx.affine_span)
     st.intr = intr2
     st.mem = bst.mem
     st.stats = bst.stats
@@ -2828,14 +3137,14 @@ def _run_grid_batched(bprog: "_BProgram", bst: _DState,
     """Drive one (n_wg x wg_rows, W) batch of independent workgroups:
     lockstep until a desync event, then drain workgroup by workgroup in
     workgroup order — re-merging at a congruent top-level barrier when
-    the program's stores are private and the launch is 1-D
-    (``runahead``).  At loop back-edges, mostly-empty such batches
-    compact their live rows into a dense sub-batch."""
+    the program's stores are private at the launch's shape
+    (``runahead`` = private_stores for 1-D launches, private_stores_2d
+    for 2-D, picked in launch()).  At loop back-edges, mostly-empty
+    such batches compact their live rows into a dense sub-batch."""
     GRID_TELEMETRY.batches += 1
     n_rows = bprog.n_warps
     n_wgs = n_rows // bprog.wg_rows
-    compact_ok = (bprog.private_stores and runahead
-                  and n_wgs >= _COMPACT_MIN_WGS
+    compact_ok = (runahead and n_wgs >= _COMPACT_MIN_WGS
                   and _COMPACT_FRACTION > 0.0)
     while True:
         nodes = bprog.bblocks[bi].nodes
@@ -2965,6 +3274,12 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     }
     warp_ids = [np.full(W, wrp, np.int32)
                 for wrp in range(params.warps_per_wg)]
+    # coalescing-engine analytic licence (see _WarpCtx): a warp never
+    # wraps a local_size boundary mid-row, and the wrap-free span bound
+    # covers every SIMT id of this launch
+    affine_ok = params.local_size % W == 0
+    affine_span = (params.grid * params.local_size * params.grid_y
+                   * params.local_size_y + params.local_size + W)
 
     if use_grid:
         # grid-level batching: pack whole workgroups into
@@ -2987,11 +3302,13 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
             wbase[("warp_id", 0)] = warp_ids[wrp]
             warp_tmpl.append((wactive, lx, ly, wbase))
         wg_chunk = max(1, _GRID_BATCH_MAX // n_warps)
-        # run-ahead (re-merge past returned workgroups, row compaction)
-        # additionally needs a 1-D launch: _stores_thread_private's
-        # injectivity claims for global_id(0)/group_id(0) break when a
-        # second grid dimension repeats them across gy
-        runahead = params.grid_y == 1 and params.local_size_y == 1
+        # run-ahead licence (re-merge past returned workgroups, row
+        # compaction) depends on the launch shape: bare
+        # global_id(0)/group_id(0) store chains are injective only in
+        # 1-D launches (``private_stores``), while full 2-D linear-id
+        # chains keep the licence on 2-D grids too
+        # (``private_stores_2d``)
+        shape_1d = params.grid_y == 1 and params.local_size_y == 1
         with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
             for c0 in range(0, n_wg, wg_chunk):
                 nc = min(wg_chunk, n_wg - c0)
@@ -2999,6 +3316,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
                                         nc * n_warps, grid_mode=True,
                                         ride_along=ride_along,
                                         wg_rows=n_warps)
+                runahead = (gprog.private_stores if shape_1d
+                            else gprog.private_stores_2d)
                 row_ctxs: List[_WarpCtx] = []
                 row_masks: List[np.ndarray] = []
                 chunk_ids: List[Tuple[int, int]] = []
@@ -3018,11 +3337,15 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
                             gy * params.local_size_y + ly).astype(
                                 np.int32)
                         row_ctxs.append(_WarpCtx(
-                            W, intr, params.strict_oob_loads))
+                            W, intr, params.strict_oob_loads,
+                            affine_ok, affine_span))
                         row_masks.append(wactive)
                 gctx = _stack_intrs(row_ctxs, W, params.strict_oob_loads)
+                mem.shared = {}        # fresh private tile table per
+                mem.grid_wgs = nc      # chunk: (nc, size) shared arrays
                 gst = _DState(gprog, argmap, np.stack(row_masks), gctx,
                               mem, stats, fuel)
+                mem.grid_wgs = None
                 gst.warp_ctxs = row_ctxs
                 _run_grid_batched(gprog, gst, chunk_ids,
                                   runahead=runahead)
@@ -3053,7 +3376,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
             intr[("global_id", 1)] = (gy * params.local_size_y
                                       + ly).astype(np.int32)
             intr[("warp_id", 0)] = warp_ids[wrp]
-            warp_ctxs.append(_WarpCtx(W, intr, params.strict_oob_loads))
+            warp_ctxs.append(_WarpCtx(W, intr, params.strict_oob_loads,
+                                      affine_ok, affine_span))
             warp_masks.append(active)
 
         if bprog is not None:

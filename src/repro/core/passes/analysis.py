@@ -27,7 +27,8 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, Optional, Tuple
 
-from ..vir import Function
+from ..interp_mem import AffineFact
+from ..vir import Const, Function, Op, Param, Reg, Ty, Value
 from .. import graph
 
 
@@ -128,6 +129,269 @@ class AnalysisManager:
                 am=self))
 
 
+# --------------------------------------------------------------------------
+# Affine index facts — decode-time classification of memory-access index
+# vectors, shared by the interpreter's coalescing engine (core/interp_mem)
+# and the grid batcher's store-privacy licence (core/interp).
+#
+# Every index chain is resolved to a LINEAR FORM over the SIMT id basis
+#
+#     gx / gy   = global_id(0) / global_id(1)
+#     lx / ly   = local_id(0) / local_id(1)
+#     lane      = lane_id(0)         grpx / grpy = group_id(0) / (1)
+#     warp      = warp_id(0)
+#     gys       = global_id(1) * global_size(0)     (2-D linear ids)
+#     grpys     = group_id(1)  * num_groups(0)
+#
+# plus a uniform remainder, walking through the front-ends' single-store
+# entry-block stack slots (the same machinery the PR 4 store-privacy scan
+# used, widened from "exactly one gid factor" to full multi-term forms so
+# 2-D ``gid_x + gid_y * get_global_size(0)`` chains classify too).  From
+# one classification both consumers derive their facts:
+#
+#   * the per-row LANE STRIDE (the gx/lx/lane coefficients) gives the
+#     coalescing engine its analytic licence: stride 0 means the index
+#     is row-uniform, a known-sign stride means the per-row line keys
+#     are monotone along the lane axis (interp_mem.AffineFact);
+#   * the coefficient PATTERN gives the store-privacy level: a pure
+#     ``s*gx + uniform`` / ``s*grpx + uniform`` form writes
+#     cross-workgroup-disjoint cells in 1-D launches ("1d", the PR 4
+#     licence); the matched 2-D pairs ``s*(gx + gys)`` /
+#     ``s*(grpx + grpys)`` are injective per thread / per workgroup
+#     across the WHOLE launch, so 2-D grids also license re-merge and
+#     row compaction ("2d").
+#
+# Conservatism: anything unrecognized (data-dependent indices, modulo
+# wraps, select/cmov mixes, multiplications by runtime uniforms — the
+# multiplier could be zero) classifies to None and the consumers fall
+# back to their exact generic paths.
+# --------------------------------------------------------------------------
+
+#: intrinsics whose value is identical for every thread of the LAUNCH
+_LAUNCH_UNIFORM_INTRS = {"local_size", "num_groups", "global_size",
+                         "num_threads", "num_warps", "grid_dim"}
+
+_ID_SYMS = {
+    ("global_id", 0): ("gx", True),
+    ("global_id", 1): ("gy", True),
+    ("local_id", 0): ("lx", True),
+    ("local_id", 1): ("ly", True),
+    ("lane_id", 0): ("lane", False),
+    ("group_id", 0): ("grpx", False),
+    ("group_id", 1): ("grpy", False),
+    ("warp_id", 0): ("warp", False),
+}
+
+#: basis symbols that vary along the lane axis (affine with stride 1,
+#: under the launch-layout condition for gx/lx)
+_LANE_SYMS = ("gx", "lx", "lane")
+
+
+class _Lin:
+    """Linear form: sum of c[sym]*sym + a uniform remainder."""
+    __slots__ = ("c", "layout", "has_scalar", "const_abs", "const_val")
+
+    def __init__(self, c=None, layout=False, has_scalar=False,
+                 const_abs=0, const_val=None):
+        self.c = c or {}
+        self.layout = layout          # uses gx/gy/lx/ly (warp-layout dep)
+        self.has_scalar = has_scalar  # unbounded uniform addend present
+        self.const_abs = const_abs    # summed |const addends|
+        self.const_val = const_val    # exact value iff a pure constant
+
+
+def _lin_add(a: _Lin, b: _Lin, sign: int) -> _Lin:
+    c = dict(a.c)
+    for k, v in b.c.items():
+        c[k] = c.get(k, 0) + sign * v
+    # const_val is non-None only for PURE constants, so the sum is pure
+    # iff both sides were
+    cv = None
+    if a.const_val is not None and b.const_val is not None:
+        cv = a.const_val + sign * b.const_val
+    return _Lin(c, a.layout or b.layout, a.has_scalar or b.has_scalar,
+                a.const_abs + b.const_abs, cv)
+
+
+class _MemFacts:
+    """Per-function memory-access facts (memoized on the function,
+    keyed by ir_version — computed once per decode)."""
+    __slots__ = ("index_fact", "store_privacy")
+
+    def __init__(self) -> None:
+        #: id(mem instr) -> AffineFact (only provable accesses present)
+        self.index_fact: Dict[int, AffineFact] = {}
+        #: id(STORE instr) -> "2d" | "1d" | None
+        self.store_privacy: Dict[int, Optional[str]] = {}
+
+
+def _is_uniform_product(v: Value, defs, slot_stores, entry_ids,
+                        names: Tuple[str, str], depth: int = 0) -> bool:
+    """Structural match: ``v`` is exactly the intrinsic ``names[0]`` (dim
+    0), or ``names[1][0] * names[1][1]`` — through slot round-trips.
+    Used to recognize the 2-D row strides global_size(0) ==
+    num_groups(0)*local_size(0), and num_groups(0)."""
+    if depth > 12 or not isinstance(v, Reg):
+        return False
+    i = defs.get(id(v))
+    if i is None:
+        return False
+    if i.op is Op.INTR:
+        return i.operands[0] == names[0] and i.operands[1] == 0
+    if i.op is Op.SLOT_LOAD:
+        ss = slot_stores.get(id(i.operands[0]), [])
+        if len(ss) != 1 or id(ss[0]) not in entry_ids:
+            return False
+        return _is_uniform_product(ss[0].operands[1], defs, slot_stores,
+                                   entry_ids, names, depth + 1)
+    if i.op is Op.MUL and names[1] is not None:
+        n1, n2 = names[1]
+        for x, y in ((i.operands[0], i.operands[1]),
+                     (i.operands[1], i.operands[0])):
+            if (_is_uniform_product(x, defs, slot_stores, entry_ids,
+                                    (n1, None), depth + 1)
+                    and _is_uniform_product(y, defs, slot_stores,
+                                            entry_ids, (n2, None),
+                                            depth + 1)):
+                return True
+    return False
+
+
+def affine_mem_facts(fn: Function) -> _MemFacts:
+    """Classify every LOAD/STORE/ATOMIC index of ``fn`` (memoized on the
+    function, keyed by its ir_version)."""
+    cached = getattr(fn, "_mem_facts", None)
+    if cached is not None and cached[0] == fn.ir_version:
+        return cached[1]
+
+    defs: Dict[int, Any] = {}
+    slot_stores: Dict[int, list] = {}
+    entry_ids = {id(i) for i in fn.entry.instrs}
+    for i in fn.instructions():
+        if i.result is not None:
+            defs[id(i.result)] = i
+        if i.op is Op.SLOT_STORE:
+            slot_stores.setdefault(id(i.operands[0]), []).append(i)
+
+    def classify(v: Value, depth: int) -> Optional[_Lin]:
+        if depth > 12:
+            return None
+        if isinstance(v, Const):
+            try:
+                cv = int(v.value)
+            except (TypeError, ValueError):
+                return None
+            return _Lin(const_abs=abs(cv), const_val=cv)
+        if isinstance(v, Param):
+            if v.ty is Ty.PTR:
+                return None
+            return _Lin(has_scalar=True)     # launch scalar: uniform
+        if not isinstance(v, Reg):
+            return None
+        i = defs.get(id(v))
+        if i is None:
+            return None
+        op = i.op
+        if op is Op.INTR:
+            key = (i.operands[0], i.operands[1])
+            sym = _ID_SYMS.get(key)
+            if sym is not None:
+                return _Lin({sym[0]: 1}, layout=sym[1])
+            if i.operands[0] in _LAUNCH_UNIFORM_INTRS \
+                    or i.operands[0] == "core_id":
+                return _Lin(has_scalar=True)
+            return None
+        if op is Op.SLOT_LOAD:
+            ss = slot_stores.get(id(i.operands[0]), [])
+            # exactly one store, in the entry block: it dominates every
+            # load, so the load can never observe the slot's zero init
+            if len(ss) != 1 or id(ss[0]) not in entry_ids:
+                return None
+            return classify(ss[0].operands[1], depth + 1)
+        if op in (Op.ADD, Op.SUB):
+            a = classify(i.operands[0], depth + 1)
+            b = classify(i.operands[1], depth + 1)
+            if a is None or b is None:
+                return None
+            return _lin_add(a, b, 1 if op is Op.ADD else -1)
+        if op is Op.MUL:
+            a = classify(i.operands[0], depth + 1)
+            b = classify(i.operands[1], depth + 1)
+            if a is None or b is None:
+                return None
+            for x, y, yv in ((a, b, i.operands[1]), (b, a, i.operands[0])):
+                # scale by an exact constant
+                if y.const_val is not None and not y.c and not y.has_scalar:
+                    k = y.const_val
+                    return _Lin({s: cv * k for s, cv in x.c.items()},
+                                x.layout, x.has_scalar,
+                                x.const_abs * abs(k),
+                                None if x.const_val is None
+                                else x.const_val * k)
+            # the 2-D row strides: gy * global_size(0), grpy * num_groups(0)
+            for x, yv in ((a, i.operands[1]), (b, i.operands[0])):
+                nz = {s for s, cv in x.c.items() if cv}
+                if nz == {"gy"} and _is_uniform_product(
+                        yv, defs, slot_stores, entry_ids,
+                        ("global_size", ("num_groups", "local_size"))):
+                    return _Lin({"gys": x.c["gy"]}, True,
+                                x.has_scalar or x.const_abs != 0)
+                if nz == {"grpy"} and _is_uniform_product(
+                        yv, defs, slot_stores, entry_ids,
+                        ("num_groups", None)):
+                    return _Lin({"grpys": x.c["grpy"]}, x.layout,
+                                x.has_scalar or x.const_abs != 0)
+            if not a.c and not b.c:      # uniform * uniform
+                return _Lin(layout=a.layout or b.layout, has_scalar=True)
+            return None
+        return None
+
+    def index_fact(lin: Optional[_Lin]) -> Optional[AffineFact]:
+        if lin is None:
+            return None
+        stride = sum(lin.c.get(s, 0) for s in _LANE_SYMS)
+        if stride == 0:
+            return AffineFact("uni", lin.layout)
+        if lin.has_scalar:
+            return None             # unbounded addend: wrap unprovable
+        span_mul = sum(abs(cv) for cv in lin.c.values())
+        return AffineFact("inc" if stride > 0 else "dec", lin.layout,
+                          span_mul, lin.const_abs)
+
+    def privacy(lin: Optional[_Lin]) -> Optional[str]:
+        if lin is None:
+            return None
+        nz = {s: cv for s, cv in lin.c.items() if cv}
+        keys = set(nz)
+        if keys == {"gx"} or keys == {"grpx"}:
+            return "1d"
+        if keys == {"gx", "gys"} and nz["gx"] == nz["gys"]:
+            return "2d"
+        if keys == {"grpx", "grpys"} and nz["grpx"] == nz["grpys"]:
+            return "2d"
+        return None
+
+    facts = _MemFacts()
+    for i in fn.instructions():
+        op = i.op
+        if op is Op.LOAD:
+            f = index_fact(classify(i.operands[1], 0))
+            if f is not None:
+                facts.index_fact[id(i)] = f
+        elif op is Op.STORE:
+            lin = classify(i.operands[1], 0)
+            f = index_fact(lin)
+            if f is not None:
+                facts.index_fact[id(i)] = f
+            facts.store_privacy[id(i)] = privacy(lin)
+        elif op is Op.ATOMIC:
+            f = index_fact(classify(i.operands[2], 0))
+            if f is not None:
+                facts.index_fact[id(i)] = f
+    fn._mem_facts = (fn.ir_version, facts)  # type: ignore[attr-defined]
+    return facts
+
+
 _NULL = AnalysisManager(enabled=False)
 
 
@@ -138,4 +402,4 @@ def ensure_manager(am: Optional[AnalysisManager]) -> AnalysisManager:
     return am if am is not None else AnalysisManager()
 
 
-__all__ = ["AnalysisManager", "ensure_manager"]
+__all__ = ["AnalysisManager", "affine_mem_facts", "ensure_manager"]

@@ -393,9 +393,14 @@ class Function:
         # the decoded-program cache holds closures (unpicklable) and is
         # identity-keyed anyway: the persistent compile cache in
         # core/runtime.py pickles Functions without it and the first
-        # launch of an unpickled kernel re-decodes
+        # launch of an unpickled kernel re-decodes.  The affine-fact and
+        # decode-plan memos are id(instr)-keyed, and object ids do not
+        # survive pickling — a recycled id in the new process could
+        # silently match a stale entry, so they must be dropped too.
         d = dict(self.__dict__)
         d.pop("_decode_cache", None)
+        d.pop("_mem_facts", None)
+        d.pop("_decode_plan", None)
         return d
 
     def dump(self) -> str:

@@ -222,6 +222,70 @@ def two_store_conflict(out: "ptr_f32", n: "i32 uniform"):
         out[gid + 1] = 3.0
 
 
+@opencl.kernel
+def ragged2d(trip: "ptr_i32 const", x: "ptr_f32 const", out: "ptr_f32",
+             n: "i32 uniform"):
+    # 2-D launch driver for the widened store-privacy licence: the
+    # store index is the full 2-D linear id gid_x + gid_y *
+    # global_size(0) — injective per thread across the WHOLE launch, so
+    # re-merge / row compaction stay licenced on 2-D grids (bare gid_x
+    # chains would repeat across gy and fall back to exact drains)
+    gid = get_global_id(0) + get_global_id(1) * get_global_size(0)
+    t = trip[gid]
+    acc = 0.0
+    i = 0
+    while i < t:
+        acc += x[(gid + i * 3) % n]
+        i += 1
+    out[gid] = acc
+
+
+@opencl.kernel
+def shared_hist(x: "ptr_f32 const", out: "ptr_i32", n: "i32 uniform"):
+    # private-shared grid batching driver with a shared-tile ATOMIC: the
+    # tile is workgroup-private, so grid rows can never clash, but the
+    # atomic is a desync node — exercises the tile-aware per-warp
+    # fallback handlers (load/store/atomic on a (n_wgs, size) table)
+    tmp = local_array(i32, 4)
+    lid = get_local_id(0)
+    gid = get_global_id(0)
+    if lid < 4:
+        tmp[lid] = 0
+    barrier()
+    if gid < n:
+        b = 0
+        v = x[gid]
+        if v > 0.0:
+            b = 1
+        if v > 1.0:
+            b = 2
+        atomic_add(tmp, b, 1)
+    barrier()
+    if lid < 4:
+        out[get_group_id(0) * 4 + lid] = tmp[lid]
+
+
+@opencl.kernel
+def shared_tail(trip: "ptr_i32 const", x: "ptr_f32 const",
+                out: "ptr_f32", n: "i32 uniform"):
+    # pareto-tail ragged loop READING a private shared tile: when most
+    # grid rows ride along empty, compaction must gather the live
+    # workgroups' TILE rows along with their register state (the
+    # _gather_rows take_mem path) — the dead sub-batch still reads its
+    # own tiles while draining its epilogue
+    tmp = local_array(f32, 32)
+    lid = get_local_id(0)
+    gid = get_global_id(0)
+    tmp[lid] = x[gid]
+    barrier()
+    acc = 0.0
+    i = 0
+    while i < trip[gid]:
+        acc += tmp[(lid + i) % 32]
+        i += 1
+    out[gid] = acc + tmp[31 - lid]
+
+
 # -- multi-warp workgroup kernels (workgroup-batched executor tests) --------
 
 @opencl.kernel

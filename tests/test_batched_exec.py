@@ -197,8 +197,10 @@ def test_ragged_loop_ride_along_parity(name):
 
 
 def test_grid_batchable_gate():
-    """The grid-level batcher refuses kernels with shared memory or a
-    buffer both read and written, and accepts pure-gather kernels."""
+    """The grid-level batcher refuses kernels with a buffer both read
+    and written, accepts pure-gather kernels, and accepts __shared__
+    tiles used directly by the kernel body (each batched workgroup gets
+    a private tile row — the PR 5 extension)."""
     expected = {
         "spmv": True,          # loads row_ptr/cols/vals/x, stores y
         "spmv_csr": True,
@@ -207,7 +209,9 @@ def test_grid_batchable_gate():
         "stencil": True,       # multi-site stores desync, not refuse
         "bfs": False,          # reads AND writes visited[] (top-down)
         "saxpy": False,        # y read+written (conservative refusal)
-        "reduce0": False,      # __shared__ tile
+        "reduce0": True,       # __shared__ tile -> private per-row slice
+        "psum": True,          # tile + barriers: lockstep rows
+        "vote_sw": True,       # tile + shared atomic (desync node)
         "dotproduct": False,   # atomic RMW counts as read+write
     }
     for name, want in expected.items():

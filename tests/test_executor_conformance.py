@@ -199,6 +199,26 @@ _tk(K.ragged_nested, lambda rng: (
      "x": (rng.standard_normal(128) * 2).astype(np.float32),
      "out": np.zeros(128, np.float32)}, {"n": 128}, _p()))
 
+# 2-D linear-id stores (the widened store-privacy licence); under the
+# conformance harness's 1-D folds gid_y is 0 and the chain degenerates
+# to gid_x — the dedicated 2-D launch lives in test_grid_metamorphic
+_tk(K.ragged2d, lambda rng: (
+    {"trip": rng.integers(0, 9, 128).astype(np.int32),
+     "x": (rng.standard_normal(128) * 2).astype(np.float32),
+     "out": np.zeros(128, np.float32)}, {"n": 128}, _p()))
+
+# private-shared tile + shared-tile atomic (tile-sliced grid batching
+# with the tile-aware per-warp desync fallback)
+_tk(K.shared_hist, lambda rng: (
+    {"x": rng.standard_normal(128).astype(np.float32),
+     "out": np.zeros(16, np.int32)}, {"n": 120}, _p()))
+
+# ragged loop reading a private shared tile (compaction tile gathering)
+_tk(K.shared_tail, lambda rng: (
+    {"trip": rng.integers(0, 6, 128).astype(np.int32),
+     "x": rng.standard_normal(128).astype(np.float32),
+     "out": np.zeros(128, np.float32)}, {"n": 128}, _p()))
+
 # uniform trips: legal at every warp factor (ragged trips are exercised by
 # the hypothesis section below, where the expected outcome is an error)
 _tk(K.ragged_barrier_loop, lambda rng: (
@@ -284,6 +304,32 @@ def test_conformance_covers_whole_bench_registry():
     conformance case."""
     for name in BENCHES:
         assert name in CASES
+
+
+@pytest.mark.parametrize("name", ["reduce0", "psum", "shuffle_sw",
+                                  "vote_sw", "tk_shared_hist"])
+def test_private_shared_kernels_truly_take_the_grid_path(name):
+    """The shared-kernel rows of the conformance sweep must not be
+    vacuous: at their native single-warp-workgroup launches the grid
+    batcher must actually ENGAGE (telemetry batches > 0) — these
+    kernels fell back to per-workgroup dispatch before the private
+    tile slicing — and stay bit-identical to the oracle."""
+    handle, make = CASES[name]
+    rng = np.random.default_rng(7)
+    bufs0, scalars, params = make(rng)
+    fn = _compiled(name)
+    t = interp.GRID_TELEMETRY
+    t.reset()
+    got = _run_one(fn, bufs0, params, scalars,
+                   dict(decoded=True, batched=True, grid=True))
+    assert t.batches > 0, f"{name}: grid batching did not engage"
+    oracle = _run_one(fn, bufs0, params, scalars, EXECUTORS["oracle"])
+    assert got[0] == oracle[0] == "ok"
+    assert _stats_tuple(got[2]) == _stats_tuple(oracle[2])
+    assert got[2].shared_requests > 0, \
+        f"{name}: expected shared-memory traffic"
+    for k in bufs0:
+        np.testing.assert_array_equal(oracle[3][k], got[3][k])
 
 
 # --------------------------------------------------------------------------

@@ -198,6 +198,113 @@ def test_compaction_fires_and_stays_exact(monkeypatch):
             f"x{factor}: pareto-tail workload must compact"
 
 
+def test_2d_launch_licenses_runahead(monkeypatch):
+    """The widened affine licence: a kernel whose store index is the
+    full 2-D linear id (gid_x + gid_y * global_size(0)) keeps re-merge
+    and row compaction on 2-D launches — before PR 5 any grid_y > 1
+    launch forced the exact drain-to-completion path.  A pareto-tail
+    trip distribution over a (4 x 3)-workgroup grid must compact, and
+    stay bit-identical to the oracle."""
+    monkeypatch.setattr(interp, "_COMPACT_MIN_WGS", 2)
+    fn = _compiled(K.ragged2d, "ragged2d")
+    prog = interp._decode_batched(fn, 32, False, 4, grid_mode=True,
+                                  wg_rows=1)
+    assert prog.private_stores_2d, "2-D linear-id chain must classify"
+    rng = np.random.default_rng(11)
+    params = interp.LaunchParams(grid=4, local_size=32, warp_size=32,
+                                 grid_y=3)
+    total = 4 * 32 * 3
+    trip = rng.integers(0, 40, total).astype(np.int32)
+    trip[rng.uniform(0, 1, total) < 0.9] = 0    # few hot threads
+    bufs = {"trip": trip,
+            "x": rng.standard_normal(total).astype(np.float32),
+            "out": np.zeros(total, np.float32)}
+    sc = {"n": total}
+    t = interp.GRID_TELEMETRY
+    t.reset()
+    oracle = _launch(fn, bufs, params, sc, decoded=False)
+    got = _launch(fn, bufs, params, sc, grid=True)
+    _assert_same("ragged2d 2-D compaction", oracle, got)
+    assert t.compactions > 0, \
+        "2-D launch with a 2-D-injective store must still compact"
+    # a kernel with a BARE gid_x store (spmv_csr: 1-D privacy only)
+    # must NOT run ahead on a 2-D launch: the 1-D licence collapses
+    # when gid_x repeats across gy (threads at gy > 0 redo gy == 0's
+    # work bit-identically, so parity still holds — just via the exact
+    # drain path)
+    fn1 = _compiled(BENCHES["spmv_csr"].handle, "spmv_csr")
+    prog1 = interp._decode_batched(fn1, 32, False, 4, grid_mode=True,
+                                   wg_rows=1)
+    assert prog1.private_stores and not prog1.private_stores_2d
+    nx = 4 * 32
+    deg = rng.integers(0, 30, nx)
+    deg[rng.uniform(0, 1, nx) < 0.85] = 0
+    rp = np.zeros(nx + 1, np.int32)
+    rp[1:] = np.cumsum(deg)
+    bufs1 = {"row_ptr": rp,
+             "cols": rng.integers(0, nx, int(rp[-1])).astype(np.int32),
+             "vals": rng.standard_normal(int(rp[-1])).astype(np.float32),
+             "x": rng.standard_normal(nx).astype(np.float32),
+             "y": np.zeros(nx, np.float32)}
+    t.reset()
+    oracle1 = _launch(fn1, bufs1, params, {"n": nx}, decoded=False)
+    got1 = _launch(fn1, bufs1, params, {"n": nx}, grid=True)
+    _assert_same("spmv_csr 2-D exact drain", oracle1, got1)
+    assert t.compactions == 0, \
+        "bare gid_x stores must not license run-ahead on a 2-D grid"
+
+
+def test_shared_tiles_survive_compaction(monkeypatch):
+    """Row compaction on a private-shared-tile kernel: the live
+    sub-batch must carry its workgroups' TILE rows into the dense
+    sub-batch (and the dead sub-batch its own), so post-compaction
+    tile reads still see each workgroup's private state — bit-exact
+    against the oracle, with the compaction counter proving the path
+    actually ran."""
+    monkeypatch.setattr(interp, "_COMPACT_MIN_WGS", 4)
+    fn = _compiled(K.shared_tail, "shared_tail")
+    prog = interp._decode_batched(fn, 32, False, 4, grid_mode=True,
+                                  wg_rows=1)
+    assert prog.order_free and prog.private_stores, \
+        "shared-tile stores must be exempt from the privacy scan"
+    rng = np.random.default_rng(3)
+    g = 16
+    total = g * 32
+    params = interp.LaunchParams(grid=g, local_size=32, warp_size=32)
+    trip = rng.integers(0, 4, total).astype(np.int32)
+    hot = rng.integers(0, g, 2)      # two hot workgroups loop long
+    for h in hot:
+        trip[h * 32 + 3] = 200
+    bufs = {"trip": trip,
+            "x": rng.standard_normal(total).astype(np.float32),
+            "out": np.zeros(total, np.float32)}
+    sc = {"n": total}
+    t = interp.GRID_TELEMETRY
+    t.reset()
+    oracle = _launch(fn, bufs, params, sc, decoded=False)
+    got = _launch(fn, bufs, params, sc, grid=True)
+    _assert_same("shared_tail compaction", oracle, got)
+    assert t.compactions > 0, \
+        "pareto-tail shared-tile workload must compact"
+
+
+def test_grid_shared_tiles_survive_config_sweeps(monkeypatch):
+    """Private-shared grid batching under the scheduling-freedom sweeps:
+    chunk size and workgroup count must be invisible for tile kernels
+    too (tiles travel with their workgroup through desync slicing and
+    sub-batch gathering)."""
+    for chunk in (1, 3, 64):
+        monkeypatch.setattr(interp, "_GRID_BATCH_MAX", chunk)
+        for bname in ("reduce0", "psum", "vote_sw"):
+            b = BENCHES[bname]
+            rng = np.random.default_rng(9)
+            bufs, sc, params = b.make(rng)
+            fn = _compiled(b.handle, bname)
+            oracle = _launch(fn, bufs, params, sc, decoded=False)
+            got = _launch(fn, bufs, params, sc, grid=True)
+            _assert_same(f"{bname} chunk={chunk}", oracle, got)
+
+
 def test_compaction_needs_private_stores():
     """A kernel whose store index is NOT provably thread-private (a
     fixed-cell scatter) must never take the run-ahead paths: its store

@@ -211,6 +211,93 @@ def test_pipeline_ir_identical_with_and_without_analysis_cache():
                 f"{name}/{cfg.label}: cached pipeline changed the IR"
 
 
+def test_decode_plan_disk_cache(tmp_path, monkeypatch):
+    """The persistent decode-plan cache: a FRESH build of an identical
+    kernel (new Function objects, same content) must hit the on-disk
+    plan instead of recomputing the static decode analysis — and the
+    loaded plan must produce identical decode classifications and
+    identical execution."""
+    monkeypatch.setenv("VOLT_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("VOLT_DISK_CACHE", "1")
+    b = BENCHES["spmv_csr"]
+    rng = np.random.default_rng(0)
+    bufs0, scalars, params = b.make(rng)
+
+    def fresh_fn():
+        mod = b.handle.build(None)
+        return run_pipeline(mod, b.handle.name, ABLATION_LADDER[-1]).fn
+
+    base = dict(runtime.DISK_CACHE_STATS)
+    fn1 = fresh_fn()
+    prog1 = interp._decode_batched(fn1, 32, False, 1, grid_mode=True)
+    assert runtime.DISK_CACHE_STATS["decode_misses"] > base["decode_misses"]
+    hits0 = runtime.DISK_CACHE_STATS["decode_hits"]
+    assert list(tmp_path.glob("*.vdp")), "plan must persist to disk"
+
+    fn2 = fresh_fn()                 # same content, new objects
+    prog2 = interp._decode_batched(fn2, 32, False, 1, grid_mode=True)
+    assert runtime.DISK_CACHE_STATS["decode_hits"] > hits0, \
+        "identical kernel must hit the decode-plan cache"
+    # loaded-plan decode classifications match the computed ones
+    assert (prog1.order_free, prog1.private_stores,
+            prog1.private_stores_2d) == \
+           (prog2.order_free, prog2.private_stores,
+            prog2.private_stores_2d)
+    assert len(prog1._hazard_stores) == len(prog2._hazard_stores)
+    f1 = {k.kind for k in prog1.mem_facts.index_fact.values()}
+    f2 = {k.kind for k in prog2.mem_facts.index_fact.values()}
+    assert f1 == f2
+    # ... and execution through the loaded plan stays bit-identical
+    ref = {k: v.copy() for k, v in bufs0.items()}
+    st_ref = interp.launch(fn2, ref, params, scalar_args=scalars,
+                           decoded=False)
+    dec = {k: v.copy() for k, v in bufs0.items()}
+    st_dec = interp.launch(fn2, dec, params, scalar_args=scalars)
+    assert st_ref.instrs == st_dec.instrs
+    assert st_ref.mem_requests == st_dec.mem_requests
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], dec[k])
+
+
+def test_decode_plan_corrupt_and_content_invalidation(tmp_path,
+                                                      monkeypatch):
+    """Corrupt plan payloads fall back to a fresh computation (and the
+    bad entry is deleted); editing the kernel body changes the content
+    hash so the old plan can never be returned."""
+    monkeypatch.setenv("VOLT_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("VOLT_DISK_CACHE", "1")
+
+    def fresh_fn(handle, name):
+        return run_pipeline(handle.build(None), name,
+                            ABLATION_LADDER[-1]).fn
+
+    fn1 = fresh_fn(K.saxpy, "saxpy")
+    interp._decode_batched(fn1, 32, False, 1, grid_mode=True)
+    paths = list(tmp_path.glob("*.vdp"))
+    assert len(paths) == 1
+    # corrupt it: the next fresh decode must recompute, not crash
+    paths[0].write_bytes(b"garbage")
+    errs0 = runtime.DISK_CACHE_STATS["decode_errors"]
+    fn2 = fresh_fn(K.saxpy, "saxpy")
+    prog = interp._decode_batched(fn2, 32, False, 1, grid_mode=True)
+    assert runtime.DISK_CACHE_STATS["decode_errors"] > errs0
+    assert not paths[0].exists() or \
+        paths[0].read_bytes() != b"garbage"
+    assert prog.private_stores      # recomputed facts, not garbage
+    # different kernel content -> different key (no false sharing)
+    fn3 = fresh_fn(K.loop_break_continue, "loop_break_continue")
+    k_a = runtime._decode_plan_key(fn2)
+    k_b = runtime._decode_plan_key(fn3)
+    assert k_a != k_b
+    # ... and an in-place IR mutation changes the key too
+    v0 = runtime._decode_plan_key(fn2)
+    blk = fn2.entry
+    from repro.core.vir import Const
+    blk.insert(0, Instr(Op.ADD, [Const(Ty.I32, 1), Const(Ty.I32, 2)],
+                        Reg(Ty.I32, "dead")))
+    assert runtime._decode_plan_key(fn2) != v0
+
+
 def test_runtime_compile_cache():
     runtime.clear_compile_cache()
     h = BENCHES["vecadd"].handle
