@@ -1,0 +1,168 @@
+"""Robustness bench (``bench_robust``): what fault isolation costs.
+
+Two questions, answered on a grid-eligible cross-section of the suite:
+
+  * **Clean-path snapshot overhead** — the degradation chain snapshots
+    the written-root buffers before the first demotable attempt
+    (core/runtime.py).  ``snapshot_ratio`` is
+    ``Runtime(transactional=False)`` wall time over the default
+    transactional wall time for an un-faulted launch; the aggregate
+    geomean is the CHECKED metric (acceptance: > 0.95, i.e. the
+    snapshot costs < 5%).
+
+  * **Degraded-mode throughput per rung** — with a deterministic
+    injection forcing a demotion (chunk.dispatch -> wg-batched,
+    grid.exec -> decoded, decode -> oracle floor), how much slower is a
+    recovered launch than the clean grid path?  Reported as
+    ``clean_ms / demoted_ms`` per rung (informational: these quantify
+    the degradation ladder, they are not regressions).
+
+Emits the usual ``name,us_per_call,derived`` CSV lines plus the
+machine-readable dict benchmarks/run.py folds into BENCH_perf.json.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import faults, interp, runtime
+from repro.core.passes.pipeline import ABLATION_LADDER
+from repro.volt_bench import BENCHES
+
+FULL = ABLATION_LADDER[-1]
+#: inner launches per sample x best-of samples; sub-ms launch bodies
+#: need the inner loop or allocator jitter swamps the <5% signal
+INNER = 10
+REPS = 4
+
+# grid-eligible at their native single-warp launches AND multi-warp
+# refoldable (so the wg rung measurement folds the same kernels); all
+# pure input->output, so repeated launches on the same Runtime are
+# idempotent and the timing loop needs no buffer re-seeding
+ROBUST_BENCHES = ["vecadd", "transpose", "sfilter", "blackscholes",
+                  "spmv_csr", "stencil"]
+
+
+def _best_of(fn, reps: int = REPS, inner: int = INNER) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+def _launcher(b, bufs0, scalars, params, *, transactional=True):
+    ck = runtime.compile_kernel(b.handle, FULL)
+    rt = runtime.Runtime(transactional=transactional)
+    for k, v in bufs0.items():
+        rt.create_buffer(k, v.copy())
+
+    def body():
+        rt.launch(ck.fn, grid=params.grid, block=params.local_size,
+                  scalar_args=scalars)
+    body.rt = rt
+    return body
+
+
+def _timed_launch(b, bufs0, scalars, params, *, transactional=True,
+                  inject_site: Optional[str] = None):
+    body = _launcher(b, bufs0, scalars, params,
+                     transactional=transactional)
+    if inject_site is None:
+        t = _best_of(body)
+    else:
+        with faults.inject(inject_site):
+            t = _best_of(body)
+    return t, body.rt.last_report
+
+
+def _geomean(xs: List[float]) -> float:
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def main(benches: Optional[List[str]] = None) -> Dict:
+    names = benches or ROBUST_BENCHES
+    out: Dict[str, Dict[str, float]] = {}
+    print("bench          txn_ms  plain_ms  snap_ratio   wg_rel  "
+          "dec_rel  orc_rel", flush=True)
+    for name in names:
+        b = BENCHES[name]
+        rng = np.random.default_rng(7)
+        bufs0, scalars, params = b.make(rng)
+
+        # clean path: transactional (default) vs snapshot-free,
+        # interleaved samples so allocator/cache drift hits both arms
+        body_txn = _launcher(b, bufs0, scalars, params)
+        body_plain = _launcher(b, bufs0, scalars, params,
+                               transactional=False)
+        t_txn = t_plain = float("inf")
+        for _ in range(3):
+            t_txn = min(t_txn, _best_of(body_txn))
+            t_plain = min(t_plain, _best_of(body_plain))
+        rep = body_txn.rt.last_report
+        assert rep.demotions == 0 and rep.attempts[-1].outcome == "ok"
+        clean_exec = rep.executor
+
+        # degraded rungs, each forced by a deterministic injection
+        mw = interp.fold_warps(params, 4)
+        t_wg, rep_wg = _timed_launch(b, bufs0, scalars, mw,
+                                     inject_site="chunk.dispatch")
+        t_wg_clean, _ = _timed_launch(b, bufs0, scalars, mw)
+        t_dec, rep_dec = _timed_launch(b, bufs0, scalars, params,
+                                       inject_site="grid.exec")
+        t_orc, rep_orc = _timed_launch(b, bufs0, scalars, params,
+                                       inject_site="decode")
+        for r in (rep_wg, rep_dec, rep_orc):
+            assert r.demotions >= 1 and r.attempts[-1].outcome == "ok"
+        assert rep_orc.executor == "oracle"
+
+        out[name] = {
+            "txn_ms": t_txn * 1e3,
+            "plain_ms": t_plain * 1e3,
+            "snapshot_ratio": t_plain / t_txn,
+            "clean_executor": clean_exec,
+            "wg_demoted_ms": t_wg * 1e3,
+            "rung_wg_relative": t_wg_clean / t_wg,
+            "decoded_demoted_ms": t_dec * 1e3,
+            "rung_decoded_relative": t_txn / t_dec,
+            "oracle_demoted_ms": t_orc * 1e3,
+            "rung_oracle_relative": t_txn / t_orc,
+        }
+        r = out[name]
+        print(f"{name:12s} {r['txn_ms']:8.2f} {r['plain_ms']:9.2f} "
+              f"{r['snapshot_ratio']:11.3f} {r['rung_wg_relative']:8.3f} "
+              f"{r['rung_decoded_relative']:8.3f} "
+              f"{r['rung_oracle_relative']:8.3f}", flush=True)
+
+    agg = {
+        "snapshot_clean_geomean": _geomean(
+            [v["snapshot_ratio"] for v in out.values()]),
+        "rung_wg_relative": _geomean(
+            [v["rung_wg_relative"] for v in out.values()]),
+        "rung_decoded_relative": _geomean(
+            [v["rung_decoded_relative"] for v in out.values()]),
+        "rung_oracle_relative": _geomean(
+            [v["rung_oracle_relative"] for v in out.values()]),
+    }
+    print(f"\nsnapshot overhead geomean: "
+          f"{(1 / agg['snapshot_clean_geomean'] - 1) * 100:+.1f}% "
+          f"(clean/txn ratio {agg['snapshot_clean_geomean']:.3f}; "
+          f"acceptance > 0.95)", flush=True)
+    print(f"degraded throughput vs clean: wg "
+          f"{agg['rung_wg_relative']:.2f}x, decoded "
+          f"{agg['rung_decoded_relative']:.2f}x, oracle "
+          f"{agg['rung_oracle_relative']:.2f}x", flush=True)
+    for name, r in out.items():
+        print(f"{name},{r['txn_ms'] * 1e3:.1f},"
+              f"snapshot_ratio={r['snapshot_ratio']:.3f}", flush=True)
+    result: Dict = dict(out)
+    result["aggregate"] = agg
+    return result
+
+
+if __name__ == "__main__":
+    main()

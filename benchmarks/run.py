@@ -21,6 +21,10 @@ markdown tables above them).  Sections:
   interp_speed_mem : vectorized/analytic coalescing engine +
                    private-shared-tile grid batching on the
                    memory-bound benches vs the PR 4 configuration
+  bench_robust   : fault-isolation costs — transactional-snapshot
+                   overhead on the clean path (<5% acceptance) and
+                   degraded-mode throughput per executor rung
+                   (docs/robustness.md)
   kernels        : Pallas kernel vs jnp-oracle timings (CPU interpret)
   roofline       : per (arch x shape x mesh) three-term roofline rows
 
@@ -65,6 +69,9 @@ CHECKED_METRICS = [
     ("interp_speed_mem", "suite_speedup"),
     ("interp_speed_mem", "geomean_speedup"),
     ("compile_time", "suite_speedup"),
+    # clean/transactional wall-time ratio: a drop below the committed
+    # value means the degradation chain's snapshot got more expensive
+    ("bench_robust", "snapshot_clean_geomean"),
 ]
 
 #: top-N functions shown per section under ``--profile``
@@ -126,8 +133,8 @@ def check_regressions(fresh: dict, committed: dict,
 
 def main() -> None:
     from benchmarks import (compile_time, divergence_opt, interp_speed,
-                            isa_ext, kernels_bench, roofline_bench,
-                            sharedmem)
+                            isa_ext, kernels_bench, robustness,
+                            roofline_bench, sharedmem)
     sections = [
         ("divergence_opt", divergence_opt.main),
         ("isa_ext", isa_ext.main),
@@ -139,6 +146,7 @@ def main() -> None:
         ("interp_speed_grid", interp_speed.main_grid),
         ("interp_speed_grid_mw", interp_speed.main_grid_mw),
         ("interp_speed_mem", interp_speed.main_mem),
+        ("bench_robust", robustness.main),
         ("kernels", kernels_bench.main),
         ("roofline", roofline_bench.main),
     ]
@@ -150,7 +158,7 @@ def main() -> None:
     perf_sections = {"interp_speed", "interp_speed_batched",
                      "interp_speed_ragged", "interp_speed_grid",
                      "interp_speed_grid_mw", "interp_speed_mem",
-                     "compile_time"}
+                     "compile_time", "bench_robust"}
     perf: dict = {}
     for name, fn in sections:
         if only == "perf":
@@ -182,6 +190,17 @@ def main() -> None:
     if not perf:
         return
     if profile:
+        # launch-engine telemetry accumulated across the profiled
+        # sections: which executor rungs actually served the launches,
+        # and whether any degraded (docs/robustness.md)
+        from repro.core.runtime import LAUNCH_TELEMETRY
+        t = LAUNCH_TELEMETRY
+        print(f"\n[run] --profile launch telemetry: "
+              f"{t['launches']} launches, by executor "
+              f"{dict(t['by_executor'])}, {t['demotions']} demotions "
+              f"{dict(t['demotion_reasons'])}, "
+              f"{t['engine_faults']} engine faults, "
+              f"{t['kernel_faults']} kernel faults", flush=True)
         # profiled timings carry cProfile overhead — never let them
         # replace the committed baseline numbers or trip the
         # regression gate

@@ -1,0 +1,242 @@
+"""Fault taxonomy + deterministic, site-addressable fault injection.
+
+Two error families split the launch stack's failure modes (the
+degradation contract lives in ``core/runtime.py``, see
+docs/robustness.md):
+
+  * ``KernelFault`` — SEMANTIC errors of the kernel itself (OOB store,
+    trap, barrier divergence, out of fuel).  Deterministic: every
+    executor must raise the same class on the same launch, and the
+    conformance suite holds them to it.  Surfaced to the caller.
+  * ``EngineFault`` — INTERNAL errors of a fast path (an unexpected
+    exception inside a batched/grid executor, a licence found invalid
+    at run time, a corrupt plan).  Never the kernel's fault: the
+    runtime retries the launch one executor rung down instead of
+    surfacing it.
+
+Injection sites are the second half of the contract: named points
+threaded through decode, plan/cache load+store, chunk dispatch and the
+batched handler families, each a one-line ``maybe_fault(site)`` guard
+that is dead (one module-attribute check) unless an injection is armed.
+
+Arming is deterministic per seed, via either
+
+  * the context manager::
+
+        with faults.inject("decode", prob=1.0, seed=0):
+            rt.launch(...)
+
+  * or the environment, parsed at import:
+    ``VOLT_FAULT=site:prob:seed[,site:prob:seed...]``.
+
+SCOPED sites (the executor-internal ones) only fire while a demotable
+executor rung is driving the launch — ``interp.launch`` brackets its
+fast paths with ``faults.rung(label)`` — so the oracle rung can never
+be injected and recovery always terminates.  Unscoped sites (the disk
+caches) fire anywhere; their callers recover locally (drop the entry,
+recompute) without demoting anything.
+"""
+from __future__ import annotations
+
+import fnmatch
+import os
+import random
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional
+
+
+class KernelFault(Exception):
+    """Semantic kernel error — deterministic, surfaced to the caller.
+
+    ``interp.ExecError`` subclasses this, so every existing raise site
+    and every error-class conformance comparison is unchanged."""
+
+
+class EngineFault(RuntimeError):
+    """Internal fast-path failure — triggers demotion, never results."""
+
+    def __init__(self, msg: str, *, site: Optional[str] = None,
+                 rung: Optional[str] = None) -> None:
+        super().__init__(msg)
+        self.site = site
+        self.rung = rung
+
+
+class InjectedFault(EngineFault):
+    """An ``EngineFault`` raised by the injection harness itself."""
+
+
+# --------------------------------------------------------------------------
+# site registry
+# --------------------------------------------------------------------------
+
+#: site name -> {"desc": ..., "scoped": bool}; scoped sites fire only
+#: inside a demotable executor rung (see module docstring)
+SITES: Dict[str, Dict[str, object]] = {}
+
+
+def register_site(name: str, desc: str, *, scoped: bool = True) -> None:
+    SITES[name] = {"desc": desc, "scoped": scoped}
+
+
+# disk caches: callers recover locally (drop entry, recompute) ---------------
+register_site("cache.load", "compile-cache disk read (.vck deserialize)",
+              scoped=False)
+register_site("cache.store", "compile-cache disk write, before tmp write",
+              scoped=False)
+register_site("cache.commit", "atomic-write commit: after the tmp file "
+              "is written, before os.replace (a crash mid-write)",
+              scoped=False)
+register_site("plan.load", "decode-plan disk read (.vdp deserialize)",
+              scoped=False)
+register_site("plan.store", "decode-plan disk write", scoped=False)
+# executor internals: an injected fault demotes the launch one rung ----------
+register_site("decode", "handler-table decode (_decode/_decode_batched)")
+register_site("decode.plan", "static decode-plan computation")
+register_site("chunk.dispatch", "grid-mode per-chunk decode + dispatch")
+register_site("grid.exec", "grid-batched lockstep node walk")
+register_site("wg.exec", "workgroup-batched lockstep node walk")
+register_site("decoded.exec", "per-warp decoded node walk")
+register_site("handler.mem", "coalescing-engine memory counting handlers")
+register_site("handler.atomic", "contended-RMW serialization ladder")
+
+#: executor rungs an EngineFault can demote AWAY from (the oracle is the
+#: floor: scoped sites never fire there)
+DEMOTABLE = ("grid", "wg", "decoded")
+
+#: hot-path guard: executors check this one module attribute before
+#: calling maybe_fault, so an unarmed process pays a single dict-free
+#: attribute read per site
+ACTIVE = False
+
+_RUNG: List[Optional[str]] = [None]
+
+
+class _Injection:
+    __slots__ = ("pattern", "prob", "seed", "after", "rng", "hits",
+                 "fired")
+
+    def __init__(self, pattern: str, prob: float, seed: int,
+                 after: int) -> None:
+        self.pattern = pattern
+        self.prob = float(prob)
+        self.seed = int(seed)
+        self.after = int(after)
+        self.rng = random.Random(int(seed))
+        self.hits = 0       # matching site executions observed
+        self.fired = 0      # faults actually raised
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"_Injection({self.pattern!r}, prob={self.prob}, "
+                f"seed={self.seed}, hits={self.hits}, "
+                f"fired={self.fired})")
+
+
+_INJECTIONS: List[_Injection] = []
+
+
+def _sync_active() -> None:
+    global ACTIVE
+    ACTIVE = bool(_INJECTIONS)
+
+
+def current_rung() -> Optional[str]:
+    return _RUNG[-1]
+
+
+def rung_depth() -> int:
+    return len(_RUNG)
+
+
+def push_rung(label: str) -> None:
+    """Enter a rung without a context manager (interp.launch selects
+    its executor mid-body; the launch wrapper trims back to the saved
+    depth on every exit path)."""
+    _RUNG.append(label)
+
+
+def trim_rungs(depth: int) -> None:
+    del _RUNG[depth:]
+
+
+@contextmanager
+def rung(label: str) -> Iterator[None]:
+    """Bracket an executor rung: scoped sites fire only while the
+    innermost rung is demotable."""
+    _RUNG.append(label)
+    try:
+        yield
+    finally:
+        _RUNG.pop()
+
+
+def maybe_fault(site: str) -> None:
+    """Raise InjectedFault if an armed injection matches ``site``.
+    Deterministic: each injection draws from its own seeded RNG in
+    execution order.  Scoped sites are suppressed outside demotable
+    rungs so recovery to the oracle always terminates."""
+    meta = SITES.get(site)
+    if meta is not None and meta["scoped"] and _RUNG[-1] not in DEMOTABLE:
+        return
+    for inj in _INJECTIONS:
+        if not fnmatch.fnmatchcase(site, inj.pattern):
+            continue
+        inj.hits += 1
+        if inj.hits <= inj.after:
+            continue
+        if inj.prob >= 1.0 or inj.rng.random() < inj.prob:
+            inj.fired += 1
+            raise InjectedFault(
+                f"injected fault at site {site!r} (hit {inj.hits}, "
+                f"seed {inj.seed})", site=site, rung=_RUNG[-1])
+
+
+@contextmanager
+def inject(site: str, prob: float = 1.0, seed: int = 0,
+           after: int = 0) -> Iterator[_Injection]:
+    """Arm one injection for the dynamic extent of the block.  ``site``
+    may be an fnmatch pattern (``"handler.*"``); ``after`` skips the
+    first N matching executions (mid-run faults: stores already
+    committed when the fault lands)."""
+    if "*" not in site and "?" not in site and site not in SITES:
+        raise ValueError(f"unknown fault site {site!r} "
+                         f"(known: {sorted(SITES)})")
+    inj = _Injection(site, prob, seed, after)
+    _INJECTIONS.append(inj)
+    _sync_active()
+    try:
+        yield inj
+    finally:
+        _INJECTIONS.remove(inj)
+        _sync_active()
+
+
+def install_spec(spec: str) -> List[_Injection]:
+    """Arm injections from a ``site:prob:seed[,...]`` spec (the
+    VOLT_FAULT format; prob and seed optional).  Stays armed until
+    ``clear()``."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        bits = part.split(":")
+        site = bits[0]
+        prob = float(bits[1]) if len(bits) > 1 and bits[1] else 1.0
+        seed = int(bits[2]) if len(bits) > 2 and bits[2] else 0
+        inj = _Injection(site, prob, seed, 0)
+        _INJECTIONS.append(inj)
+        out.append(inj)
+    _sync_active()
+    return out
+
+
+def clear() -> None:
+    """Disarm every injection (including VOLT_FAULT ones)."""
+    del _INJECTIONS[:]
+    _sync_active()
+
+
+_env_spec = os.environ.get("VOLT_FAULT")
+if _env_spec:
+    install_spec(_env_spec)

@@ -31,18 +31,55 @@ from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import faults as _faults
 from . import interp_mem as _mem
 from .passes.analysis import affine_mem_facts
 from .vir import (AddrSpace, BINOPS, Block, Const, Function, GlobalVar,
                   Instr, Module, Op, Param, Reg, Slot, Ty, UNOPS, Value)
 
 
-class ExecError(Exception):
-    pass
+class ExecError(_faults.KernelFault):
+    """Semantic kernel error (a KernelFault): deterministic, surfaced
+    to the caller identically by every executor."""
 
 
 class UniformityViolation(ExecError):
     """A branch the compiler claimed uniform diverged at run time."""
+
+
+def _add_ctx(e: ExecError, **kv: Any) -> ExecError:
+    """Annotate an ExecError with kernel/workgroup/warp context exactly
+    once per field (the innermost — most specific — annotation wins).
+    The base message is kept and the context rendered as a bracketed
+    suffix, e.g. ``out of fuel ... [in @saxpy, workgroup (2, 0),
+    warp 1]``, matching the barrier-divergence error's prose."""
+    ctx = getattr(e, "ctx", None)
+    if ctx is None:
+        ctx = {}
+        e.ctx = ctx                                # type: ignore[attr-defined]
+        e._base_msg = e.args[0] if e.args else ""  # type: ignore[attr-defined]
+    for k, v in kv.items():
+        if v is not None and k not in ctx:
+            ctx[k] = v
+    shown = getattr(e, "ctx_in_msg", ())   # fields the base message
+    parts = []                             # already spells out
+    if "kernel" in ctx and "kernel" not in shown:
+        parts.append(f"in @{ctx['kernel']}")
+    if "workgroup" in ctx and "workgroup" not in shown:
+        parts.append(f"workgroup {ctx['workgroup']}")
+    if "warp" in ctx and "warp" not in shown:
+        parts.append(f"warp {ctx['warp']}")
+    if parts:
+        e.args = (f"{e._base_msg} [{', '.join(parts)}]",) + e.args[1:]
+    return e
+
+
+#: executor label actually selected by the most recent launch() call
+#: ("grid" / "wg" / "decoded" / "oracle"; None before selection) — the
+#: runtime's degradation chain demotes relative to the executor that
+#: really ran, not the one it asked for (a gate-refused grid request
+#: silently falls back before any fault can fire)
+LAST_EXECUTOR: List[Optional[str]] = [None]
 
 
 #: re-exported from the shared coalescing engine (interp_mem) — the one
@@ -200,6 +237,8 @@ def _atomic_rmw(kind: str, buf: np.ndarray, ix: np.ndarray,
                 old: np.ndarray) -> None:
     """The contended-RMW serialization ladder, shared by every executor
     (like the _BIN_FNS/_UN_FNS tables): lane-ordered, deterministic."""
+    if _faults.ACTIVE:
+        _faults.maybe_fault("handler.atomic")
     for ln in lanes:
         a = int(ix[ln])
         old[ln] = buf[a]
@@ -749,6 +788,8 @@ class _DBlock:
 
 def _decode(fn: Function, W: int, strict: bool) -> "_DProgram":
     """Decode ``fn`` (memoized on the function, keyed by IR version)."""
+    if _faults.ACTIVE:
+        _faults.maybe_fault("decode")
     cache = getattr(fn, "_decode_cache", None)
     if cache is None:
         cache = {}
@@ -1341,6 +1382,8 @@ def _run_decoded(prog: "_DProgram", st: _DState
     blocks = prog.blocks
     bi = 0
     while True:
+        if _faults.ACTIVE:
+            _faults.maybe_fault("decoded.exec")
         nodes = blocks[bi].nodes
         jump: Optional[int] = None
         for node in nodes:
@@ -1418,6 +1461,8 @@ def _decode_batched(fn: Function, W: int, strict: bool, n_warps: int,
     workgroup; a barrier synchronizes only the rows of its own
     workgroup); ``ride_along=False`` restores the stricter
     desync-on-mixed-loop-exit behavior (used as a benchmark baseline)."""
+    if _faults.ACTIVE:
+        _faults.maybe_fault("decode")
     cache = getattr(fn, "_decode_cache", None)
     if cache is None:
         cache = {}
@@ -1575,6 +1620,8 @@ _DECODE_PLAN_SCHEMA = 1
 
 def _compute_decode_plan(fn: Function) -> Tuple[Dict[str, Any], Any]:
     """-> (serializable plan, materialized _MemFacts)."""
+    if _faults.ACTIVE:
+        _faults.maybe_fault("decode.plan")
     facts = affine_mem_facts(fn)
     fact_rows: List[Tuple] = []
     cyclic = _cyclic_blocks(fn)
@@ -2565,11 +2612,18 @@ def _run_lockstep_fn(prog: "_BProgram", bst: _DState) -> np.ndarray:
 
 def _barrier_divergence_error(wg: Tuple[int, int], waiting: Sequence[int],
                               exited: Sequence[int]) -> ExecError:
-    return ExecError(
+    e = ExecError(
         f"barrier divergence in workgroup {wg}: warp(s) "
         f"{sorted(waiting)} wait at a barrier but warp(s) "
         f"{sorted(exited)} already returned — every warp of the "
         f"workgroup must reach the same barriers")
+    # the message already names its workgroup (and lists the warps):
+    # pre-fill the context so later _add_ctx annotations only add the
+    # missing kernel name instead of repeating the workgroup
+    e.ctx = {"workgroup": wg}                    # type: ignore[attr-defined]
+    e.ctx_in_msg = ("workgroup",)                # type: ignore[attr-defined]
+    e._base_msg = e.args[0]                      # type: ignore[attr-defined]
+    return e
 
 
 def _run_wg_batched(bprog: "_BProgram", bst: _DState,
@@ -2583,6 +2637,8 @@ def _run_wg_batched(bprog: "_BProgram", bst: _DState,
         # ---- lockstep ------------------------------------------------
         desync_at: Optional[Tuple[int, int]] = None
         while desync_at is None:
+            if _faults.ACTIVE:
+                _faults.maybe_fault("wg.exec")
             nodes = bprog.bblocks[bi].nodes
             nn = len(nodes)
             jump: Optional[int] = None
@@ -2621,6 +2677,8 @@ def _run_wg_batched(bprog: "_BProgram", bst: _DState,
                     events[wi] = next(warps[wi])
                 except StopIteration:
                     done.append(wi)
+                except ExecError as e:
+                    raise _add_ctx(e, workgroup=wg, warp=wi)
             exited.extend(done)
             if events and done:
                 raise _barrier_divergence_error(wg, sorted(events),
@@ -2819,6 +2877,68 @@ def _grid_batchable(fn: Function, argmap: Dict[int, Any],
     return True
 
 
+def write_root_buffers(fn: Function
+                       ) -> Optional[Tuple[set, set]]:
+    """Names of the buffers a launch of ``fn`` may WRITE — the
+    transactional-snapshot set (docs/robustness.md): ``(param names,
+    global names)`` reached by a STORE/ATOMIC root, resolved through
+    calls like the launch gate's ``write_roots`` scan but binding-free
+    (names, not arrays, so the result caches on the function).
+    __shared__ tiles are excluded (fresh per launch).  Returns None
+    when some store root cannot be resolved to a top-level name — the
+    caller must then snapshot every bound buffer."""
+    cached = getattr(fn, "_write_roots", None)
+    if cached is not None and cached[0] == fn.ir_version:
+        return cached[1]
+    params_w: set = set()
+    globals_w: set = set()
+    ok = [True]
+
+    def resolve(ptr: Any, binding: Dict[int, Any]) -> None:
+        if isinstance(ptr, GlobalVar):
+            if ptr.space is not AddrSpace.SHARED:
+                globals_w.add(ptr.name)
+            return
+        if isinstance(ptr, Param):
+            root = binding.get(id(ptr))
+            if isinstance(root, GlobalVar):
+                resolve(root, binding)
+            elif isinstance(root, Param):
+                params_w.add(root.name)
+            else:
+                ok[0] = False
+            return
+        ok[0] = False
+
+    def scan(f: Function, binding: Dict[int, Any], depth: int) -> None:
+        if depth > 8:
+            ok[0] = False
+            return
+        for i in f.instructions():
+            if i.op is Op.STORE:
+                resolve(i.operands[0], binding)
+            elif i.op is Op.ATOMIC:
+                resolve(i.operands[1], binding)
+            elif i.op is Op.CALL:
+                callee: Function = i.operands[0]
+                sub: Dict[int, Any] = {}
+                for p, a in zip(callee.params, i.operands[1:]):
+                    if p.ty is Ty.PTR:
+                        if isinstance(a, Param):
+                            sub[id(p)] = binding.get(id(a))
+                        elif isinstance(a, GlobalVar):
+                            sub[id(p)] = a
+                scan(callee, sub, depth + 1)
+            if not ok[0]:
+                return
+
+    top = {id(p): p for p in fn.params if p.ty is Ty.PTR}
+    scan(fn, top, 0)
+    result = (params_w, globals_w) if ok[0] else None
+    fn._write_roots = (fn.ir_version, result)  # type: ignore[attr-defined]
+    return result
+
+
 def _stack_intrs(ctxs: Sequence[_WarpCtx], W: int,
                  strict: bool) -> _WarpCtx:
     """Batch per-row/_per-warp intrinsic contexts: row-varying values
@@ -2884,6 +3004,8 @@ def _drive_wg(bprog: "_BProgram", gens: List[Any], rows: Sequence[int],
                 events[r] = next(gens[r])
             except StopIteration:
                 done.append(r)
+            except ExecError as e:
+                raise _add_ctx(e, workgroup=wg, warp=r - base)
         exited.extend(done)
         if events and done:
             raise _barrier_divergence_error(
@@ -3147,6 +3269,8 @@ def _run_grid_batched(bprog: "_BProgram", bst: _DState,
     compact_ok = (runahead and n_wgs >= _COMPACT_MIN_WGS
                   and _COMPACT_FRACTION > 0.0)
     while True:
+        if _faults.ACTIVE:
+            _faults.maybe_fault("grid.exec")
         nodes = bprog.bblocks[bi].nodes
         nn = len(nodes)
         jump: Optional[int] = None
@@ -3221,7 +3345,44 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     (default) engages it whenever the launch is eligible.
     ``ride_along=False`` disables the vx_pred-loop ride-along and (unless
     ``grid=True``) grid-level batching (the PR 2 executor, kept as a
-    benchmark baseline)."""
+    benchmark baseline).
+
+    Error taxonomy (docs/robustness.md): semantic kernel errors raise
+    ``ExecError`` (a ``faults.KernelFault``), annotated with kernel /
+    workgroup / warp context; any OTHER exception escaping a demotable
+    fast path is re-raised as ``faults.EngineFault`` so the runtime's
+    degradation chain can retry one executor rung down.  The executor
+    actually selected is recorded in ``LAST_EXECUTOR[0]``."""
+    fn = module_fn
+    LAST_EXECUTOR[0] = None
+    depth = _faults.rung_depth()
+    try:
+        return _launch_impl(fn, buffers, params, scalar_args,
+                            globals_mem, decoded=decoded,
+                            batched=batched, ride_along=ride_along,
+                            grid=grid)
+    except ExecError as e:
+        raise _add_ctx(e, kernel=fn.name)
+    except _faults.EngineFault:
+        raise
+    except Exception as e:
+        rung = LAST_EXECUTOR[0]
+        if rung in _faults.DEMOTABLE:
+            raise _faults.EngineFault(
+                f"internal error in {rung} executor: "
+                f"{type(e).__name__}: {e}", rung=rung) from e
+        raise
+    finally:
+        _faults.trim_rungs(depth)
+
+
+def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
+                 params: LaunchParams,
+                 scalar_args: Optional[Dict[str, Any]] = None,
+                 globals_mem: Optional[Dict[str, np.ndarray]] = None,
+                 *, decoded: bool = True, batched: bool = True,
+                 ride_along: bool = True,
+                 grid: Optional[bool] = None) -> ExecStats:
     fn = module_fn
     scalar_args = scalar_args or {}
     mem = DeviceMemory(buffers, globals_mem)
@@ -3248,12 +3409,26 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
             argmap[id(p)] = np.full(W, v, dtype=_TY_DTYPE[p.ty])
 
     want_grid = ride_along if grid is None else grid
-    use_grid = bool(decoded and batched and want_grid
-                    and n_wg > 1 and not params.strict_oob_loads
-                    and _grid_batchable(fn, argmap, mem.globals_mem))
+    eligible = bool(decoded and batched and want_grid
+                    and n_wg > 1 and not params.strict_oob_loads)
+    if eligible:
+        # a crash inside the gate itself is a grid-rung engine fault
+        # (the launch wrapper demotes it), not a launch-killing error
+        LAST_EXECUTOR[0] = "grid"
+        use_grid = _grid_batchable(fn, argmap, mem.globals_mem)
+    else:
+        use_grid = False
     use_batched = bool(decoded and batched and n_warps > 1
                        and not params.strict_oob_loads
                        and not use_grid)
+    rung_label = ("grid" if use_grid else
+                  "wg" if use_batched else
+                  "decoded" if decoded else "oracle")
+    LAST_EXECUTOR[0] = rung_label
+    # scoped fault sites fire only under a demotable rung ("oracle"
+    # suppresses them), and the wrapper classifies escaping exceptions
+    # by this label; the wrapper trims the rung stack on exit
+    _faults.push_rung(rung_label)
     prog = _decode(fn, W, params.strict_oob_loads) \
         if decoded and not use_batched and not use_grid else None
     bprog = _decode_batched(fn, W, params.strict_oob_loads, n_warps,
@@ -3311,6 +3486,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
         shape_1d = params.grid_y == 1 and params.local_size_y == 1
         with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
             for c0 in range(0, n_wg, wg_chunk):
+                if _faults.ACTIVE:
+                    _faults.maybe_fault("chunk.dispatch")
                 nc = min(wg_chunk, n_wg - c0)
                 gprog = _decode_batched(fn, W, params.strict_oob_loads,
                                         nc * n_warps, grid_mode=True,
@@ -3347,8 +3524,15 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
                               mem, stats, fuel)
                 mem.grid_wgs = None
                 gst.warp_ctxs = row_ctxs
-                _run_grid_batched(gprog, gst, chunk_ids,
-                                  runahead=runahead)
+                try:
+                    _run_grid_batched(gprog, gst, chunk_ids,
+                                      runahead=runahead)
+                except ExecError as e:
+                    # lockstep-phase errors span the chunk; desync-phase
+                    # errors already carry their exact workgroup (the
+                    # innermost annotation wins)
+                    raise _add_ctx(
+                        e, workgroup=f"{chunk_ids[0]}..{chunk_ids[-1]}")
         return stats
 
     for wg_lin in range(n_wg):
@@ -3390,7 +3574,10 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
             bst.warp_ctxs = warp_ctxs
             with np.errstate(divide="ignore", invalid="ignore",
                              over="ignore"):
-                _run_wg_batched(bprog, bst, (gx, gy))
+                try:
+                    _run_wg_batched(bprog, bst, (gx, gy))
+                except ExecError as e:
+                    raise _add_ctx(e, workgroup=(gx, gy))
             continue
 
         warps: List[Generator[str, None, np.ndarray]] = []
@@ -3420,6 +3607,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
                         at_barrier.append(wi)
                     except StopIteration:
                         done.append(wi)
+                    except ExecError as e:
+                        raise _add_ctx(e, workgroup=(gx, gy), warp=wi)
                 exited.extend(done)
                 if at_barrier and done:
                     raise _barrier_divergence_error((gx, gy), at_barrier,
@@ -3705,4 +3894,8 @@ def reference_launch(fn: Function, buffers: Dict[str, np.ndarray],
                     at_barrier.append(ti)
                 except StopIteration:
                     pass
+                except ExecError as e:
+                    raise _add_ctx(e, kernel=fn.name,
+                                   workgroup=(gx, gy),
+                                   warp=ti // params.warp_size)
             alive = at_barrier

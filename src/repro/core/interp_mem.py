@@ -58,6 +58,8 @@ from typing import Optional
 
 import numpy as np
 
+from . import faults as _faults
+
 #: 64-byte lines of 4-byte elements (the cycle model's coalescing grain)
 CACHE_LINE_ELEMS = 16
 
@@ -166,6 +168,8 @@ def count_warp(safe: np.ndarray, mask: np.ndarray,
                fact: Optional[AffineFact] = None, ctx=None) -> int:
     """Line count for one warp access: ``safe`` (W,) in-bounds indices,
     ``mask`` (W,) with at least one active lane."""
+    if _faults.ACTIVE:
+        _faults.maybe_fault("handler.mem")
     if FAST:
         if fact is not None and ctx is not None and fact.ok(ctx):
             if fact.kind == "uni":
@@ -190,6 +194,8 @@ def count_rows(safe: np.ndarray, mask: np.ndarray, n_act: int,
     (``n_act`` = rows with a live mask, already tracked by the
     executor).  ``buflen`` is only consulted by the reference mode,
     which reproduces the historical row-offset ``np.unique``."""
+    if _faults.ACTIVE:
+        _faults.maybe_fault("handler.mem")
     if FAST:
         if fact is not None and ctx is not None and fact.ok(ctx):
             if fact.kind == "uni":
@@ -218,6 +224,8 @@ def count_gathered(a_ix: np.ndarray, fact: Optional[AffineFact] = None,
     vector (stores, atomics and the instruction-at-a-time oracle).  A
     gather preserves lane order, so monotone facts count runs without a
     sort."""
+    if _faults.ACTIVE:
+        _faults.maybe_fault("handler.mem")
     if FAST:
         n = len(a_ix)
         if fact is not None and ctx is not None and fact.ok(ctx):

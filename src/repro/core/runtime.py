@@ -29,14 +29,19 @@ import os
 import pickle
 import re
 import tempfile
+from collections import Counter
 from dataclasses import dataclass, field
 from pathlib import Path
+from time import perf_counter
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import faults as _faults
 from . import interp as _interp
-from .interp import ExecStats, LaunchParams, launch as interp_launch
+from .faults import EngineFault, KernelFault
+from .interp import ExecError, ExecStats, LaunchParams, \
+    launch as interp_launch
 from .passes.pipeline import CompiledKernel, PassConfig, run_pipeline
 from .passes.uniformity import UniformityInfo
 from .simx import CycleModel
@@ -166,9 +171,27 @@ def _thaw_info(frozen: Tuple) -> UniformityInfo:
                           {id(o) for o in de}, {id(o) for o in db})
 
 
+def _atomic_write(path: Path, payload: bytes) -> None:
+    """Crash-safe cache write, shared by the compile cache (.vck) and
+    the decode-plan cache (.vdp): the payload lands in a same-directory
+    tmp file, then ``os.replace`` commits it atomically — a crash (or
+    an injected ``cache.commit`` fault) before the rename leaves only
+    tmp debris, NEVER a truncated entry a concurrent reader could
+    deserialize."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        f.write(payload)
+    if _faults.ACTIVE:
+        _faults.maybe_fault("cache.commit")
+    os.replace(tmp, path)
+
+
 def _disk_load(path: Path, kernel_name: str,
                config: PassConfig) -> Optional[CompiledKernel]:
     try:
+        if _faults.ACTIVE:
+            _faults.maybe_fault("cache.load")
         with open(path, "rb") as f:
             module, frozen, stats = pickle.load(f)
         return CompiledKernel(module, module.functions[kernel_name],
@@ -184,15 +207,13 @@ def _disk_load(path: Path, kernel_name: str,
 
 def _disk_store(path: Path, ck: CompiledKernel) -> None:
     try:
-        path.parent.mkdir(parents=True, exist_ok=True)
+        if _faults.ACTIVE:
+            _faults.maybe_fault("cache.store")
         payload = pickle.dumps(
             (ck.module, _freeze_info(ck.module, ck.info), ck.stats))
-        fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
-        with os.fdopen(fd, "wb") as f:
-            f.write(payload)
-        os.replace(tmp, path)      # atomic: concurrent readers never see
-    except Exception:              # a partial entry
-        DISK_CACHE_STATS["errors"] += 1
+        _atomic_write(path, payload)
+    except Exception:              # cache write failure never fails a
+        DISK_CACHE_STATS["errors"] += 1   # compile
 
 
 def compile_kernel(kernel_handle, config: Optional[PassConfig] = None,
@@ -323,6 +344,8 @@ def _decode_plan_load(fn: Function) -> Optional[dict]:
         DISK_CACHE_STATS["decode_misses"] += 1
         return None
     try:
+        if _faults.ACTIVE:
+            _faults.maybe_fault("plan.load")
         with open(path, "rb") as f:
             plan = pickle.load(f)
         if plan.get("schema") != _interp._DECODE_PLAN_SCHEMA:
@@ -343,14 +366,11 @@ def _decode_plan_save(fn: Function, plan: dict) -> None:
     if d is None:
         return
     try:
+        if _faults.ACTIVE:
+            _faults.maybe_fault("plan.store")
         path = Path(d) / (_decode_plan_key(fn) + ".vdp")
-        path.parent.mkdir(parents=True, exist_ok=True)
-        payload = pickle.dumps(plan)
-        fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
-        with os.fdopen(fd, "wb") as f:
-            f.write(payload)
-        os.replace(tmp, path)      # atomic: concurrent readers never
-    except Exception:              # see a partial entry
+        _atomic_write(path, pickle.dumps(plan))
+    except Exception:              # plan persistence is best-effort
         DISK_CACHE_STATS["decode_errors"] += 1
 
 
@@ -363,19 +383,103 @@ class Buffer:
     data: np.ndarray
 
 
+# --------------------------------------------------------------------------
+# Executor degradation chain (docs/robustness.md).
+#
+# The four executors form rungs of a ladder, fastest first; an
+# ``EngineFault`` (internal fast-path failure — injected or real)
+# demotes the launch to the rung BELOW the executor that actually ran,
+# after rolling written buffers back to their pre-launch snapshot, so a
+# demotion is semantically invisible: the surviving attempt produces
+# bit-identical ExecStats and buffers to a launch that had taken the
+# slower path from the start.  ``KernelFault``s (semantic errors)
+# surface immediately — every rung would raise the same class.
+# --------------------------------------------------------------------------
+
+_RUNG_ORDER = ("grid", "wg", "decoded", "oracle")
+
+#: interp.launch kwargs per rung.  "grid" is the production default
+#: (auto-selects grid / wg-batched / decoded by eligibility); pinning
+#: grid=False / batched=False peels one fast path per rung.
+_RUNG_KWARGS: Dict[str, Dict[str, Any]] = {
+    "grid":    dict(decoded=True, batched=True),
+    "wg":      dict(decoded=True, batched=True, grid=False),
+    "decoded": dict(decoded=True, batched=False),
+    "oracle":  dict(decoded=False, batched=False),
+}
+
+
+@dataclass
+class LaunchAttempt:
+    rung: str                      # rung configuration requested
+    executor: Optional[str]        # executor interp actually selected
+    outcome: str                   # "ok" | "engine_fault" | "kernel_fault"
+    reason: str = ""
+    wall_ms: float = 0.0
+
+
+@dataclass
+class LaunchReport:
+    """Per-launch degradation record (``Runtime.last_report``)."""
+    kernel: str
+    attempts: List[LaunchAttempt] = field(default_factory=list)
+    executor: Optional[str] = None     # executor that produced the result
+    demotions: int = 0
+    rolled_back: int = 0
+    snapshot_bytes: int = 0
+    wall_ms: float = 0.0
+
+    def summary(self) -> str:
+        steps = " -> ".join(
+            f"{a.executor or a.rung}:{a.outcome}" for a in self.attempts)
+        return (f"@{self.kernel}: {steps} ({self.demotions} demotion(s), "
+                f"{self.rolled_back} rollback(s), {self.wall_ms:.2f} ms)")
+
+
+#: process-lifetime launch/degradation counters (GRID_TELEMETRY's
+#: pattern: NOT part of ExecStats — stats stay bit-identical across
+#: executors by contract).  Printed by ``benchmarks/run.py --profile``.
+LAUNCH_TELEMETRY: Dict[str, Any] = {}
+
+
+def reset_launch_telemetry() -> None:
+    LAUNCH_TELEMETRY.clear()
+    LAUNCH_TELEMETRY.update(
+        launches=0, demotions=0, rollbacks=0, engine_faults=0,
+        kernel_faults=0, by_executor=Counter(),
+        demotion_reasons=Counter())
+
+
+reset_launch_telemetry()
+
+
 class Runtime:
-    """A Vortex device-runtime stand-in with CUDA/OpenCL host APIs."""
+    """A Vortex device-runtime stand-in with CUDA/OpenCL host APIs.
+
+    ``degrade=True`` (default) arms the executor degradation chain: an
+    ``EngineFault`` in a fast path rolls written buffers back to their
+    pre-launch snapshot and retries one rung down (grid -> wg-batched
+    -> decoded -> oracle), recording every attempt in
+    ``self.last_report``.  ``transactional=False`` disables the
+    write-root snapshots — and with them the chain, since retrying over
+    partially-committed stores (or re-applied atomics) would be unsound;
+    an EngineFault then surfaces to the caller."""
 
     def __init__(self, *, warp_size: int = 32,
                  shared_in_local: bool = True,
-                 batched: bool = True) -> None:
+                 batched: bool = True,
+                 degrade: bool = True,
+                 transactional: bool = True) -> None:
         self.warp_size = warp_size
         self.batched = batched     # workgroup-batched lockstep executor
+        self.degrade = degrade
+        self.transactional = transactional
         self.buffers: Dict[str, np.ndarray] = {}
         self.globals_mem: Dict[str, np.ndarray] = {}
         self._pending_symbols: Dict[str, np.ndarray] = {}
         self.cycle_model = CycleModel(shared_in_local=shared_in_local)
         self.last_stats: Optional[ExecStats] = None
+        self.last_report: Optional[LaunchReport] = None
 
     # -- OpenCL-ish -----------------------------------------------------------
     def create_buffer(self, name: str, data: np.ndarray) -> Buffer:
@@ -420,6 +524,50 @@ class Runtime:
         self._pending_symbols[symbol] = arr
 
     # -- launch ------------------------------------------------------------------
+    def _snapshot_write_roots(self, kernel_fn: Function,
+                              report: LaunchReport) -> Dict[Any, Any]:
+        """Transactional snapshot: copy the buffers this kernel may
+        WRITE (interp.write_root_buffers; everything bound when the
+        scan cannot resolve a store root).  Read-only buffers are never
+        copied — that is what keeps the clean-path overhead inside the
+        <5% bench_robust budget.  Also records the global names alive
+        now, so a rollback can drop globals the launch lazily created."""
+        roots = _interp.write_root_buffers(kernel_fn)
+        snap: Dict[Any, Any] = {}
+        if roots is None:
+            for name, arr in self.buffers.items():
+                snap[("b", name)] = arr.copy()
+            for name, arr in self.globals_mem.items():
+                snap[("g", name)] = arr.copy()
+        else:
+            params_w, globals_w = roots
+            for name in params_w:
+                arr = self.buffers.get(name)
+                if arr is not None:
+                    snap[("b", name)] = arr.copy()
+            for name in globals_w:
+                arr = self.globals_mem.get(name)
+                if arr is not None:
+                    snap[("g", name)] = arr.copy()
+        snap["__globals_keys__"] = set(self.globals_mem)
+        report.snapshot_bytes = sum(
+            a.nbytes for k, a in snap.items() if isinstance(k, tuple))
+        return snap
+
+    def _rollback(self, snap: Dict[Any, Any]) -> None:
+        for key, arr in snap.items():
+            if not isinstance(key, tuple):
+                continue
+            kind, name = key
+            dst = self.buffers[name] if kind == "b" \
+                else self.globals_mem[name]
+            dst[:] = arr
+        # globals the failed attempt lazily zero-created: drop them so
+        # the retry re-creates them identically
+        for name in list(self.globals_mem):
+            if name not in snap["__globals_keys__"]:
+                del self.globals_mem[name]
+
     def launch(self, kernel_fn: Function, *, grid: int, block: int,
                scalar_args: Optional[Dict[str, Any]] = None) -> ExecStats:
         # materialize staged symbols now that "addresses are resolved"
@@ -433,12 +581,71 @@ class Runtime:
 
         params = LaunchParams(grid=grid, local_size=block,
                               warp_size=self.warp_size)
-        stats = interp_launch(kernel_fn, self.buffers, params,
-                              scalar_args=scalar_args,
-                              globals_mem=self.globals_mem,
-                              batched=self.batched)
-        self.last_stats = stats
-        return stats
+        chain = list(_RUNG_ORDER) if self.batched \
+            else list(_RUNG_ORDER[_RUNG_ORDER.index("decoded"):])
+        if not (self.degrade and self.transactional):
+            chain = chain[:1]      # single attempt, no retry
+        report = LaunchReport(kernel=kernel_fn.name)
+        self.last_report = report
+        LAUNCH_TELEMETRY["launches"] += 1
+        txn: Optional[Dict[Any, Any]] = None
+        t_launch = perf_counter()
+        i = 0
+        while True:
+            rung = chain[i]
+            if txn is None and i + 1 < len(chain):
+                txn = self._snapshot_write_roots(kernel_fn, report)
+            t0 = perf_counter()
+            try:
+                stats = interp_launch(kernel_fn, self.buffers, params,
+                                      scalar_args=scalar_args,
+                                      globals_mem=self.globals_mem,
+                                      **_RUNG_KWARGS[rung])
+            except EngineFault as e:
+                used = getattr(e, "rung", None) \
+                    or _interp.LAST_EXECUTOR[0] or rung
+                report.attempts.append(LaunchAttempt(
+                    rung, used, "engine_fault", str(e),
+                    (perf_counter() - t0) * 1e3))
+                LAUNCH_TELEMETRY["engine_faults"] += 1
+                # demote BELOW the executor that actually ran (a
+                # gate-refused grid request already fell back before
+                # the fault fired)
+                k = _RUNG_ORDER.index(used) if used in _RUNG_ORDER \
+                    else _RUNG_ORDER.index(rung)
+                nxt = None
+                for j in range(i + 1, len(chain)):
+                    if _RUNG_ORDER.index(chain[j]) > k:
+                        nxt = j
+                        break
+                if nxt is None or txn is None:
+                    report.wall_ms = (perf_counter() - t_launch) * 1e3
+                    raise
+                self._rollback(txn)
+                report.rolled_back += 1
+                report.demotions += 1
+                LAUNCH_TELEMETRY["rollbacks"] += 1
+                LAUNCH_TELEMETRY["demotions"] += 1
+                LAUNCH_TELEMETRY["demotion_reasons"][
+                    getattr(e, "site", None) or "exec"] += 1
+                i = nxt
+                continue
+            except KernelFault as e:
+                # semantic: deterministic, every rung agrees — surface
+                report.attempts.append(LaunchAttempt(
+                    rung, _interp.LAST_EXECUTOR[0], "kernel_fault",
+                    str(e), (perf_counter() - t0) * 1e3))
+                LAUNCH_TELEMETRY["kernel_faults"] += 1
+                report.wall_ms = (perf_counter() - t_launch) * 1e3
+                raise
+            used = _interp.LAST_EXECUTOR[0] or rung
+            report.attempts.append(LaunchAttempt(
+                rung, used, "ok", "", (perf_counter() - t0) * 1e3))
+            report.executor = used
+            report.wall_ms = (perf_counter() - t_launch) * 1e3
+            LAUNCH_TELEMETRY["by_executor"][used] += 1
+            self.last_stats = stats
+            return stats
 
     def launch_kernel(self, kernel_handle, *, grid: int, block: int,
                       config: Optional[PassConfig] = None,

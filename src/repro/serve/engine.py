@@ -26,6 +26,7 @@ class Request:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None  # set when the request failed alone
 
 
 class ServeEngine:
@@ -47,29 +48,51 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def _fail(self, s: int, req: Request, e: BaseException) -> None:
+        """Request isolation: a failing request is marked failed with
+        its error, its slot is freed, and the batch continues."""
+        req.error = f"{type(e).__name__}: {e}"
+        req.done = True
+        self.active[s] = None
+        self.pos[s] = 0
+        self.last_tok[s] = 0
+
+    def _prefill(self, s: int, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) + req.max_new > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)} tokens) "
+                f"+ max_new ({req.max_new}) exceeds max_seq "
+                f"({self.max_seq})")
+        # prefill by stepping the prompt token by token (teacher
+        # forcing through decode_step keeps one compiled program;
+        # a fused prefill kernel is the §Perf variant)
+        self.pos[s] = 0
+        # feed all but the last prompt token; step() feeds the
+        # last one and samples the first new token from its logits
+        for t in req.prompt[:-1]:
+            tok = jnp.zeros((self.slots, 1), jnp.int32
+                            ).at[s, 0].set(int(t))
+            # copy: jnp.asarray may alias the host buffer
+            # zero-copy on CPU, and the decode dispatch is
+            # asynchronous — mutating self.pos below would race
+            # with the still-executing program
+            pos = jnp.asarray(np.array(self.pos))
+            _, self.cache = self._decode(self.params, self.cache,
+                                         tok, pos)
+            self.pos[s] += 1
+        self.last_tok[s] = int(req.prompt[-1])
+
     def _admit(self) -> None:
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
                 req = self.queue.popleft()
                 self.active[s] = req
-                # prefill by stepping the prompt token by token (teacher
-                # forcing through decode_step keeps one compiled program;
-                # a fused prefill kernel is the §Perf variant)
-                self.pos[s] = 0
-                # feed all but the last prompt token; step() feeds the
-                # last one and samples the first new token from its logits
-                for t in req.prompt[:-1]:
-                    tok = jnp.zeros((self.slots, 1), jnp.int32
-                                    ).at[s, 0].set(int(t))
-                    # copy: jnp.asarray may alias the host buffer
-                    # zero-copy on CPU, and the decode dispatch is
-                    # asynchronous — mutating self.pos below would race
-                    # with the still-executing program
-                    pos = jnp.asarray(np.array(self.pos))
-                    _, self.cache = self._decode(self.params, self.cache,
-                                                 tok, pos)
-                    self.pos[s] += 1
-                self.last_tok[s] = int(req.prompt[-1])
+                try:
+                    self._prefill(s, req)
+                except Exception as e:
+                    self._fail(s, req, e)
 
     def step(self) -> int:
         """One continuous-batching decode step; returns #live slots."""
@@ -86,15 +109,23 @@ class ServeEngine:
         for s in live:
             req = self.active[s]
             assert req is not None
-            req.out.append(int(nxt[s]))
-            self.last_tok[s] = nxt[s]
-            self.pos[s] += 1
-            if len(req.out) >= req.max_new or self.pos[s] >= self.max_seq - 1:
-                req.done = True
-                self.active[s] = None
+            try:
+                req.out.append(int(nxt[s]))
+                self.last_tok[s] = nxt[s]
+                self.pos[s] += 1
+                if (len(req.out) >= req.max_new
+                        or self.pos[s] >= self.max_seq - 1):
+                    req.done = True
+                    self.active[s] = None
+            except Exception as e:
+                self._fail(s, req, e)
         return len(live)
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 return
+        live = [req.rid for req in self.active if req is not None]
+        raise RuntimeError(
+            f"run_until_drained: not drained after {max_steps} steps "
+            f"(live requests: {live}, queued: {len(self.queue)})")

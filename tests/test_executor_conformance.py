@@ -332,6 +332,28 @@ def test_private_shared_kernels_truly_take_the_grid_path(name):
         np.testing.assert_array_equal(oracle[3][k], got[3][k])
 
 
+@pytest.mark.parametrize("label", sorted(EXECUTORS))
+def test_exec_errors_carry_context(label):
+    """Error-class conformance extends to error CONTEXT: every
+    executor's semantic errors name the kernel and the workgroup they
+    died in (the barrier-divergence error's format), so a production
+    out-of-fuel or bad-binop report is actionable."""
+    handle, make = CASES["tk_saxpy"]
+    rng = np.random.default_rng(7)
+    bufs0, scalars, params = make(rng)
+    params = interp.LaunchParams(grid=params.grid,
+                                 local_size=params.local_size,
+                                 warp_size=params.warp_size, fuel=50)
+    fn = _compiled("tk_saxpy")
+    bufs = {k: v.copy() for k, v in bufs0.items()}
+    with pytest.raises(interp.ExecError) as ei:
+        interp.launch(fn, bufs, params, scalar_args=scalars,
+                      **EXECUTORS[label])
+    msg = str(ei.value)
+    assert "in @saxpy" in msg, (label, msg)
+    assert "workgroup" in msg, (label, msg)
+
+
 # --------------------------------------------------------------------------
 # hypothesis: ragged trip counts and divergence patterns vs the oracle
 # --------------------------------------------------------------------------

@@ -318,3 +318,58 @@ def test_runtime_compile_cache():
     rt.launch_kernel(h, grid=2, block=32, scalar_args={"n": 64})
     np.testing.assert_allclose(rt.read_buffer("z"), x + y, atol=1e-6)
     runtime.clear_compile_cache()
+
+
+def test_compile_cache_crash_mid_write_leaves_no_truncated_entry(
+        tmp_path, monkeypatch):
+    """A crash between the tmp write and the rename (the cache.commit
+    injection site inside _atomic_write) must never leave a partial
+    .vck a later process could load: only tmp debris, the compile still
+    succeeds, and a clean recompile persists a loadable entry."""
+    from repro.core import faults
+
+    monkeypatch.setenv("VOLT_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("VOLT_DISK_CACHE", "1")
+    runtime.clear_compile_cache()
+    h = BENCHES["vecadd"].handle
+    errs0 = runtime.DISK_CACHE_STATS["errors"]
+    with faults.inject("cache.commit"):
+        ck = runtime.compile_kernel(h, use_cache=False)
+    assert ck is not None, "cache-write failure must never fail compile"
+    assert runtime.DISK_CACHE_STATS["errors"] > errs0
+    assert not list(tmp_path.glob("*.vck")), \
+        "crash mid-write must not commit an entry"
+    # the clean retry commits, and the entry actually loads
+    runtime.compile_kernel(h, use_cache=False)
+    paths = list(tmp_path.glob("*.vck"))
+    assert len(paths) == 1
+    hits0 = runtime.DISK_CACHE_STATS["hits"]
+    runtime.compile_kernel(h, use_cache=False)
+    assert runtime.DISK_CACHE_STATS["hits"] > hits0
+    runtime.clear_compile_cache()
+
+
+def test_decode_plan_crash_mid_write_leaves_no_truncated_entry(
+        tmp_path, monkeypatch):
+    """Same contract for the decode-plan cache (.vdp)."""
+    from repro.core import faults
+
+    monkeypatch.setenv("VOLT_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("VOLT_DISK_CACHE", "1")
+
+    def fresh_fn():
+        return run_pipeline(K.saxpy.build(None), "saxpy",
+                            ABLATION_LADDER[-1]).fn
+
+    with faults.inject("cache.commit"):
+        prog = interp._decode_batched(fresh_fn(), 32, False, 1,
+                                      grid_mode=True)
+    assert prog is not None
+    assert not list(tmp_path.glob("*.vdp")), \
+        "crash mid-write must not commit a plan"
+    # clean rerun persists a loadable plan
+    interp._decode_batched(fresh_fn(), 32, False, 1, grid_mode=True)
+    assert list(tmp_path.glob("*.vdp"))
+    hits0 = runtime.DISK_CACHE_STATS["decode_hits"]
+    interp._decode_batched(fresh_fn(), 32, False, 1, grid_mode=True)
+    assert runtime.DISK_CACHE_STATS["decode_hits"] > hits0

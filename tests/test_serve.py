@@ -67,6 +67,58 @@ def test_engine_matches_manual_decode(small_model):
     assert r.out == out
 
 
+def test_failing_request_fails_alone(small_model):
+    """Request isolation: a bad request is marked failed with its error
+    and its slot is freed; the rest of the batch completes normally."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=2, max_seq=32)
+    good = [Request(rid=i, prompt=np.array([3, 1, 4], np.int32),
+                    max_new=3) for i in range(3)]
+    bad = Request(rid=99, prompt=np.array([], np.int32), max_new=3)
+    eng.submit(good[0])
+    eng.submit(bad)
+    eng.submit(good[1])
+    eng.submit(good[2])
+    eng.run_until_drained()
+    assert bad.done and bad.error is not None
+    assert "empty prompt" in bad.error
+    assert bad.out == []
+    for r in good:
+        assert r.done and r.error is None
+        assert len(r.out) == 3
+    # identical prompts decode identically — the failed neighbour left
+    # no residue in the surviving slots
+    assert good[0].out == good[1].out == good[2].out
+
+
+def test_too_long_request_fails_alone(small_model):
+    """A prompt that cannot fit max_new tokens under max_seq is
+    rejected at admission, not half-generated."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=2, max_seq=16)
+    long = Request(rid=0, prompt=np.arange(14, dtype=np.int32),
+                   max_new=8)
+    ok = Request(rid=1, prompt=np.array([2, 7], np.int32), max_new=4)
+    eng.submit(long)
+    eng.submit(ok)
+    eng.run_until_drained()
+    assert long.done and long.error is not None
+    assert "exceeds max_seq" in long.error
+    assert ok.done and ok.error is None and len(ok.out) == 4
+
+
+def test_run_until_drained_raises_on_max_steps(small_model):
+    """Hitting the step budget raises a descriptive error instead of
+    returning silently with requests still live."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=2, max_seq=64)
+    r = Request(rid=7, prompt=np.array([1, 2], np.int32), max_new=32)
+    eng.submit(r)
+    with pytest.raises(RuntimeError, match=r"not drained after 3 steps"):
+        eng.run_until_drained(max_steps=3)
+    assert not r.done
+
+
 def test_case_study_2_memcpy_to_symbol():
     """cudaMemcpyToSymbol: staged host data materializes at launch."""
     import sys
