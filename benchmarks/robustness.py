@@ -1,21 +1,37 @@
 """Robustness bench (``bench_robust``): what fault isolation costs.
 
-Two questions, answered on a grid-eligible cross-section of the suite:
+Four questions, answered on a grid-eligible cross-section of the suite:
 
   * **Clean-path snapshot overhead** — the degradation chain snapshots
     the written-root buffers before the first demotable attempt
     (core/runtime.py).  ``snapshot_ratio`` is
     ``Runtime(transactional=False)`` wall time over the default
     transactional wall time for an un-faulted launch; the aggregate
-    geomean is the CHECKED metric (acceptance: > 0.95, i.e. the
+    geomean is a CHECKED metric (acceptance: > 0.95, i.e. the
     snapshot costs < 5%).
+
+  * **Governor clean-path overhead** — with a deadline + memory budget
+    armed and the breaker watching but nothing tripping, how much does
+    the governor's strided clock polling and budget accounting cost?
+    ``governed_ratio`` is ``Runtime(govern=False)`` wall time over the
+    governed wall time; the aggregate ``governed_clean_geomean`` is a
+    CHECKED metric (acceptance: > 0.97, i.e. armed-but-untripped costs
+    < 3%).
 
   * **Degraded-mode throughput per rung** — with a deterministic
     injection forcing a demotion (chunk.dispatch -> wg-batched,
     grid.exec -> decoded, decode -> oracle floor), how much slower is a
     recovered launch than the clean grid path?  Reported as
     ``clean_ms / demoted_ms`` per rung (informational: these quantify
-    the degradation ladder, they are not regressions).
+    the degradation ladder, they are not regressions).  Measured with
+    ``govern=False`` so the breaker cannot pin mid-measurement and
+    every sample pays the full demotion walk.
+
+  * **Breaker-pinned recovery** — under the same persistent fast-path
+    fault, an open breaker pins launches at the last-good rung,
+    skipping the doomed attempt + its snapshot.  The aggregate
+    ``breaker_pinned_recovery`` (demoted-walk time over pinned time,
+    CHECKED) is the speedup the breaker buys during an outage.
 
 Emits the usual ``name,us_per_call,derived`` CSV lines plus the
 machine-readable dict benchmarks/run.py folds into BENCH_perf.json.
@@ -27,7 +43,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import faults, interp, runtime
+from repro.core import faults, governor, interp, runtime
 from repro.core.passes.pipeline import ABLATION_LADDER
 from repro.volt_bench import BENCHES
 
@@ -55,9 +71,15 @@ def _best_of(fn, reps: int = REPS, inner: int = INNER) -> float:
     return best
 
 
-def _launcher(b, bufs0, scalars, params, *, transactional=True):
+#: armed-but-untrippable governor config for the clean-overhead arm
+_GOV_CFG = governor.GovernorConfig(deadline_ms=10_000.0,
+                                   mem_budget=1 << 40)
+
+
+def _launcher(b, bufs0, scalars, params, *, transactional=True,
+              **rt_kw):
     ck = runtime.compile_kernel(b.handle, FULL)
-    rt = runtime.Runtime(transactional=transactional)
+    rt = runtime.Runtime(transactional=transactional, **rt_kw)
     for k, v in bufs0.items():
         rt.create_buffer(k, v.copy())
 
@@ -69,9 +91,9 @@ def _launcher(b, bufs0, scalars, params, *, transactional=True):
 
 
 def _timed_launch(b, bufs0, scalars, params, *, transactional=True,
-                  inject_site: Optional[str] = None):
+                  inject_site: Optional[str] = None, **rt_kw):
     body = _launcher(b, bufs0, scalars, params,
-                     transactional=transactional)
+                     transactional=transactional, **rt_kw)
     if inject_site is None:
         t = _best_of(body)
     else:
@@ -87,8 +109,8 @@ def _geomean(xs: List[float]) -> float:
 def main(benches: Optional[List[str]] = None) -> Dict:
     names = benches or ROBUST_BENCHES
     out: Dict[str, Dict[str, float]] = {}
-    print("bench          txn_ms  plain_ms  snap_ratio   wg_rel  "
-          "dec_rel  orc_rel", flush=True)
+    print("bench          txn_ms  plain_ms  snap_ratio  gov_ratio  "
+          "brk_rel   wg_rel  dec_rel  orc_rel", flush=True)
     for name in names:
         b = BENCHES[name]
         rng = np.random.default_rng(7)
@@ -107,23 +129,73 @@ def main(benches: Optional[List[str]] = None) -> Dict:
         assert rep.demotions == 0 and rep.attempts[-1].outcome == "ok"
         clean_exec = rep.executor
 
-        # degraded rungs, each forced by a deterministic injection
+        # governor clean-path overhead: deadline + budget armed,
+        # breaker watching, nothing tripping — interleaved with an
+        # ungoverned runtime so drift hits both arms
+        body_gov = _launcher(b, bufs0, scalars, params,
+                             governor=_GOV_CFG)
+        body_ungov = _launcher(b, bufs0, scalars, params,
+                               govern=False)
+        t_gov = t_ungov = float("inf")
+        # 5 interleave rounds (vs 3 for the snapshot arm): the <3%
+        # acceptance band is tighter, so the min-of estimate needs the
+        # extra samples to sit below measurement noise
+        for _ in range(5):
+            t_gov = min(t_gov, _best_of(body_gov))
+            t_ungov = min(t_ungov, _best_of(body_ungov))
+        rep_gov = body_gov.rt.last_report
+        assert rep_gov.demotions == 0 and not rep_gov.deadline_expired
+        assert rep_gov.breaker == "closed"
+
+        # degraded rungs, each forced by a deterministic injection.
+        # govern=False: the breaker must not pin mid-measurement —
+        # every sample pays the full demotion walk by construction
         mw = interp.fold_warps(params, 4)
         t_wg, rep_wg = _timed_launch(b, bufs0, scalars, mw,
-                                     inject_site="chunk.dispatch")
-        t_wg_clean, _ = _timed_launch(b, bufs0, scalars, mw)
+                                     inject_site="chunk.dispatch",
+                                     govern=False)
+        t_wg_clean, _ = _timed_launch(b, bufs0, scalars, mw,
+                                      govern=False)
         t_dec, rep_dec = _timed_launch(b, bufs0, scalars, params,
-                                       inject_site="grid.exec")
+                                       inject_site="grid.exec",
+                                       govern=False)
         t_orc, rep_orc = _timed_launch(b, bufs0, scalars, params,
-                                       inject_site="decode")
+                                       inject_site="decode",
+                                       govern=False)
         for r in (rep_wg, rep_dec, rep_orc):
             assert r.demotions >= 1 and r.attempts[-1].outcome == "ok"
         assert rep_orc.executor == "oracle"
+
+        # breaker-pinned recovery under the same persistent fault:
+        # ungoverned runtime re-walks the demotion chain every launch;
+        # an open breaker (threshold=1, probes disabled) pins at the
+        # last-good rung
+        body_walk = _launcher(b, bufs0, scalars, params, govern=False)
+        body_pin = _launcher(b, bufs0, scalars, params,
+                             governor=governor.GovernorConfig(
+                                 breaker_threshold=1,
+                                 breaker_probe_every=10 ** 9))
+        with faults.inject("grid.exec"):
+            body_pin()                  # trip once: breaker opens
+            t_walk = t_pin = float("inf")
+            for _ in range(3):
+                t_walk = min(t_walk, _best_of(body_walk))
+                t_pin = min(t_pin, _best_of(body_pin))
+        rep_pin = body_pin.rt.last_report
+        assert rep_pin.pinned_rung is not None
+        assert rep_pin.demotions == 0
+        assert body_walk.rt.last_report.demotions >= 1
 
         out[name] = {
             "txn_ms": t_txn * 1e3,
             "plain_ms": t_plain * 1e3,
             "snapshot_ratio": t_plain / t_txn,
+            "governed_ms": t_gov * 1e3,
+            "ungoverned_ms": t_ungov * 1e3,
+            "governed_ratio": t_ungov / t_gov,
+            "demoted_walk_ms": t_walk * 1e3,
+            "breaker_pinned_ms": t_pin * 1e3,
+            "breaker_pinned_ratio": t_walk / t_pin,
             "clean_executor": clean_exec,
             "wg_demoted_ms": t_wg * 1e3,
             "rung_wg_relative": t_wg_clean / t_wg,
@@ -134,13 +206,19 @@ def main(benches: Optional[List[str]] = None) -> Dict:
         }
         r = out[name]
         print(f"{name:12s} {r['txn_ms']:8.2f} {r['plain_ms']:9.2f} "
-              f"{r['snapshot_ratio']:11.3f} {r['rung_wg_relative']:8.3f} "
+              f"{r['snapshot_ratio']:11.3f} {r['governed_ratio']:10.3f} "
+              f"{r['breaker_pinned_ratio']:8.3f} "
+              f"{r['rung_wg_relative']:8.3f} "
               f"{r['rung_decoded_relative']:8.3f} "
               f"{r['rung_oracle_relative']:8.3f}", flush=True)
 
     agg = {
         "snapshot_clean_geomean": _geomean(
             [v["snapshot_ratio"] for v in out.values()]),
+        "governed_clean_geomean": _geomean(
+            [v["governed_ratio"] for v in out.values()]),
+        "breaker_pinned_recovery": _geomean(
+            [v["breaker_pinned_ratio"] for v in out.values()]),
         "rung_wg_relative": _geomean(
             [v["rung_wg_relative"] for v in out.values()]),
         "rung_decoded_relative": _geomean(
@@ -152,6 +230,14 @@ def main(benches: Optional[List[str]] = None) -> Dict:
           f"{(1 / agg['snapshot_clean_geomean'] - 1) * 100:+.1f}% "
           f"(clean/txn ratio {agg['snapshot_clean_geomean']:.3f}; "
           f"acceptance > 0.95)", flush=True)
+    print(f"governor overhead geomean: "
+          f"{(1 / agg['governed_clean_geomean'] - 1) * 100:+.1f}% "
+          f"(ungoverned/governed ratio "
+          f"{agg['governed_clean_geomean']:.3f}; acceptance > 0.97)",
+          flush=True)
+    print(f"breaker-pinned recovery: demoted walk "
+          f"{agg['breaker_pinned_recovery']:.2f}x slower than pinned",
+          flush=True)
     print(f"degraded throughput vs clean: wg "
           f"{agg['rung_wg_relative']:.2f}x, decoded "
           f"{agg['rung_decoded_relative']:.2f}x, oracle "

@@ -72,6 +72,13 @@ CHECKED_METRICS = [
     # clean/transactional wall-time ratio: a drop below the committed
     # value means the degradation chain's snapshot got more expensive
     ("bench_robust", "snapshot_clean_geomean"),
+    # ungoverned/governed wall-time ratio: a drop means the armed-but-
+    # untripped governor (deadline polling, budget accounting, breaker
+    # bookkeeping) got more expensive
+    ("bench_robust", "governed_clean_geomean"),
+    # demoted-walk/pinned wall-time ratio: a drop means an open breaker
+    # no longer buys back the doomed fast-path attempt during outages
+    ("bench_robust", "breaker_pinned_recovery"),
 ]
 
 #: top-N functions shown per section under ``--profile``

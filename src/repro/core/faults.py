@@ -52,6 +52,25 @@ class KernelFault(Exception):
     and every error-class conformance comparison is unchanged."""
 
 
+class DeadlineExceeded(KernelFault):
+    """Launch wall-clock budget expired (``core/governor.py``).
+
+    A KernelFault, not an EngineFault: the deadline is the CALLER's
+    verdict on the launch, so the chain must not retry it on a slower
+    rung.  Carries the partial ``ExecStats`` at expiry; when raised
+    through ``Runtime.launch`` the buffers are rolled back (a timed-out
+    launch is bit-invisible) and ``.report`` holds the LaunchReport."""
+
+    def __init__(self, msg: str, *, deadline_ms: Optional[float] = None,
+                 elapsed_ms: Optional[float] = None,
+                 stats: Optional[object] = None) -> None:
+        super().__init__(msg)
+        self.deadline_ms = deadline_ms
+        self.elapsed_ms = elapsed_ms
+        self.stats = stats
+        self.report: Optional[object] = None
+
+
 class EngineFault(RuntimeError):
     """Internal fast-path failure — triggers demotion, never results."""
 
@@ -64,6 +83,12 @@ class EngineFault(RuntimeError):
 
 class InjectedFault(EngineFault):
     """An ``EngineFault`` raised by the injection harness itself."""
+
+
+class FaultSpecError(ValueError):
+    """Malformed ``VOLT_FAULT`` / ``install_spec`` component.  The
+    message names the offending component so a fat-fingered env var
+    fails in one readable line instead of a bare ``ValueError``."""
 
 
 # --------------------------------------------------------------------------
@@ -99,6 +124,14 @@ register_site("wg.exec", "workgroup-batched lockstep node walk")
 register_site("decoded.exec", "per-warp decoded node walk")
 register_site("handler.mem", "coalescing-engine memory counting handlers")
 register_site("handler.atomic", "contended-RMW serialization ladder")
+register_site("mem.alloc", "device-memory lazy allocation (shared tiles, "
+              "zero-filled globals) — also where VOLT_MEM_BUDGET "
+              "overruns surface")
+# serve engine: per-request recovery (retry with backoff, then fail the
+# one request) — never a kernel-launch demotion -------------------------------
+register_site("serve.prefill", "serve-engine prompt prefill", scoped=False)
+register_site("serve.decode", "serve-engine batched decode step",
+              scoped=False)
 
 #: executor rungs an EngineFault can demote AWAY from (the oracle is the
 #: floor: scoped sites never fire there)
@@ -211,22 +244,62 @@ def inject(site: str, prob: float = 1.0, seed: int = 0,
         _sync_active()
 
 
+def _parse_component(part: str) -> _Injection:
+    """One ``site[:prob[:seed]]`` component -> validated _Injection."""
+    bits = part.split(":")
+    if len(bits) > 3:
+        raise FaultSpecError(
+            f"fault spec component {part!r}: expected site[:prob[:seed]]"
+            f", got {len(bits)} ':'-separated fields")
+    site = bits[0]
+    if not site:
+        raise FaultSpecError(
+            f"fault spec component {part!r}: empty site name")
+    if any(ch in site for ch in "*?["):
+        if not any(fnmatch.fnmatchcase(s, site) for s in SITES):
+            raise FaultSpecError(
+                f"fault spec component {part!r}: pattern {site!r} "
+                f"matches no registered site (known: {sorted(SITES)})")
+    elif site not in SITES:
+        raise FaultSpecError(
+            f"fault spec component {part!r}: unknown site {site!r} "
+            f"(known: {sorted(SITES)})")
+    prob = 1.0
+    if len(bits) > 1 and bits[1]:
+        try:
+            prob = float(bits[1])
+        except ValueError:
+            raise FaultSpecError(
+                f"fault spec component {part!r}: prob {bits[1]!r} is "
+                f"not a number") from None
+        if not 0.0 <= prob <= 1.0:
+            raise FaultSpecError(
+                f"fault spec component {part!r}: prob must be in "
+                f"[0, 1], got {prob}")
+    seed = 0
+    if len(bits) > 2 and bits[2]:
+        try:
+            seed = int(bits[2])
+        except ValueError:
+            raise FaultSpecError(
+                f"fault spec component {part!r}: seed {bits[2]!r} is "
+                f"not an integer") from None
+        if seed < 0:
+            raise FaultSpecError(
+                f"fault spec component {part!r}: seed must be >= 0, "
+                f"got {seed}")
+    return _Injection(site, prob, seed, 0)
+
+
 def install_spec(spec: str) -> List[_Injection]:
     """Arm injections from a ``site:prob:seed[,...]`` spec (the
     VOLT_FAULT format; prob and seed optional).  Stays armed until
-    ``clear()``."""
-    out = []
-    for part in spec.split(","):
-        part = part.strip()
-        if not part:
-            continue
-        bits = part.split(":")
-        site = bits[0]
-        prob = float(bits[1]) if len(bits) > 1 and bits[1] else 1.0
-        seed = int(bits[2]) if len(bits) > 2 and bits[2] else 0
-        inj = _Injection(site, prob, seed, 0)
-        _INJECTIONS.append(inj)
-        out.append(inj)
+    ``clear()``.  The whole spec is validated BEFORE anything is armed
+    — a bad component raises ``FaultSpecError`` naming it and leaves
+    the harness untouched."""
+    out = [_parse_component(part.strip())
+           for part in spec.split(",") if part.strip()]
+    _INJECTIONS.extend(out)
     _sync_active()
     return out
 

@@ -32,6 +32,7 @@ from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import faults as _faults
+from . import governor as _gov
 from . import interp_mem as _mem
 from .passes.analysis import affine_mem_facts
 from .vir import (AddrSpace, BINOPS, Block, Const, Function, GlobalVar,
@@ -268,7 +269,8 @@ class DeviceMemory:
     """Buffers for params (by name), module globals, and per-wg shared."""
 
     def __init__(self, buffers: Dict[str, np.ndarray],
-                 globals_mem: Optional[Dict[str, np.ndarray]] = None) -> None:
+                 globals_mem: Optional[Dict[str, np.ndarray]] = None,
+                 budget: Optional[int] = None) -> None:
         self.buffers = buffers
         self.globals_mem = globals_mem or {}
         self.shared: Dict[int, np.ndarray] = {}   # id(GlobalVar) -> array
@@ -277,6 +279,34 @@ class DeviceMemory:
         # TILE TABLE — one private row slice per batched workgroup —
         # instead of one workgroup's array
         self.grid_wgs: Optional[int] = None
+        # VOLT_MEM_BUDGET governance (core/governor.py): lazy allocs
+        # are charged against ``budget``; overruns raise an EngineFault
+        # at site "mem.alloc" BEFORE allocating, so the chain retries
+        # on a smaller-footprint rung (per-wg tiles instead of a grid
+        # tile table) or surfaces at the oracle floor
+        self.budget = budget
+        self.allocated = 0
+
+    def _alloc(self, shape, elem_ty, what: str) -> np.ndarray:
+        if _faults.ACTIVE:
+            _faults.maybe_fault("mem.alloc")
+        dtype = _TY_DTYPE[elem_ty]
+        if self.budget is not None:
+            nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+            if self.allocated + nbytes > self.budget:
+                raise _faults.EngineFault(
+                    f"device memory budget exceeded allocating {what} "
+                    f"({self.allocated} + {nbytes} > {self.budget} "
+                    f"bytes)", site="mem.alloc")
+            self.allocated += nbytes
+        return np.zeros(shape, dtype=dtype)
+
+    def reset_shared(self) -> None:
+        """Fresh shared memory for the next workgroup / grid chunk;
+        releases the previous allocations' budget charge."""
+        if self.budget is not None and self.shared:
+            self.allocated -= sum(a.nbytes for a in self.shared.values())
+        self.shared = {}
 
     def resolve(self, ptr: Value, argmap: Dict[int, Any]) -> Tuple[np.ndarray, bool]:
         """-> (array, is_shared)"""
@@ -292,16 +322,18 @@ class DeviceMemory:
                 arr = self.shared.get(id(ptr))
                 if arr is None:
                     if self.grid_wgs is not None:
-                        arr = np.zeros((self.grid_wgs, ptr.size),
-                                       dtype=_TY_DTYPE[ptr.elem_ty])
+                        arr = self._alloc((self.grid_wgs, ptr.size),
+                                          ptr.elem_ty,
+                                          f"shared tile table {ptr.name}")
                     else:
-                        arr = np.zeros(ptr.size,
-                                       dtype=_TY_DTYPE[ptr.elem_ty])
+                        arr = self._alloc((ptr.size,), ptr.elem_ty,
+                                          f"shared {ptr.name}")
                     self.shared[id(ptr)] = arr
                 return arr, True
             arr = self.globals_mem.get(ptr.name)
             if arr is None:
-                arr = np.zeros(ptr.size, dtype=_TY_DTYPE[ptr.elem_ty])
+                arr = self._alloc((ptr.size,), ptr.elem_ty,
+                                  f"global {ptr.name}")
                 self.globals_mem[ptr.name] = arr
             return arr, False
         raise ExecError(f"cannot resolve pointer {ptr!r}")
@@ -357,6 +389,8 @@ def _exec_warp(fn: Function, argmap: Dict[int, Any], mask0: np.ndarray,
         fuel[0] -= 1
         if fuel[0] <= 0:
             raise ExecError("out of fuel (possible infinite loop)")
+        if _gov.ACTIVE:
+            _gov.deadline_check()
         i = block.instrs[idx]
         op = i.op
         if mask.any():
@@ -1384,6 +1418,8 @@ def _run_decoded(prog: "_DProgram", st: _DState
     while True:
         if _faults.ACTIVE:
             _faults.maybe_fault("decoded.exec")
+        if _gov.ACTIVE:
+            _gov.deadline_check()
         nodes = blocks[bi].nodes
         jump: Optional[int] = None
         for node in nodes:
@@ -2526,6 +2562,8 @@ def _resume_decoded(prog: "_BProgram", st: _DState, bi: int, ni: int
     plain "barrier" event (never merged)."""
     blocks = prog.blocks
     while True:
+        if _gov.ACTIVE:
+            _gov.deadline_check()
         nodes = blocks[bi].nodes
         nn = len(nodes)
         jump: Optional[int] = None
@@ -2639,6 +2677,8 @@ def _run_wg_batched(bprog: "_BProgram", bst: _DState,
         while desync_at is None:
             if _faults.ACTIVE:
                 _faults.maybe_fault("wg.exec")
+            if _gov.ACTIVE:
+                _gov.deadline_check()
             nodes = bprog.bblocks[bi].nodes
             nn = len(nodes)
             jump: Optional[int] = None
@@ -2997,6 +3037,8 @@ def _drive_wg(bprog: "_BProgram", gens: List[Any], rows: Sequence[int],
     exited: List[int] = []
     base = rows[0]
     while alive:
+        if _gov.ACTIVE:
+            _gov.deadline_check()
         events: Dict[int, Any] = {}
         done: List[int] = []
         for r in alive:
@@ -3271,6 +3313,8 @@ def _run_grid_batched(bprog: "_BProgram", bst: _DState,
     while True:
         if _faults.ACTIVE:
             _faults.maybe_fault("grid.exec")
+        if _gov.ACTIVE:
+            _gov.deadline_check()
         nodes = bprog.bblocks[bi].nodes
         nn = len(nodes)
         jump: Optional[int] = None
@@ -3325,7 +3369,10 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
            globals_mem: Optional[Dict[str, np.ndarray]] = None,
            *, decoded: bool = True, batched: bool = True,
            ride_along: bool = True,
-           grid: Optional[bool] = None) -> ExecStats:
+           grid: Optional[bool] = None,
+           deadline_t: Optional[float] = None,
+           deadline_ms: Optional[float] = None,
+           mem_budget: Optional[int] = None) -> ExecStats:
     """Execute a compiled kernel over the launch grid; returns stats.
     Buffers are mutated in place (device memory semantics).
 
@@ -3352,17 +3399,33 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     workgroup / warp context; any OTHER exception escaping a demotable
     fast path is re-raised as ``faults.EngineFault`` so the runtime's
     degradation chain can retry one executor rung down.  The executor
-    actually selected is recorded in ``LAST_EXECUTOR[0]``."""
+    actually selected is recorded in ``LAST_EXECUTOR[0]``.
+
+    Governor hooks (core/governor.py): ``deadline_ms`` (relative) or
+    ``deadline_t`` (absolute ``perf_counter`` time — the runtime's
+    chain shares one across retries) arms cooperative preemption —
+    executors poll at their block/chunk/barrier checkpoints and raise
+    ``faults.DeadlineExceeded`` (a KernelFault carrying the partial
+    stats) on expiry.  ``mem_budget`` bounds lazy device-memory
+    allocation (overruns are ``EngineFault``s at site "mem.alloc")."""
     fn = module_fn
     LAST_EXECUTOR[0] = None
     depth = _faults.rung_depth()
+    stats = ExecStats()
+    governed = deadline_t is not None or deadline_ms is not None
+    if governed:
+        if deadline_t is None:
+            deadline_t = _gov.perf_counter() + deadline_ms * 1e-3
+        _gov.arm_deadline(deadline_t, deadline_ms, stats)
     try:
         return _launch_impl(fn, buffers, params, scalar_args,
-                            globals_mem, decoded=decoded,
+                            globals_mem, stats=stats, decoded=decoded,
                             batched=batched, ride_along=ride_along,
-                            grid=grid)
+                            grid=grid, mem_budget=mem_budget)
     except ExecError as e:
         raise _add_ctx(e, kernel=fn.name)
+    except _faults.KernelFault:
+        raise    # DeadlineExceeded: the caller's verdict, never demoted
     except _faults.EngineFault:
         raise
     except Exception as e:
@@ -3373,6 +3436,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
                 f"{type(e).__name__}: {e}", rung=rung) from e
         raise
     finally:
+        if governed:
+            _gov.disarm_deadline()
         _faults.trim_rungs(depth)
 
 
@@ -3380,13 +3445,16 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
                  params: LaunchParams,
                  scalar_args: Optional[Dict[str, Any]] = None,
                  globals_mem: Optional[Dict[str, np.ndarray]] = None,
-                 *, decoded: bool = True, batched: bool = True,
+                 *, stats: Optional[ExecStats] = None,
+                 decoded: bool = True, batched: bool = True,
                  ride_along: bool = True,
-                 grid: Optional[bool] = None) -> ExecStats:
+                 grid: Optional[bool] = None,
+                 mem_budget: Optional[int] = None) -> ExecStats:
     fn = module_fn
     scalar_args = scalar_args or {}
-    mem = DeviceMemory(buffers, globals_mem)
-    stats = ExecStats()
+    mem = DeviceMemory(buffers, globals_mem, budget=mem_budget)
+    if stats is None:
+        stats = ExecStats()
     W = params.warp_size
     fuel = [params.fuel]
     n_wg = params.grid * params.grid_y
@@ -3518,7 +3586,7 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
                             affine_ok, affine_span))
                         row_masks.append(wactive)
                 gctx = _stack_intrs(row_ctxs, W, params.strict_oob_loads)
-                mem.shared = {}        # fresh private tile table per
+                mem.reset_shared()     # fresh private tile table per
                 mem.grid_wgs = nc      # chunk: (nc, size) shared arrays
                 gst = _DState(gprog, argmap, np.stack(row_masks), gctx,
                               mem, stats, fuel)
@@ -3538,7 +3606,7 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
     for wg_lin in range(n_wg):
         gx = wg_lin % params.grid
         gy = wg_lin // params.grid
-        mem.shared = {}   # fresh shared memory per workgroup
+        mem.reset_shared()   # fresh shared memory per workgroup
         wg_intr = dict(base_intr)
         wg_intr[("group_id", 0)] = np.full(W, gx, np.int32)
         wg_intr[("group_id", 1)] = np.full(W, gy, np.int32)
@@ -3598,6 +3666,8 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
         exited: List[int] = []
         with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
             while alive:
+                if _gov.ACTIVE:
+                    _gov.deadline_check()
                 at_barrier: List[int] = []
                 done: List[int] = []
                 for wi in alive:
@@ -3879,7 +3949,7 @@ def reference_launch(fn: Function, buffers: Dict[str, np.ndarray],
     for wg_lin in range(n_wg):
         gx = wg_lin % params.grid
         gy = wg_lin // params.grid
-        mem.shared = {}
+        mem.reset_shared()
         gens = []
         for t in range(params.wg_threads):
             lx = t % params.local_size

@@ -29,7 +29,7 @@ import os
 import pickle
 import re
 import tempfile
-from collections import Counter
+from collections import Counter, deque
 from dataclasses import dataclass, field
 from pathlib import Path
 from time import perf_counter
@@ -38,8 +38,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from . import faults as _faults
+from . import governor as _gov
 from . import interp as _interp
-from .faults import EngineFault, KernelFault
+from .faults import DeadlineExceeded, EngineFault, KernelFault
 from .interp import ExecError, ExecStats, LaunchParams, \
     launch as interp_launch
 from .passes.pipeline import CompiledKernel, PassConfig, run_pipeline
@@ -413,14 +414,15 @@ _RUNG_KWARGS: Dict[str, Dict[str, Any]] = {
 class LaunchAttempt:
     rung: str                      # rung configuration requested
     executor: Optional[str]        # executor interp actually selected
-    outcome: str                   # "ok" | "engine_fault" | "kernel_fault"
+    outcome: str      # "ok" | "engine_fault" | "kernel_fault" | "deadline"
     reason: str = ""
     wall_ms: float = 0.0
 
 
 @dataclass
 class LaunchReport:
-    """Per-launch degradation record (``Runtime.last_report``)."""
+    """Per-launch degradation record (``Runtime.last_report``; the last
+    ``REPORT_RING`` live in ``Runtime.last_reports()``)."""
     kernel: str
     attempts: List[LaunchAttempt] = field(default_factory=list)
     executor: Optional[str] = None     # executor that produced the result
@@ -428,12 +430,49 @@ class LaunchReport:
     rolled_back: int = 0
     snapshot_bytes: int = 0
     wall_ms: float = 0.0
+    # governor context (core/governor.py)
+    breaker: Optional[str] = None      # breaker state when planned
+    pinned_rung: Optional[str] = None  # open breaker: chain started here
+    probe: bool = False                # half-open probe of the full chain
+    deadline_ms: Optional[float] = None
+    deadline_expired: bool = False
+    snapshot_skipped: Optional[str] = None   # e.g. "mem-budget"
 
     def summary(self) -> str:
         steps = " -> ".join(
             f"{a.executor or a.rung}:{a.outcome}" for a in self.attempts)
+        gov = ""
+        if self.pinned_rung:
+            gov += f", pinned @{self.pinned_rung}"
+        if self.probe:
+            gov += ", probe"
+        if self.deadline_expired:
+            gov += f", deadline {self.deadline_ms:.3g} ms expired"
+        if self.snapshot_skipped:
+            gov += f", snapshot skipped ({self.snapshot_skipped})"
         return (f"@{self.kernel}: {steps} ({self.demotions} demotion(s), "
-                f"{self.rolled_back} rollback(s), {self.wall_ms:.2f} ms)")
+                f"{self.rolled_back} rollback(s), "
+                f"{self.wall_ms:.2f} ms{gov})")
+
+
+#: ring depth of Runtime.last_reports() (post-mortem debugging)
+REPORT_RING = 32
+
+
+def _attach_report(e: BaseException, report: LaunchReport) -> None:
+    """Attach the degradation history to a SURFACING exception:
+    ``e.report`` for programmatic use, plus the one-line summary as an
+    exception note (or an args suffix before 3.11) so a traceback shows
+    which rungs were tried."""
+    e.report = report                       # type: ignore[attr-defined]
+    note = "launch report: " + report.summary()
+    add = getattr(e, "add_note", None)
+    if add is not None:
+        add(note)
+    elif e.args and isinstance(e.args[0], str):
+        e.args = (f"{e.args[0]}\n  {note}",) + e.args[1:]
+    else:
+        e.args = e.args + (note,)
 
 
 #: process-lifetime launch/degradation counters (GRID_TELEMETRY's
@@ -447,7 +486,11 @@ def reset_launch_telemetry() -> None:
     LAUNCH_TELEMETRY.update(
         launches=0, demotions=0, rollbacks=0, engine_faults=0,
         kernel_faults=0, by_executor=Counter(),
-        demotion_reasons=Counter())
+        demotion_reasons=Counter(),
+        # launch governor (core/governor.py)
+        deadline_expired=0, snapshot_budget_skips=0,
+        breaker_trips=0, breaker_pinned=0, breaker_probes=0,
+        breaker_promotions=0)
 
 
 reset_launch_telemetry()
@@ -463,23 +506,46 @@ class Runtime:
     ``self.last_report``.  ``transactional=False`` disables the
     write-root snapshots — and with them the chain, since retrying over
     partially-committed stores (or re-applied atomics) would be unsound;
-    an EngineFault then surfaces to the caller."""
+    an EngineFault then surfaces to the caller.
+
+    ``govern=True`` (default) arms the launch governor
+    (core/governor.py, docs/robustness.md): per-launch wall-clock
+    deadlines (``launch(..., deadline_ms=)``), a per-kernel circuit
+    breaker that pins repeatedly-demoting kernels at their last-good
+    rung, and the ``VOLT_MEM_BUDGET`` memory budget; ``governor=``
+    overrides the knobs per Runtime."""
 
     def __init__(self, *, warp_size: int = 32,
                  shared_in_local: bool = True,
                  batched: bool = True,
                  degrade: bool = True,
-                 transactional: bool = True) -> None:
+                 transactional: bool = True,
+                 govern: bool = True,
+                 governor: Optional[_gov.GovernorConfig] = None) -> None:
         self.warp_size = warp_size
         self.batched = batched     # workgroup-batched lockstep executor
         self.degrade = degrade
         self.transactional = transactional
+        self.govern = govern
+        self.gov_cfg = governor or _gov.GovernorConfig()
+        mb = self.gov_cfg.mem_budget
+        self.mem_budget = mb if mb is not None else _gov.env_mem_budget()
+        self.breaker: Optional[_gov.CircuitBreaker] = \
+            _gov.CircuitBreaker(self.gov_cfg.breaker_threshold,
+                                self.gov_cfg.breaker_probe_every) \
+            if govern else None
         self.buffers: Dict[str, np.ndarray] = {}
         self.globals_mem: Dict[str, np.ndarray] = {}
         self._pending_symbols: Dict[str, np.ndarray] = {}
         self.cycle_model = CycleModel(shared_in_local=shared_in_local)
         self.last_stats: Optional[ExecStats] = None
         self.last_report: Optional[LaunchReport] = None
+        self._reports: deque = deque(maxlen=REPORT_RING)
+
+    def last_reports(self) -> List[LaunchReport]:
+        """The last ``REPORT_RING`` LaunchReports, oldest first — the
+        post-mortem trail when a failure is noticed after the fact."""
+        return list(self._reports)
 
     # -- OpenCL-ish -----------------------------------------------------------
     def create_buffer(self, name: str, data: np.ndarray) -> Buffer:
@@ -525,33 +591,47 @@ class Runtime:
 
     # -- launch ------------------------------------------------------------------
     def _snapshot_write_roots(self, kernel_fn: Function,
-                              report: LaunchReport) -> Dict[Any, Any]:
+                              report: LaunchReport,
+                              budget: Optional[int] = None,
+                              force: bool = False
+                              ) -> Optional[Dict[Any, Any]]:
         """Transactional snapshot: copy the buffers this kernel may
         WRITE (interp.write_root_buffers; everything bound when the
         scan cannot resolve a store root).  Read-only buffers are never
         copied — that is what keeps the clean-path overhead inside the
         <5% bench_robust budget.  Also records the global names alive
-        now, so a rollback can drop globals the launch lazily created."""
+        now, so a rollback can drop globals the launch lazily created.
+
+        With a memory ``budget``, an over-budget snapshot is refused
+        (returns None) and the caller degrades to oracle-first
+        execution — the floor needs no retry snapshot — instead of
+        OOMing mid-chain.  ``force`` overrides the budget: an armed
+        deadline's rollback contract outranks the budget (the snapshot
+        is the only thing that makes a timed-out launch bit-invisible)."""
         roots = _interp.write_root_buffers(kernel_fn)
-        snap: Dict[Any, Any] = {}
+        pairs: List[Tuple[Any, np.ndarray]] = []
         if roots is None:
-            for name, arr in self.buffers.items():
-                snap[("b", name)] = arr.copy()
-            for name, arr in self.globals_mem.items():
-                snap[("g", name)] = arr.copy()
+            pairs.extend((("b", n), a) for n, a in self.buffers.items())
+            pairs.extend((("g", n), a)
+                         for n, a in self.globals_mem.items())
         else:
             params_w, globals_w = roots
             for name in params_w:
                 arr = self.buffers.get(name)
                 if arr is not None:
-                    snap[("b", name)] = arr.copy()
+                    pairs.append((("b", name), arr))
             for name in globals_w:
                 arr = self.globals_mem.get(name)
                 if arr is not None:
-                    snap[("g", name)] = arr.copy()
+                    pairs.append((("g", name), arr))
+        total = sum(a.nbytes for _, a in pairs)
+        if budget is not None and total > budget and not force:
+            report.snapshot_skipped = "mem-budget"
+            LAUNCH_TELEMETRY["snapshot_budget_skips"] += 1
+            return None
+        snap: Dict[Any, Any] = {k: a.copy() for k, a in pairs}
         snap["__globals_keys__"] = set(self.globals_mem)
-        report.snapshot_bytes = sum(
-            a.nbytes for k, a in snap.items() if isinstance(k, tuple))
+        report.snapshot_bytes = total
         return snap
 
     def _rollback(self, snap: Dict[Any, Any]) -> None:
@@ -569,7 +649,8 @@ class Runtime:
                 del self.globals_mem[name]
 
     def launch(self, kernel_fn: Function, *, grid: int, block: int,
-               scalar_args: Optional[Dict[str, Any]] = None) -> ExecStats:
+               scalar_args: Optional[Dict[str, Any]] = None,
+               deadline_ms: Optional[float] = None) -> ExecStats:
         # materialize staged symbols now that "addresses are resolved"
         for sym, data in self._pending_symbols.items():
             buf = self.globals_mem.get(sym)
@@ -587,20 +668,82 @@ class Runtime:
             chain = chain[:1]      # single attempt, no retry
         report = LaunchReport(kernel=kernel_fn.name)
         self.last_report = report
+        self._reports.append(report)
         LAUNCH_TELEMETRY["launches"] += 1
+
+        # ---- governor plan (core/governor.py) ------------------------
+        if deadline_ms is None and self.govern:
+            deadline_ms = self.gov_cfg.deadline_ms
+        mem_budget = self.mem_budget if self.govern else None
+        deadline_t: Optional[float] = None
+        if deadline_ms is not None:
+            report.deadline_ms = deadline_ms
+            # one absolute deadline shared by every rung of the chain:
+            # demotion retries do not refill the budget
+            deadline_t = perf_counter() + deadline_ms * 1e-3
+        bkey: Optional[str] = None
+        probing = False
+        if self.breaker is not None and len(chain) > 1:
+            bkey = _decode_plan_key(kernel_fn)
+            pin, probing = self.breaker.plan(bkey, kernel_fn.name)
+            report.breaker = self.breaker.entry(
+                bkey, kernel_fn.name).state
+            report.probe = probing
+            if probing:
+                LAUNCH_TELEMETRY["breaker_probes"] += 1
+            if pin is not None:
+                # open breaker: start at the last-good rung, skipping
+                # the doomed fast path (and, when pinned at the oracle
+                # floor with no deadline, the snapshot too)
+                report.pinned_rung = pin
+                LAUNCH_TELEMETRY["breaker_pinned"] += 1
+                kp = _RUNG_ORDER.index(pin)
+                chain = [r for r in chain
+                         if _RUNG_ORDER.index(r) >= kp] or [chain[-1]]
+
         txn: Optional[Dict[Any, Any]] = None
         t_launch = perf_counter()
         i = 0
         while True:
             rung = chain[i]
-            if txn is None and i + 1 < len(chain):
-                txn = self._snapshot_write_roots(kernel_fn, report)
+            # snapshot when further rungs could retry, or to honor the
+            # deadline rollback contract (force= overrides the budget)
+            if txn is None and self.transactional and \
+                    (i + 1 < len(chain) or deadline_t is not None):
+                txn = self._snapshot_write_roots(
+                    kernel_fn, report, budget=mem_budget,
+                    force=deadline_t is not None)
+                if txn is None and i + 1 < len(chain):
+                    # over-budget snapshot: degrade straight to the
+                    # oracle floor, which needs no retry snapshot
+                    i = len(chain) - 1
+                    rung = chain[i]
             t0 = perf_counter()
             try:
                 stats = interp_launch(kernel_fn, self.buffers, params,
                                       scalar_args=scalar_args,
                                       globals_mem=self.globals_mem,
+                                      deadline_t=deadline_t,
+                                      deadline_ms=deadline_ms,
+                                      mem_budget=mem_budget,
                                       **_RUNG_KWARGS[rung])
+            except DeadlineExceeded as e:
+                used = _interp.LAST_EXECUTOR[0] or rung
+                report.attempts.append(LaunchAttempt(
+                    rung, used, "deadline", str(e),
+                    (perf_counter() - t0) * 1e3))
+                report.deadline_expired = True
+                LAUNCH_TELEMETRY["deadline_expired"] += 1
+                if txn is not None:
+                    self._rollback(txn)
+                    report.rolled_back += 1
+                    LAUNCH_TELEMETRY["rollbacks"] += 1
+                report.wall_ms = (perf_counter() - t_launch) * 1e3
+                if bkey is not None:
+                    self.breaker.abort(bkey, kernel_fn.name,
+                                       probing=probing)
+                _attach_report(e, report)
+                raise
             except EngineFault as e:
                 used = getattr(e, "rung", None) \
                     or _interp.LAST_EXECUTOR[0] or rung
@@ -620,6 +763,10 @@ class Runtime:
                         break
                 if nxt is None or txn is None:
                     report.wall_ms = (perf_counter() - t_launch) * 1e3
+                    if bkey is not None:
+                        self.breaker.abort(bkey, kernel_fn.name,
+                                           probing=probing)
+                    _attach_report(e, report)
                     raise
                 self._rollback(txn)
                 report.rolled_back += 1
@@ -637,6 +784,12 @@ class Runtime:
                     str(e), (perf_counter() - t0) * 1e3))
                 LAUNCH_TELEMETRY["kernel_faults"] += 1
                 report.wall_ms = (perf_counter() - t_launch) * 1e3
+                if bkey is not None:
+                    # never a breaker trip — but a probe that hit a
+                    # semantic fault learned nothing: re-pin
+                    self.breaker.abort(bkey, kernel_fn.name,
+                                       probing=probing)
+                e.report = report          # type: ignore[attr-defined]
                 raise
             used = _interp.LAST_EXECUTOR[0] or rung
             report.attempts.append(LaunchAttempt(
@@ -644,12 +797,24 @@ class Runtime:
             report.executor = used
             report.wall_ms = (perf_counter() - t_launch) * 1e3
             LAUNCH_TELEMETRY["by_executor"][used] += 1
+            if bkey is not None:
+                demoted = report.demotions > 0
+                changed = self.breaker.record(
+                    bkey, kernel_fn.name, demoted=demoted,
+                    final_rung=used, probing=probing)
+                if changed:
+                    LAUNCH_TELEMETRY[
+                        "breaker_trips" if demoted
+                        else "breaker_promotions"] += 1
+                report.breaker = self.breaker.entry(
+                    bkey, kernel_fn.name).state
             self.last_stats = stats
             return stats
 
     def launch_kernel(self, kernel_handle, *, grid: int, block: int,
                       config: Optional[PassConfig] = None,
-                      scalar_args: Optional[Dict[str, Any]] = None
+                      scalar_args: Optional[Dict[str, Any]] = None,
+                      deadline_ms: Optional[float] = None
                       ) -> ExecStats:
         """Compile (memoized via the module compile cache) and launch a
         front-end @kernel handle in one call — the hot path for repeated
@@ -657,7 +822,8 @@ class Runtime:
         ck = compile_kernel(kernel_handle, config,
                             warp_size=self.warp_size)
         return self.launch(ck.fn, grid=grid, block=block,
-                           scalar_args=scalar_args)
+                           scalar_args=scalar_args,
+                           deadline_ms=deadline_ms)
 
     def cycles(self, stats: Optional[ExecStats] = None) -> float:
         st = stats or self.last_stats

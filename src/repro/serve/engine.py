@@ -7,16 +7,35 @@ forward for the incoming prompt and writes its KV into the slot.
 
 This is the host-side 'thread-schedule' of the serving stack — the same
 role VOLT's runtime plays for kernel grids (DESIGN.md §3).
+
+Admission control and backpressure (docs/robustness.md "Launch
+governor"): a bounded submit queue rejects overflow with ``EngineBusy``
+instead of accepting unbounded work; per-request wall-clock deadlines
+fail slow requests individually; transient ``EngineFault``s (the
+``serve.prefill`` / ``serve.decode`` injection sites stand in for
+cache/plan I/O flakes) are retried with deterministic jittered backoff
+before the affected requests are failed — the engine itself never dies.
 """
 from __future__ import annotations
 
 import collections
+import random
+import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import faults as _faults
+from repro.core.faults import EngineFault
+
+
+class EngineBusy(RuntimeError):
+    """Admission control: the submit queue is full.  Explicit
+    backpressure — the client retries later instead of the engine
+    accepting unbounded work it cannot drain."""
 
 
 @dataclass
@@ -27,16 +46,29 @@ class Request:
     out: List[int] = field(default_factory=list)
     done: bool = False
     error: Optional[str] = None  # set when the request failed alone
+    #: wall-clock budget from submission; None inherits the engine
+    #: default.  Expiry fails THIS request individually.
+    deadline_ms: Optional[float] = None
+    _deadline_t: Optional[float] = field(default=None, repr=False)
 
 
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 8,
-                 max_seq: int = 512, temperature: float = 0.0) -> None:
+                 max_seq: int = 512, temperature: float = 0.0,
+                 max_queue: Optional[int] = None,
+                 deadline_ms: Optional[float] = None,
+                 retries: int = 2, backoff_ms: float = 0.5,
+                 seed: int = 0) -> None:
         self.model = model
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.temperature = temperature
+        self.max_queue = max_queue       # None = unbounded (legacy)
+        self.deadline_ms = deadline_ms   # default per-request deadline
+        self.retries = retries
+        self.backoff_ms = backoff_ms
+        self._rng = random.Random(seed)  # jitter stays deterministic
         self.queue: "collections.deque[Request]" = collections.deque()
         self.active: List[Optional[Request]] = [None] * slots
         self.cache = model.init_cache(slots, max_seq)
@@ -44,9 +76,37 @@ class ServeEngine:
         self.last_tok = np.zeros((slots,), np.int32)
         self._decode = jax.jit(
             lambda p, c, t, ps: model.decode_step(p, c, t, ps))
+        self.telemetry: Dict[str, int] = collections.defaultdict(int)
 
     def submit(self, req: Request) -> None:
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.telemetry["busy_rejections"] += 1
+            raise EngineBusy(
+                f"submit queue full ({len(self.queue)}/{self.max_queue}"
+                f"); retry after the engine drains")
+        if req.deadline_ms is None:
+            req.deadline_ms = self.deadline_ms
+        if req.deadline_ms is not None:
+            req._deadline_t = time.perf_counter() + req.deadline_ms * 1e-3
         self.queue.append(req)
+
+    def _retry(self, fn: Callable[[], Any]) -> Any:
+        """Run ``fn``, retrying transient EngineFaults with jittered
+        exponential backoff; the last failure propagates to the caller,
+        which fails the affected request(s) individually."""
+        delay = self.backoff_ms * 1e-3
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except EngineFault:
+                if attempt >= self.retries:
+                    self.telemetry["retry_exhausted"] += 1
+                    raise
+                attempt += 1
+                self.telemetry["transient_retries"] += 1
+                time.sleep(delay * (0.5 + self._rng.random()))
+                delay *= 2
 
     def _fail(self, s: int, req: Request, e: BaseException) -> None:
         """Request isolation: a failing request is marked failed with
@@ -57,7 +117,23 @@ class ServeEngine:
         self.pos[s] = 0
         self.last_tok[s] = 0
 
+    def _expired(self, req: Request) -> bool:
+        return (req._deadline_t is not None
+                and time.perf_counter() >= req._deadline_t)
+
+    def _expire(self, s: Optional[int], req: Request) -> None:
+        self.telemetry["deadline_failures"] += 1
+        req.error = (f"DeadlineExceeded: request {req.rid} exceeded its "
+                     f"{req.deadline_ms:.3g} ms deadline")
+        req.done = True
+        if s is not None:
+            self.active[s] = None
+            self.pos[s] = 0
+            self.last_tok[s] = 0
+
     def _prefill(self, s: int, req: Request) -> None:
+        if _faults.ACTIVE:
+            _faults.maybe_fault("serve.prefill")
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
         if len(req.prompt) + req.max_new > self.max_seq:
@@ -67,7 +143,9 @@ class ServeEngine:
                 f"({self.max_seq})")
         # prefill by stepping the prompt token by token (teacher
         # forcing through decode_step keeps one compiled program;
-        # a fused prefill kernel is the §Perf variant)
+        # a fused prefill kernel is the §Perf variant).  Restarting
+        # from pos 0 rewrites the same KV rows, so a retry after a
+        # mid-prefill transient is idempotent.
         self.pos[s] = 0
         # feed all but the last prompt token; step() feeds the
         # last one and samples the first new token from its logits
@@ -86,24 +164,50 @@ class ServeEngine:
 
     def _admit(self) -> None:
         for s in range(self.slots):
-            if self.active[s] is None and self.queue:
+            while self.active[s] is None and self.queue:
                 req = self.queue.popleft()
+                if self._expired(req):
+                    # expired while queued: fail it without ever
+                    # occupying the slot, keep filling
+                    self._expire(None, req)
+                    continue
                 self.active[s] = req
                 try:
-                    self._prefill(s, req)
+                    self._retry(lambda: self._prefill(s, req))
                 except Exception as e:
                     self._fail(s, req, e)
 
     def step(self) -> int:
         """One continuous-batching decode step; returns #live slots."""
         self._admit()
+        # deadline sweep: slow requests fail alone, their slots free up
+        for s in range(self.slots):
+            req = self.active[s]
+            if req is not None and self._expired(req):
+                self._expire(s, req)
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
             return 0
-        # copies for the same async-aliasing reason as in _admit
-        toks = jnp.asarray(np.array(self.last_tok.reshape(-1, 1)))
-        pos = jnp.asarray(np.array(self.pos))
-        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+
+        def _decode_batch():
+            if _faults.ACTIVE:
+                _faults.maybe_fault("serve.decode")
+            # copies for the same async-aliasing reason as in _prefill;
+            # decode is functional (cache in -> cache out), so a retry
+            # after a transient re-runs on unchanged state
+            toks = jnp.asarray(np.array(self.last_tok.reshape(-1, 1)))
+            pos = jnp.asarray(np.array(self.pos))
+            return self._decode(self.params, self.cache, toks, pos)
+
+        try:
+            logits, self.cache = self._retry(_decode_batch)
+        except EngineFault as e:
+            # a persistent decode failure poisons only this step's
+            # batch: its requests fail individually, the engine (and
+            # the queue behind it) lives on
+            for s in live:
+                self._fail(s, self.active[s], e)
+            return len(live)
         logits = np.asarray(logits[:, 0, :])
         nxt = logits.argmax(-1).astype(np.int32)
         for s in live:
@@ -121,10 +225,32 @@ class ServeEngine:
                 self._fail(s, req, e)
         return len(live)
 
-    def run_until_drained(self, max_steps: int = 10_000) -> None:
+    def run_until_drained(self, max_steps: int = 10_000,
+                          fail_stragglers: bool = False) -> None:
+        """Step until every request terminates.  On ``max_steps``
+        exhaustion: ``fail_stragglers=True`` is the drain mode — every
+        still-live or still-queued request is failed INDIVIDUALLY
+        (error set, done=True) and the call returns, so one wedged
+        request cannot turn a drain into an engine-level exception;
+        the default keeps the legacy raise."""
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 return
+        if fail_stragglers:
+            for s in range(self.slots):
+                req = self.active[s]
+                if req is not None:
+                    self.telemetry["straggler_failures"] += 1
+                    self._fail(s, req, RuntimeError(
+                        f"straggler: not drained after {max_steps} "
+                        f"steps"))
+            while self.queue:
+                req = self.queue.popleft()
+                self.telemetry["straggler_failures"] += 1
+                req.error = (f"RuntimeError: straggler: still queued "
+                             f"after {max_steps} steps")
+                req.done = True
+            return
         live = [req.rid for req in self.active if req is not None]
         raise RuntimeError(
             f"run_until_drained: not drained after {max_steps} steps "

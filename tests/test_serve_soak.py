@@ -1,0 +1,267 @@
+"""Serve-engine backpressure + bounded fault-storm soak.
+
+Unit tests pin the admission-control contracts (``EngineBusy``,
+per-request deadlines, jittered retry of transient ``serve.*`` faults,
+drain mode); the soaks drive serve traffic and kernel launches under a
+probabilistic ``VOLT_FAULT``-style storm and assert the global
+invariants the CI job checks: **every request reaches a terminal
+state, the engine never dies, and the governor telemetry is
+non-zero**.
+
+Env knobs (CI scales them up, local runs stay fast):
+
+  * ``VOLT_SOAK_REQUESTS`` — serve-storm request count (default 12)
+  * ``VOLT_SOAK_LAUNCHES`` — kernel-storm launch count (default 24)
+  * ``VOLT_SOAK_SEED``     — storm seed (default 1234; CI randomizes)
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+import test_executor_conformance as conf
+from repro.configs import get_config
+from repro.core import faults, governor
+from repro.core.runtime import (LAUNCH_TELEMETRY, Runtime,
+                                reset_launch_telemetry)
+from repro.models import get_model
+from repro.models.blueprint import init_params
+from repro.serve.engine import EngineBusy, Request, ServeEngine
+
+SOAK_REQUESTS = int(os.environ.get("VOLT_SOAK_REQUESTS", "12"))
+SOAK_LAUNCHES = int(os.environ.get("VOLT_SOAK_LAUNCHES", "24"))
+SOAK_SEED = int(os.environ.get("VOLT_SOAK_SEED", "1234"))
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("granite-3-2b", smoke=True)
+    model = get_model(cfg)
+    params = init_params(model.blueprint(), jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _req(cfg, rng, rid, **kw):
+    plen = int(rng.integers(2, 6))
+    return Request(rid=rid, prompt=rng.integers(
+        0, cfg.vocab, plen).astype(np.int32), max_new=3, **kw)
+
+
+# --------------------------------------------------------------------------
+# admission control / backpressure
+# --------------------------------------------------------------------------
+
+def test_submit_queue_backpressure(small_model):
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=2, max_seq=32, max_queue=2)
+    rng = np.random.default_rng(0)
+    reqs = [_req(cfg, rng, i) for i in range(3)]
+    eng.submit(reqs[0])
+    eng.submit(reqs[1])
+    with pytest.raises(EngineBusy, match="queue full"):
+        eng.submit(reqs[2])
+    assert eng.telemetry["busy_rejections"] == 1
+    # backpressure, not rejection-for-good: drain, then the same
+    # request is admitted
+    eng.run_until_drained()
+    eng.submit(reqs[2])
+    eng.run_until_drained()
+    assert all(r.done and r.error is None for r in reqs)
+
+
+def test_expired_request_fails_alone(small_model):
+    """A request whose deadline lapses fails individually — batchmates
+    complete, and a request that expires while *queued* never occupies
+    a slot."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=2, max_seq=32)
+    rng = np.random.default_rng(1)
+    good = [_req(cfg, rng, i) for i in range(3)]
+    dead = _req(cfg, rng, 98, deadline_ms=0.0)       # expires instantly
+    queued_dead = _req(cfg, rng, 99, deadline_ms=0.0)
+    for r in (good[0], dead, good[1], queued_dead, good[2]):
+        eng.submit(r)
+    eng.run_until_drained()
+    for r in (dead, queued_dead):
+        assert r.done and "DeadlineExceeded" in r.error
+        assert r.out == []
+    assert all(r.done and r.error is None and len(r.out) == 3
+               for r in good)
+    assert eng.telemetry["deadline_failures"] == 2
+
+
+def test_engine_default_deadline_inherited(small_model):
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=2, max_seq=32,
+                      deadline_ms=0.0)
+    rng = np.random.default_rng(2)
+    r = _req(cfg, rng, 0)
+    eng.submit(r)
+    assert r.deadline_ms == 0.0       # inherited at submit
+    eng.run_until_drained()
+    assert r.done and "DeadlineExceeded" in r.error
+
+
+# --------------------------------------------------------------------------
+# transient-fault retry
+# --------------------------------------------------------------------------
+
+def test_transient_serve_faults_are_retried(small_model):
+    """Probabilistic serve.* faults are absorbed by the jittered-
+    backoff retry: every request still completes cleanly."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=2, max_seq=32,
+                      retries=6, backoff_ms=0.05)
+    rng = np.random.default_rng(3)
+    reqs = [_req(cfg, rng, i) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    with faults.inject("serve.prefill", prob=0.4, seed=5), \
+         faults.inject("serve.decode", prob=0.3, seed=9):
+        eng.run_until_drained()
+    assert all(r.done and r.error is None and len(r.out) == 3
+               for r in reqs)
+    assert eng.telemetry["transient_retries"] > 0
+    assert eng.telemetry["retry_exhausted"] == 0
+
+
+def test_persistent_decode_failure_fails_batch_not_engine(small_model):
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=2, max_seq=32,
+                      retries=1, backoff_ms=0.05)
+    rng = np.random.default_rng(4)
+    doomed = [_req(cfg, rng, i) for i in range(2)]
+    for r in doomed:
+        eng.submit(r)
+    with faults.inject("serve.decode"):
+        eng.run_until_drained()
+    assert all(r.done and "InjectedFault" in r.error for r in doomed)
+    assert eng.telemetry["retry_exhausted"] >= 1
+    # the engine itself survived: fresh traffic completes
+    ok = _req(cfg, rng, 10)
+    eng.submit(ok)
+    eng.run_until_drained()
+    assert ok.done and ok.error is None and len(ok.out) == 3
+
+
+def test_persistent_prefill_failure_fails_request_alone(small_model):
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=2, max_seq=32,
+                      retries=1, backoff_ms=0.05)
+    rng = np.random.default_rng(5)
+    r = _req(cfg, rng, 0)
+    eng.submit(r)
+    with faults.inject("serve.prefill"):
+        eng.run_until_drained()
+    assert r.done and "InjectedFault" in r.error
+    ok = _req(cfg, rng, 1)
+    eng.submit(ok)
+    eng.run_until_drained()
+    assert ok.done and ok.error is None
+
+
+def test_drain_mode_fails_stragglers_individually(small_model):
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=1, max_seq=64)
+    rng = np.random.default_rng(6)
+    slow = Request(rid=0, prompt=np.array([1, 2], np.int32),
+                   max_new=40)
+    queued = _req(cfg, rng, 1)
+    eng.submit(slow)
+    eng.submit(queued)
+    eng.run_until_drained(max_steps=3, fail_stragglers=True)
+    assert slow.done and "straggler" in slow.error
+    assert queued.done and "straggler" in queued.error
+    assert eng.telemetry["straggler_failures"] == 2
+    # legacy default still raises
+    eng2 = ServeEngine(model, params, slots=1, max_seq=64)
+    eng2.submit(Request(rid=0, prompt=np.array([1, 2], np.int32),
+                        max_new=40))
+    with pytest.raises(RuntimeError, match="not drained"):
+        eng2.run_until_drained(max_steps=3)
+
+
+# --------------------------------------------------------------------------
+# bounded soaks (the CI fault-storm job runs these with a randomized
+# VOLT_SOAK_SEED and scaled-up counts)
+# --------------------------------------------------------------------------
+
+def test_serve_fault_storm_soak(small_model):
+    """Serve traffic under a probabilistic serve.* fault storm with
+    per-request deadlines and a bounded queue: every request reaches a
+    terminal state and the engine never dies."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, slots=3, max_seq=32, max_queue=4,
+                      deadline_ms=30_000.0, retries=4, backoff_ms=0.05,
+                      seed=SOAK_SEED)
+    rng = np.random.default_rng(SOAK_SEED)
+    reqs = [_req(cfg, rng, i) for i in range(SOAK_REQUESTS)]
+    try:
+        faults.install_spec(
+            f"serve.prefill:0.25:{SOAK_SEED % 1000}, "
+            f"serve.decode:0.15:{SOAK_SEED % 1000 + 1}")
+        for r in reqs:
+            while True:
+                try:
+                    eng.submit(r)
+                    break
+                except EngineBusy:
+                    eng.step()        # backpressure: make room
+        eng.run_until_drained(max_steps=5_000, fail_stragglers=True)
+    finally:
+        faults.clear()
+    assert all(r.done for r in reqs)            # terminal state, always
+    ok = [r for r in reqs if r.error is None]
+    assert all(len(r.out) == 3 for r in ok)
+    # the storm actually stormed (deterministic at the default seed;
+    # any seed with zero injected faults would still pass the
+    # invariants above)
+    assert (eng.telemetry["transient_retries"]
+            + eng.telemetry["retry_exhausted"]
+            + eng.telemetry["deadline_failures"]) > 0
+    # engine survived: a clean request completes after the storm
+    tail = _req(cfg, rng, 10_000)
+    eng.submit(tail)
+    eng.run_until_drained()
+    assert tail.done and tail.error is None
+
+
+def test_kernel_fault_storm_breaker_soak():
+    """Kernel launches under a probabilistic executor fault storm:
+    every launch returns bit-exact results (recovery chain), the
+    breaker trips and pins (telemetry non-zero), and no launch
+    escapes as an engine crash."""
+    fn = conf._compiled("vecadd")
+    handle, make = conf.CASES["vecadd"]
+    rng = np.random.default_rng(SOAK_SEED)
+    bufs0, scalars, params = make(np.random.default_rng(7))
+    oracle = conf._run_one(fn, bufs0, params, scalars,
+                           dict(decoded=False))
+    rt = Runtime(governor=governor.GovernorConfig(
+        breaker_threshold=2, breaker_probe_every=3))
+    reset_launch_telemetry()
+    try:
+        faults.install_spec(
+            f"grid.exec:0.8:{SOAK_SEED % 1000}, "
+            f"wg.exec:0.2:{SOAK_SEED % 1000 + 1}")
+        for i in range(SOAK_LAUNCHES):
+            for k, v in bufs0.items():
+                rt.create_buffer(k, v.copy())
+            st_ = rt.launch(fn, grid=params.grid,
+                            block=params.local_size,
+                            scalar_args=scalars)
+            assert conf._stats_tuple(st_) == \
+                conf._stats_tuple(oracle[2]), f"launch {i}"
+            for k in oracle[3]:
+                np.testing.assert_array_equal(
+                    oracle[3][k], rt.buffers[k],
+                    err_msg=f"launch {i}: buffer {k}")
+    finally:
+        faults.clear()
+    t = LAUNCH_TELEMETRY
+    assert t["breaker_trips"] > 0
+    assert t["breaker_pinned"] > 0
+    assert t["demotions"] > 0
+    reset_launch_telemetry()
