@@ -127,6 +127,13 @@ register_site("handler.atomic", "contended-RMW serialization ladder")
 register_site("mem.alloc", "device-memory lazy allocation (shared tiles, "
               "zero-filled globals) — also where VOLT_MEM_BUDGET "
               "overruns surface")
+# jax codegen rung (core/backends/jaxgen.py): licence + trace, chunked
+# jitted execution, certification-cache read — all scoped, so a faulted
+# jax launch demotes to the grid rung with buffers untouched ----------------
+register_site("jax.trace", "jaxgen licence check + chunk-function trace")
+register_site("jax.exec", "jaxgen per-chunk jitted execution")
+register_site("jax.cache.load", "jax certification-cache read (.vjc "
+              "deserialize / in-memory verdict lookup)")
 # serve engine: per-request recovery (retry with backoff, then fail the
 # one request) — never a kernel-launch demotion -------------------------------
 register_site("serve.prefill", "serve-engine prompt prefill", scoped=False)
@@ -135,7 +142,7 @@ register_site("serve.decode", "serve-engine batched decode step",
 
 #: executor rungs an EngineFault can demote AWAY from (the oracle is the
 #: floor: scoped sites never fire there)
-DEMOTABLE = ("grid", "wg", "decoded")
+DEMOTABLE = ("jax", "grid", "wg", "decoded")
 
 #: hot-path guard: executors check this one module attribute before
 #: calling maybe_fault, so an unarmed process pays a single dict-free

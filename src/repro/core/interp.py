@@ -1651,6 +1651,11 @@ def _ordering_sensitive(fn: Function, _seen: Optional[set] = None) -> bool:
 #: (loader(fn) -> plan | None, saver(fn, plan)) installed by core.runtime
 DECODE_PLAN_HOOKS: Optional[Tuple[Any, Any]] = None
 
+#: (loader(fn) -> {shape-sig: "pass"|"fail"} | None, saver(fn, certs))
+#: installed by core.runtime for the jax rung's differential
+#: certification verdicts (.vjc files, next to .vck/.vdp)
+JAX_CERT_HOOKS: Optional[Tuple[Any, Any]] = None
+
 _DECODE_PLAN_SCHEMA = 1
 
 
@@ -3370,6 +3375,7 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
            *, decoded: bool = True, batched: bool = True,
            ride_along: bool = True,
            grid: Optional[bool] = None,
+           jax: Optional[Any] = None,
            deadline_t: Optional[float] = None,
            deadline_ms: Optional[float] = None,
            mem_budget: Optional[int] = None) -> ExecStats:
@@ -3393,6 +3399,16 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     ``ride_along=False`` disables the vx_pred-loop ride-along and (unless
     ``grid=True``) grid-level batching (the PR 2 executor, kept as a
     benchmark baseline).
+
+    ``jax`` engages the JAX codegen rung (core/backends/jaxgen.py) ABOVE
+    grid batching: ``True`` makes a jax-rung failure an ``EngineFault``
+    (the runtime chain demotes it), ``"fallback"`` silently falls
+    through to the normal executor selection, ``None`` (default) never
+    engages it.  The rung self-licenses (order-free + store-private +
+    supported ops) and self-certifies (a differential pass against the
+    normal chain per (kernel, launch shape class), recorded via
+    ``JAX_CERT_HOOKS``); unlicensed or uncertified launches fall
+    through.
 
     Error taxonomy (docs/robustness.md): semantic kernel errors raise
     ``ExecError`` (a ``faults.KernelFault``), annotated with kernel /
@@ -3421,7 +3437,7 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
         return _launch_impl(fn, buffers, params, scalar_args,
                             globals_mem, stats=stats, decoded=decoded,
                             batched=batched, ride_along=ride_along,
-                            grid=grid, mem_budget=mem_budget)
+                            grid=grid, jax=jax, mem_budget=mem_budget)
     except ExecError as e:
         raise _add_ctx(e, kernel=fn.name)
     except _faults.KernelFault:
@@ -3449,6 +3465,7 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
                  decoded: bool = True, batched: bool = True,
                  ride_along: bool = True,
                  grid: Optional[bool] = None,
+                 jax: Optional[Any] = None,
                  mem_budget: Optional[int] = None) -> ExecStats:
     fn = module_fn
     scalar_args = scalar_args or {}
@@ -3475,6 +3492,29 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
             if v is None:
                 raise ExecError(f"no scalar bound for {p.name}")
             argmap[id(p)] = np.full(W, v, dtype=_TY_DTYPE[p.ty])
+
+    if (jax and decoded and batched and n_wg > 1
+            and not params.strict_oob_loads):
+        # jax codegen rung (core/backends/jaxgen.py): licence-gated,
+        # certification-gated.  orchestrate() returns True only when it
+        # produced this launch's results (jitted primary, or a
+        # differential certification run that drove the normal chain
+        # itself); anything it cannot take falls through unchanged.
+        LAST_EXECUTOR[0] = "jax"
+        _faults.push_rung("jax")
+        from .backends import jaxgen as _jaxgen
+
+        def _run_normal(st: ExecStats) -> None:
+            _launch_impl(fn, buffers, params, scalar_args, globals_mem,
+                         stats=st, decoded=decoded, batched=batched,
+                         ride_along=ride_along, grid=grid, jax=None,
+                         mem_budget=mem_budget)
+
+        if _jaxgen.orchestrate(fn, buffers, params, scalar_args, mem,
+                               argmap, stats,
+                               "fallback" if jax == "fallback" else True,
+                               _run_normal):
+            return stats
 
     want_grid = ride_along if grid is None else grid
     eligible = bool(decoded and batched and want_grid

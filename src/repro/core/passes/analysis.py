@@ -392,6 +392,33 @@ def affine_mem_facts(fn: Function) -> _MemFacts:
     return facts
 
 
+def export_codegen_facts(fn: Function) -> Dict[str, Dict]:
+    """Positional view of ``affine_mem_facts`` for code generators.
+
+    Backends that re-emit the function (rather than walking the live
+    ``Instr`` objects) cannot key on ``id(instr)``; they address
+    instructions as ``(block_index, instr_index)``.  Returns
+
+      ``{"index":         {(bi, ii): (kind, layout, span_mul, span_add)},
+         "store_private": {(bi, ii): "2d" | "1d" | None}}``
+
+    covering exactly the accesses ``affine_mem_facts`` proved (loads /
+    stores / atomics for "index"; every STORE for "store_private").
+    """
+    facts = affine_mem_facts(fn)
+    index: Dict[Tuple[int, int], Tuple[str, bool, int, int]] = {}
+    store_private: Dict[Tuple[int, int], Optional[str]] = {}
+    for bi, b in enumerate(fn.blocks):
+        for ii, i in enumerate(b.instrs):
+            f = facts.index_fact.get(id(i))
+            if f is not None:
+                index[(bi, ii)] = (f.kind, f.layout, f.span_mul,
+                                   f.span_add)
+            if i.op is Op.STORE:
+                store_private[(bi, ii)] = facts.store_privacy.get(id(i))
+    return {"index": index, "store_private": store_private}
+
+
 _NULL = AnalysisManager(enabled=False)
 
 
@@ -402,4 +429,5 @@ def ensure_manager(am: Optional[AnalysisManager]) -> AnalysisManager:
     return am if am is not None else AnalysisManager()
 
 
-__all__ = ["AnalysisManager", "affine_mem_facts", "ensure_manager"]
+__all__ = ["AnalysisManager", "affine_mem_facts", "ensure_manager",
+           "export_codegen_facts"]

@@ -77,7 +77,8 @@ _DISK_CACHE_SCHEMA = 1
 #: (compile-cache hits/misses/errors + decode-plan-cache counterparts)
 DISK_CACHE_STATS = {"hits": 0, "misses": 0, "errors": 0,
                     "decode_hits": 0, "decode_misses": 0,
-                    "decode_errors": 0}
+                    "decode_errors": 0,
+                    "cert_hits": 0, "cert_misses": 0, "cert_errors": 0}
 
 _TOKEN_RE = re.compile(r"%[A-Za-z_][\w.]*")
 
@@ -377,6 +378,57 @@ def _decode_plan_save(fn: Function, plan: dict) -> None:
 
 _interp.DECODE_PLAN_HOOKS = (_decode_plan_load, _decode_plan_save)
 
+# schema 2: verdicts gained the "pass-exact" tier — a schema-1 "pass"
+# meant "certified at backend level 0" and must not promote a pair onto
+# the optimized fast tier, so old files are discarded wholesale
+_JAX_CERT_SCHEMA = 2
+
+
+def _jax_cert_load(fn: Function) -> Optional[dict]:
+    """.vjc read: the jax rung's differential-certification verdicts
+    ({launch-shape-sig: "pass" | "pass-exact" | "fail"}), keyed by the
+    same kernel content hash as the .vck/.vdp caches — an IR change
+    invalidates every verdict with it."""
+    d = disk_cache_dir()
+    if d is None:
+        return None
+    path = Path(d) / (_decode_plan_key(fn) + ".vjc")
+    if not path.exists():
+        DISK_CACHE_STATS["cert_misses"] += 1
+        return None
+    try:
+        with open(path, "rb") as f:
+            rec = pickle.load(f)
+        if rec.get("schema") != _JAX_CERT_SCHEMA:
+            raise ValueError("jax cert schema mismatch")
+        certs = rec["certs"]
+        if not isinstance(certs, dict):
+            raise ValueError("jax cert payload is not a dict")
+        DISK_CACHE_STATS["cert_hits"] += 1
+        return certs
+    except Exception:
+        DISK_CACHE_STATS["cert_errors"] += 1
+        try:
+            path.unlink()
+        except OSError:
+            pass
+        return None
+
+
+def _jax_cert_save(fn: Function, certs: dict) -> None:
+    d = disk_cache_dir()
+    if d is None:
+        return
+    try:
+        path = Path(d) / (_decode_plan_key(fn) + ".vjc")
+        _atomic_write(path, pickle.dumps(
+            {"schema": _JAX_CERT_SCHEMA, "certs": certs}))
+    except Exception:              # cert persistence is best-effort
+        DISK_CACHE_STATS["cert_errors"] += 1
+
+
+_interp.JAX_CERT_HOOKS = (_jax_cert_load, _jax_cert_save)
+
 
 @dataclass
 class Buffer:
@@ -397,12 +449,16 @@ class Buffer:
 # surface immediately — every rung would raise the same class.
 # --------------------------------------------------------------------------
 
-_RUNG_ORDER = ("grid", "wg", "decoded", "oracle")
+_RUNG_ORDER = ("jax", "grid", "wg", "decoded", "oracle")
 
-#: interp.launch kwargs per rung.  "grid" is the production default
+#: interp.launch kwargs per rung.  "jax" is the top rung when the
+#: Runtime enables it (jax=True / VOLT_JAX=1): the jitted-codegen
+#: executor, auto-falling through to grid selection when the licence or
+#: certification gate refuses.  "grid" is the production default
 #: (auto-selects grid / wg-batched / decoded by eligibility); pinning
 #: grid=False / batched=False peels one fast path per rung.
 _RUNG_KWARGS: Dict[str, Dict[str, Any]] = {
+    "jax":     dict(decoded=True, batched=True, jax=True),
     "grid":    dict(decoded=True, batched=True),
     "wg":      dict(decoded=True, batched=True, grid=False),
     "decoded": dict(decoded=True, batched=False),
@@ -501,8 +557,9 @@ class Runtime:
 
     ``degrade=True`` (default) arms the executor degradation chain: an
     ``EngineFault`` in a fast path rolls written buffers back to their
-    pre-launch snapshot and retries one rung down (grid -> wg-batched
-    -> decoded -> oracle), recording every attempt in
+    pre-launch snapshot and retries one rung down (jax-codegen when
+    enabled -> grid -> wg-batched -> decoded -> oracle), recording
+    every attempt in
     ``self.last_report``.  ``transactional=False`` disables the
     write-root snapshots — and with them the chain, since retrying over
     partially-committed stores (or re-applied atomics) would be unsound;
@@ -518,12 +575,17 @@ class Runtime:
     def __init__(self, *, warp_size: int = 32,
                  shared_in_local: bool = True,
                  batched: bool = True,
+                 jax: Optional[bool] = None,
                  degrade: bool = True,
                  transactional: bool = True,
                  govern: bool = True,
                  governor: Optional[_gov.GovernorConfig] = None) -> None:
         self.warp_size = warp_size
         self.batched = batched     # workgroup-batched lockstep executor
+        # jax codegen rung: opt-in (jax=True or VOLT_JAX=1) — default
+        # OFF so the numpy chain stays the reference behaviour
+        self.jax = bool(jax) if jax is not None \
+            else os.environ.get("VOLT_JAX", "0") not in ("", "0")
         self.degrade = degrade
         self.transactional = transactional
         self.govern = govern
@@ -664,6 +726,8 @@ class Runtime:
                               warp_size=self.warp_size)
         chain = list(_RUNG_ORDER) if self.batched \
             else list(_RUNG_ORDER[_RUNG_ORDER.index("decoded"):])
+        if not self.jax:
+            chain = [r for r in chain if r != "jax"]
         if not (self.degrade and self.transactional):
             chain = chain[:1]      # single attempt, no retry
         report = LaunchReport(kernel=kernel_fn.name)

@@ -13,7 +13,13 @@ audit): line counts are taken over the IN-BOUNDS indices of active
 lanes — loads clamp out-of-bounds lanes to the buffer edge first,
 stores/atomics have already validated theirs — and every executor
 agrees on it (regression: a kernel with OOB-clipped load indices runs
-through all four executors with identical ``mem_requests``).
+through all five executors with identical ``mem_requests``).
+
+The jax-codegen rung re-implements the rule a third way — a traced
+sentinel sort over the gathered (R, W) index matrix
+(``jaxgen.count_lines_traced``) instead of the engine's analytic
+closed forms or np.unique — so this suite also pins traced counts ==
+analytic fast path == oracle on the same OOB-clipped affine families.
 """
 import sys
 from pathlib import Path
@@ -204,15 +210,19 @@ EXECUTORS = {
     "decoded": dict(decoded=True, batched=False),
     "wg_batched": dict(decoded=True, batched=True, grid=False),
     "grid": dict(decoded=True, batched=True, grid=True),
+    "jax": dict(decoded=True, batched=True, grid=True, jax="fallback"),
 }
 
 
 def test_oob_clip_rule_consistent_across_executors():
     """The audit's regression: a transpose load reads x[col*n + row]
     for every thread of over-provisioned warps, so tail threads clamp
-    OOB indices — all four executors must count the clamped lines
+    OOB indices — all five executors must count the clamped lines
     identically (the one rule: in-bounds indices of active lanes), in
-    both counting modes."""
+    both counting modes.  For the jax rung that pins the traced
+    gathered-index counts against the engine's analytic fast path on
+    a real OOB-clip kernel, not just synthetic index matrices."""
+    from repro.core.backends import jaxgen
     b = BENCHES["transpose"]          # gid >= n*n lanes load OOB
     rng = np.random.default_rng(3)
     bufs0, sc, params = b.make(rng)
@@ -221,6 +231,10 @@ def test_oob_clip_rule_consistent_across_executors():
         p = interp.fold_warps(params, factor)
         stats = {}
         for label, kw in EXECUTORS.items():
+            if label == "jax":        # certification warm-up launch
+                jaxgen.reset_jax_telemetry()
+                bufs = {k: v.copy() for k, v in bufs0.items()}
+                interp.launch(fn, bufs, p, scalar_args=sc, **kw)
             bufs = {k: v.copy() for k, v in bufs0.items()}
             stats[label] = _stats_tuple(interp.launch(
                 fn, bufs, p, scalar_args=sc, **kw))
@@ -230,10 +244,40 @@ def test_oob_clip_rule_consistent_across_executors():
                                                  scalar_args=sc, **kw))
             assert ref == stats[label], \
                 f"{label} x{factor}: counting mode changed ExecStats"
-        for label in ("decoded", "wg_batched", "grid"):
+        assert jaxgen.JAX_TELEMETRY["engaged"] >= 1, \
+            f"x{factor}: jax rung must engage on the OOB-clip kernel"
+        for label in ("decoded", "wg_batched", "grid", "jax"):
             assert stats[label] == stats["oracle"], \
                 f"{label} x{factor}: executors disagree on " \
                 f"clipped-line counts"
+
+
+def test_jax_traced_counts_match_analytic_fast_path():
+    """Engine-level pin: the jax rung's traced sentinel-sort counter
+    over gathered (R, W) indices == the analytic affine fast path ==
+    the np.unique oracle, on OOB-clipped affine families across stride
+    signs, warp widths and ragged masks (the exact shape the licence
+    admits: clip is monotone, so the affine fact survives while the
+    traced counter sees the already-clipped gather indices)."""
+    import jax.numpy as jnp
+
+    from repro.core.backends import jaxgen
+    rng = np.random.default_rng(9)
+    ctx = _Ctx()
+    for _ in range(60):
+        R = int(rng.integers(1, 40))
+        W = int(rng.choice([1, 8, 32]))
+        n = int(rng.integers(1, 2000))
+        s = int(rng.choice([-7, -2, -1, 1, 2, 5, 16, 33]))
+        base = rng.integers(-50, n + 50, (R, 1))
+        aff = np.clip(base + s * np.arange(W), 0, n - 1).astype(np.int64)
+        mask = rng.uniform(0, 1, (R, W)) < rng.uniform(0, 1)
+        fact = AffineFact("inc" if s > 0 else "dec", False, abs(s),
+                          int(np.abs(base).max()) + 1)
+        analytic = interp_mem.count_rows(aff, mask, 0, n, fact, ctx)
+        traced = int(jaxgen.count_lines_traced(
+            jnp.asarray(aff.astype(np.int32)), jnp.asarray(mask), W))
+        assert traced == analytic == _oracle_rows(aff, mask)
 
 
 @pytest.mark.parametrize("name", ["vecadd", "reduce0", "spmv_csr",

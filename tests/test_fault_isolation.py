@@ -295,6 +295,130 @@ def test_scoped_sites_never_fire_in_the_oracle():
 
 
 # --------------------------------------------------------------------------
+# jax rung recovery (the chain's TOP rung; off by default, so the fixed
+# matrix exercises its sites vacuously — these arm Runtime(jax=True))
+# --------------------------------------------------------------------------
+
+from repro.core.backends import jaxgen
+
+_JAX_SITES = ("jax.trace", "jax.exec", "jax.cache.load")
+
+
+def _jax_case(name: str):
+    """A licence-admitted case at this suite's standard factor, with
+    jax trace/cert caches dropped for a deterministic cold start."""
+    fn, bufs0, scalars, params = _case(name, _factor(name))
+    ok, why = jaxgen.licence_check(fn, params, bufs0, scalars or {}, {})
+    assert ok, f"{name} must stay jax-licensed for this test: {why}"
+    for attr in ("_jaxgen_cache", "_jax_certs"):
+        if hasattr(fn, attr):
+            delattr(fn, attr)
+    return fn, bufs0, scalars, params
+
+
+@pytest.mark.parametrize("site", _JAX_SITES)
+@pytest.mark.parametrize("name", ["vecadd", "spmv_tail"])
+def test_jax_fault_demotes_to_grid(monkeypatch, name, site):
+    """Every jax fault site, injected cold: the top rung dies, the
+    runtime rolls back (nothing was written — the jax rung stages all
+    stores device-side) and the grid rung reproduces the oracle's
+    bytes and stats exactly."""
+    monkeypatch.setenv("VOLT_DISK_CACHE", "0")
+    _jax_case(name)                    # assert licence + drop caches
+    oracle = _oracle(name)
+    jaxgen.reset_jax_telemetry()
+    with faults.inject(site) as inj:
+        got, rt = _rt_launch(name, jax=True)
+    rep = rt.last_report
+    assert inj.fired >= 1, f"{site} must fire on a jax=True launch"
+    assert got[0] == "ok"
+    assert conf._stats_tuple(got[2]) == conf._stats_tuple(oracle[2]), \
+        f"{name}/{site}: ExecStats diverged through jax demotion"
+    for k in oracle[3]:
+        np.testing.assert_array_equal(oracle[3][k], got[3][k],
+                                      err_msg=f"{name}/{site}: buffer {k}")
+    assert rep.attempts[0].rung == "jax"
+    assert rep.attempts[0].outcome == "engine_fault"
+    assert rep.demotions >= 1 and rep.rolled_back == rep.demotions
+    assert rep.executor == "grid", \
+        "jax rung must hand off to the grid rung, not skip it"
+    assert jaxgen.JAX_TELEMETRY["demotions"] >= 1
+    assert jaxgen.JAX_TELEMETRY["engaged"] == 0
+
+
+def test_jax_cert_run_fault_records_no_verdict(monkeypatch):
+    """An injected infra fault DURING a certification run must leave
+    the (kernel, shape) pair uncertified — not pinned to a permanent
+    "fail" — so the next clean launch re-runs certification and then
+    promotes to the jitted primary."""
+    monkeypatch.setenv("VOLT_DISK_CACHE", "0")
+    name = "vecadd"
+    fn, _, _, _ = _jax_case(name)
+    oracle = _oracle(name)
+    jaxgen.reset_jax_telemetry()
+    with faults.inject("jax.exec") as inj:
+        got, rt = _rt_launch(name, jax=True)
+    assert inj.fired >= 1
+    assert got[0] == "ok"
+    certs = getattr(fn, "_jax_certs", (None, {}))[1]
+    assert not certs, \
+        f"faulted cert run must record no verdict, got {certs}"
+    t = dict(jaxgen.JAX_TELEMETRY)
+    assert t["cert_runs"] == 1 and t["certified"] == 0
+
+    # clean launches: #1 re-certifies (pass), #2 runs the jitted primary
+    jaxgen.reset_jax_telemetry()
+    got1, _ = _rt_launch(name, jax=True)
+    got2, rt2 = _rt_launch(name, jax=True)
+    t = dict(jaxgen.JAX_TELEMETRY)
+    assert t["cert_runs"] == 1 and t["certified"] == 1
+    assert t["engaged"] == 1
+    assert rt2.last_report.executor == "jax"
+    assert rt2.last_report.demotions == 0
+    for g in (got1, got2):
+        assert conf._stats_tuple(g[2]) == conf._stats_tuple(oracle[2])
+        for k in oracle[3]:
+            np.testing.assert_array_equal(oracle[3][k], g[3][k])
+
+
+def test_jax_certified_primary_fault_demotes_bit_exactly(monkeypatch):
+    """The warm path: certify cleanly first, THEN kill the jitted
+    primary mid-chunk-loop.  The staged device buffers are discarded,
+    host buffers stay pristine, and the grid retry is bit-exact."""
+    monkeypatch.setenv("VOLT_DISK_CACHE", "0")
+    # several host-loop chunks so the fault can land AFTER one ran
+    monkeypatch.setattr(jaxgen, "_CHUNK_WGS", 8)
+    name = "spmv_tail"
+    _jax_case(name)
+    oracle = _oracle(name)
+    got0, _ = _rt_launch(name, jax=True)       # certification launch
+    assert got0[0] == "ok"
+    jaxgen.reset_jax_telemetry()
+    with faults.inject("jax.exec", after=1) as inj:
+        got, rt = _rt_launch(name, jax=True)
+    rep = rt.last_report
+    assert inj.fired == 1, "fault must hit after the first chunk ran"
+    assert rep.attempts[0].rung == "jax"
+    assert rep.attempts[0].outcome == "engine_fault"
+    assert rep.executor == "grid"
+    assert conf._stats_tuple(got[2]) == conf._stats_tuple(oracle[2])
+    for k in oracle[3]:
+        np.testing.assert_array_equal(oracle[3][k], got[3][k],
+                                      err_msg=f"warm demotion buffer {k}")
+
+
+def test_jax_rung_skipped_entirely_when_disabled():
+    """Runtime() default (VOLT_JAX unset/0): the jax sites are dead
+    code — armed injections never fire and no jax attempt appears."""
+    for site in _JAX_SITES:
+        with faults.inject(site) as inj:
+            got, rt = _rt_launch("vecadd")
+        assert got[0] == "ok"
+        assert inj.fired == 0, f"{site} fired with the jax rung disabled"
+        assert all(a.rung != "jax" for a in rt.last_report.attempts)
+
+
+# --------------------------------------------------------------------------
 # randomized sweep (CI's second job leg; seed from the environment)
 # --------------------------------------------------------------------------
 

@@ -184,6 +184,50 @@ def test_generous_deadline_is_neutral():
     _same(outs[1], outs[0], "busy_loop")
 
 
+def test_jax_deadline_expiry_is_bit_invisible_and_leaves_no_verdict(
+        monkeypatch):
+    """Deadline death on a Runtime(jax=True) launch: buffers roll back
+    to pre-launch bytes and the (kernel, shape) pair records NO
+    certification verdict — a timed-out certification must not pin the
+    pair to "fail".  The same runtime then certifies and serves the
+    kernel under a workable deadline, bit-identically to the oracle."""
+    monkeypatch.setenv("VOLT_DISK_CACHE", "0")
+    from repro.core.backends import jaxgen
+    monkeypatch.setattr(jaxgen, "_CHUNK_WGS", 1)   # one check per wg
+    fn, bufs0, scalars, params = _case("spmv_tail", 1)
+    for attr in ("_jaxgen_cache", "_jax_certs"):
+        if hasattr(fn, attr):
+            delattr(fn, attr)
+    oracle = conf._run_one(fn, bufs0, params, scalars,
+                           dict(decoded=False))
+    rt = Runtime(jax=True)
+    for k, v in bufs0.items():
+        rt.create_buffer(k, v.copy())
+    jaxgen.reset_jax_telemetry()
+    with pytest.raises(faults.DeadlineExceeded):
+        rt.launch(fn, grid=params.grid, block=params.local_size,
+                  scalar_args=scalars, deadline_ms=0.0)
+    assert rt.last_report.deadline_expired
+    assert jaxgen.JAX_TELEMETRY["engaged"] == 0
+    certs = getattr(fn, "_jax_certs", (None, {}))[1]
+    assert not certs, f"timed-out launch recorded a verdict: {certs}"
+    for k, v in bufs0.items():
+        np.testing.assert_array_equal(rt.buffers[k], v,
+                                      err_msg=f"buffer {k}")
+    # recovery: certify + promote under a generous deadline
+    st_ = rt.launch(fn, grid=params.grid, block=params.local_size,
+                    scalar_args=scalars, deadline_ms=600_000.0)
+    st2 = rt.launch(fn, grid=params.grid, block=params.local_size,
+                    scalar_args=scalars, deadline_ms=600_000.0)
+    assert jaxgen.JAX_TELEMETRY["certified"] == 1
+    assert jaxgen.JAX_TELEMETRY["engaged"] == 1
+    assert rt.last_report.executor == "jax"
+    for s in (st_, st2):
+        assert conf._stats_tuple(s) == conf._stats_tuple(oracle[2])
+    for k in oracle[3]:
+        np.testing.assert_array_equal(oracle[3][k], rt.buffers[k])
+
+
 def test_default_deadline_from_governor_config():
     fn, bufs0, scalars, grid = _busy()
     rt = Runtime(governor=governor.GovernorConfig(deadline_ms=10.0))
@@ -281,6 +325,48 @@ def test_breaker_is_keyed_by_kernel_content():
     assert key1 != key2
     assert rt.breaker.entries[key1].state == "open"
     assert key2 not in rt.breaker.entries
+
+
+def test_breaker_pins_below_faulty_jax_rung(monkeypatch):
+    """Runtime(jax=True) with the jitted executor faulting: the first
+    launch demotes jax -> grid and opens the breaker; subsequent
+    launches are pinned at grid and never attempt the jax rung at all
+    (no retrace, no re-certification, no demotion walk)."""
+    monkeypatch.setenv("VOLT_DISK_CACHE", "0")
+    from repro.core.backends import jaxgen
+    fn, bufs0, scalars, params = _case("vecadd", 1)
+    for attr in ("_jaxgen_cache", "_jax_certs"):
+        if hasattr(fn, attr):
+            delattr(fn, attr)
+    ok, why = jaxgen.licence_check(fn, params, bufs0, scalars or {}, {})
+    assert ok, why
+    oracle = conf._run_one(fn, bufs0, params, scalars,
+                           dict(decoded=False))
+    rt = Runtime(jax=True, governor=governor.GovernorConfig(
+        breaker_threshold=1, breaker_probe_every=64))
+    for k, v in bufs0.items():
+        rt.create_buffer(k, v.copy())
+    kw = dict(grid=params.grid, block=params.local_size,
+              scalar_args=scalars)
+
+    def hit():
+        st_ = rt.launch(fn, **kw)
+        assert conf._stats_tuple(st_) == conf._stats_tuple(oracle[2])
+        for k in oracle[3]:
+            np.testing.assert_array_equal(oracle[3][k], rt.buffers[k])
+        return rt.last_report
+
+    with faults.inject("jax.exec"):
+        r = hit()
+        assert r.attempts[0].rung == "jax"
+        assert r.attempts[0].outcome == "engine_fault"
+        assert r.executor == "grid" and r.demotions == 1
+        assert r.breaker == "open"
+        for _ in range(2):
+            r = hit()
+            assert r.pinned_rung == "grid" and r.demotions == 0
+            assert all(a.rung != "jax" for a in r.attempts), \
+                "pinned launches must not touch the faulty jax rung"
 
 
 def test_breaker_disabled_when_ungoverned():

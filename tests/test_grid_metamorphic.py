@@ -21,10 +21,20 @@ resurrected compacted row — fails loudly.  A workgroup-permutation test
 adds the classic metamorphic relation: permuting which workgroup owns
 which CSR row must permute the output the same way, bit for bit.
 
+The jax-codegen rung (PR 8) sits one level up and has its own internal
+freedoms, swept in the same style: host-loop CHUNK WIDTH
+(``jaxgen._CHUNK_WGS`` — part of the certification shape signature, so
+every width retraces AND re-certifies from scratch), trace/cert CACHE
+temperature (cold-compile, hot-cache and re-cold runs must be
+bit-identical), and the ``jax.disable_jit()`` escape hatch (eager
+op-by-op execution of the traced chunk function must match both the
+AOT-compiled executable and the oracle).
+
 Deterministic sweeps run everywhere; a hypothesis section fuzzes ragged
-trip vectors, grid shapes and config combinations (skipped without
-hypothesis; CI installs it from requirements-dev.txt and caps the
-example budget via VOLT_HYPOTHESIS_MAX_EXAMPLES).
+trip vectors, grid shapes and config combinations, plus the jax rung's
+distinct-cache-line counting against ``interp_mem.reference_counting``
+(skipped without hypothesis; CI installs it from requirements-dev.txt
+and caps the example budget via VOLT_HYPOTHESIS_MAX_EXAMPLES).
 """
 import os
 import sys
@@ -35,7 +45,11 @@ import pytest
 
 sys.path.insert(0, str(Path(__file__).parent / "kernels"))
 
-from repro.core import interp
+import jax
+import jax.numpy as jnp
+
+from repro.core import interp, interp_mem
+from repro.core.backends import jaxgen
 from repro.core.passes.pipeline import ABLATION_LADDER, run_pipeline
 from repro.volt_bench import BENCHES
 
@@ -320,6 +334,113 @@ def test_compaction_needs_private_stores():
 
 
 # --------------------------------------------------------------------------
+# jax-rung metamorphic sweeps
+# --------------------------------------------------------------------------
+
+_JAX_KW = dict(decoded=True, batched=True, grid=True, jax="fallback")
+
+
+def _jax_cases(factor=1):
+    """Licence-admitted (name, fn, bufs, scalars, params-at-factor)
+    tuples from the ragged registry (bfs_frontier refuses the
+    order-free licence and drops out)."""
+    out = []
+    for name, fn, bufs, sc, params in _ragged_cases():
+        p = interp.fold_warps(params, factor)
+        ok, _why = jaxgen.licence_check(fn, p, bufs, sc or {}, {})
+        if ok:
+            out.append((name, fn, bufs, sc, p))
+    return out
+
+
+def _jax_launch(fn, bufs0, params, sc):
+    """Certification warm-up launch + certified primary launch; returns
+    the primary's (stats, buffers)."""
+    warm = {k: v.copy() for k, v in bufs0.items()}
+    interp.launch(fn, warm, params, scalar_args=sc, **_JAX_KW)
+    return _launch(fn, bufs0, params, sc, **_JAX_KW)
+
+
+def _drop_jax_caches(fn):
+    for attr in ("_jaxgen_cache", "_jax_certs"):
+        if hasattr(fn, attr):
+            delattr(fn, attr)
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 64])
+def test_jax_chunk_size_invariance(monkeypatch, chunk):
+    """Results must not depend on how the jax host loop chunks the
+    workgroup axis.  The chunk width is part of the shape signature, so
+    each width is a fresh trace + fresh differential certification —
+    this sweeps the whole certify-then-promote machine, not just the
+    compiled executable."""
+    monkeypatch.setenv("VOLT_DISK_CACHE", "0")
+    monkeypatch.setattr(jaxgen, "_CHUNK_WGS", chunk)
+    engaged = 0
+    for factor in (1, 2):
+        cases = _jax_cases(factor)
+        assert len(cases) >= 2, "ragged registry must license >= 2 cases"
+        for name, fn, bufs, sc, p in cases:
+            oracle = _launch(fn, bufs, p, sc, decoded=False)
+            jaxgen.reset_jax_telemetry()
+            got = _jax_launch(fn, bufs, p, sc)
+            _assert_same(f"{name} x{factor} jax chunk={chunk}",
+                         oracle, got)
+            engaged += jaxgen.JAX_TELEMETRY["engaged"]
+    assert engaged >= 4, "jax rung must engage on every licensed case"
+
+
+def test_jax_cache_hot_cold_invariance(monkeypatch):
+    """Cold trace+certify, hot cache, and re-cold runs must be
+    bit-identical — the caches are pure memoisation, never semantics.
+    Telemetry proves each temperature actually took its intended path."""
+    monkeypatch.setenv("VOLT_DISK_CACHE", "0")
+    cases = _jax_cases()
+    assert cases, "ragged registry must license jax cases"
+    for name, fn, bufs, sc, p in cases:
+        _drop_jax_caches(fn)
+        oracle = _launch(fn, bufs, p, sc, decoded=False)
+        jaxgen.reset_jax_telemetry()
+        cold = _jax_launch(fn, bufs, p, sc)
+        t_cold = dict(jaxgen.JAX_TELEMETRY)
+        jaxgen.reset_jax_telemetry()
+        hot = _jax_launch(fn, bufs, p, sc)
+        t_hot = dict(jaxgen.JAX_TELEMETRY)
+        _drop_jax_caches(fn)
+        jaxgen.reset_jax_telemetry()
+        recold = _jax_launch(fn, bufs, p, sc)
+        _assert_same(f"{name} jax cold vs oracle", oracle, cold)
+        _assert_same(f"{name} jax hot vs cold", cold, hot)
+        _assert_same(f"{name} jax re-cold vs hot", hot, recold)
+        assert t_cold["cert_runs"] >= 1 and t_cold["certified"] >= 1, \
+            f"{name}: cold run must certify"
+        assert t_hot["cert_runs"] == 0, \
+            f"{name}: hot run must not re-certify"
+        assert t_hot["trace_cache_hits"] >= 1, \
+            f"{name}: hot run must hit the trace cache"
+
+
+def test_jax_disable_jit_invariance(monkeypatch):
+    """Under ``jax.disable_jit()`` the rung runs the traced chunk
+    function eagerly, op by op — same code path the oracle differential
+    certifies, minus XLA entirely.  Eager, AOT-compiled and oracle
+    results must all agree bit for bit."""
+    monkeypatch.setenv("VOLT_DISK_CACHE", "0")
+    cases = _jax_cases()
+    assert cases, "ragged registry must license jax cases"
+    for name, fn, bufs, sc, p in cases:
+        oracle = _launch(fn, bufs, p, sc, decoded=False)
+        compiled = _jax_launch(fn, bufs, p, sc)
+        jaxgen.reset_jax_telemetry()
+        with jax.disable_jit():
+            eager = _launch(fn, bufs, p, sc, **_JAX_KW)
+        assert jaxgen.JAX_TELEMETRY["engaged"] >= 1, \
+            f"{name}: rung must engage eagerly under disable_jit"
+        _assert_same(f"{name} jax compiled vs oracle", oracle, compiled)
+        _assert_same(f"{name} jax eager vs compiled", compiled, eager)
+
+
+# --------------------------------------------------------------------------
 # hypothesis fuzzing
 # --------------------------------------------------------------------------
 
@@ -407,6 +528,35 @@ if _HAVE_HYPOTHESIS:
         got = _launch(fn, bufs, params, sc, grid=True)
         _assert_same(f"barrier{(n_warps, grid, chunk, seed)}",
                      oracle, got)
+
+    @needs_hypothesis
+    @settings(max_examples=min(50, _H_EXAMPLES), deadline=None)
+    @given(w=st.sampled_from([1, 2, 7, 31, 32]),
+           rows=st.integers(1, 6),
+           hi=st.integers(1, 512),
+           density=st.floats(0.0, 1.0),
+           wide=st.booleans(),
+           seed=st.integers(0, 2**31 - 1))
+    def test_jax_line_count_matches_reference(w, rows, hi, density,
+                                              wide, seed):
+        """The jax rung's traced distinct-cache-line counter (sentinel
+        sort over (R, W) index matrices) vs the exact np.unique oracle
+        in ``interp_mem.reference_counting`` mode, per warp AND over
+        already-gathered active-lane indices — fuzzing warp width, row
+        count, index range/dtype and mask density (incl. all-dead and
+        all-live warps)."""
+        rng = np.random.default_rng(seed)
+        dt = np.int64 if wide else np.int32
+        idx = rng.integers(0, hi, (rows, w)).astype(dt)
+        mask = rng.uniform(0, 1, (rows, w)) < density
+        got = int(jaxgen.count_lines_traced(
+            jnp.asarray(idx.astype(np.int32)), jnp.asarray(mask), w))
+        with interp_mem.reference_counting():
+            per_warp = sum(int(interp_mem.count_warp(idx[r], mask[r]))
+                           for r in range(rows))
+            gathered = sum(int(interp_mem.count_gathered(idx[r][mask[r]]))
+                           for r in range(rows))
+        assert got == per_warp == gathered
 else:
     @needs_hypothesis
     def test_grid_config_invariance_random():
@@ -414,4 +564,8 @@ else:
 
     @needs_hypothesis
     def test_grid_barrier_remerge_random():
+        pass
+
+    @needs_hypothesis
+    def test_jax_line_count_matches_reference():
         pass
