@@ -28,6 +28,10 @@ markdown tables above them).  Sections:
                    overhead on the clean path (<5% acceptance) and
                    degraded-mode throughput per executor rung
                    (docs/robustness.md)
+  bench_serve    : multi-tenant small-launch streaming — LaunchService
+                   continuous launch batching + pooled staging tables
+                   vs per-launch dispatch, parity-gated (launches/sec,
+                   p50/p99 latency, >= 2x acceptance)
   kernels        : Pallas kernel vs jnp-oracle timings (CPU interpret)
   roofline       : per (arch x shape x mesh) three-term roofline rows
 
@@ -87,6 +91,9 @@ CHECKED_METRICS = [
     # demoted-walk/pinned wall-time ratio: a drop means an open breaker
     # no longer buys back the doomed fast-path attempt during outages
     ("bench_robust", "breaker_pinned_recovery"),
+    # coalesced-vs-solo wall-time ratio on small-launch streaming —
+    # the launch service's headline claim (acceptance floor 2x)
+    ("bench_serve", "coalesce_speedup"),
 ]
 
 #: top-N functions shown per section under ``--profile``
@@ -149,7 +156,7 @@ def check_regressions(fresh: dict, committed: dict,
 def main() -> None:
     from benchmarks import (compile_time, divergence_opt, interp_speed,
                             isa_ext, kernels_bench, robustness,
-                            roofline_bench, sharedmem)
+                            roofline_bench, serve_bench, sharedmem)
     sections = [
         ("divergence_opt", divergence_opt.main),
         ("isa_ext", isa_ext.main),
@@ -163,6 +170,7 @@ def main() -> None:
         ("interp_speed_mem", interp_speed.main_mem),
         ("interp_speed_jax", interp_speed.main_jax),
         ("bench_robust", robustness.main),
+        ("bench_serve", serve_bench.main),
         ("kernels", kernels_bench.main),
         ("roofline", roofline_bench.main),
     ]
@@ -174,7 +182,8 @@ def main() -> None:
     perf_sections = {"interp_speed", "interp_speed_batched",
                      "interp_speed_ragged", "interp_speed_grid",
                      "interp_speed_grid_mw", "interp_speed_mem",
-                     "interp_speed_jax", "compile_time", "bench_robust"}
+                     "interp_speed_jax", "compile_time", "bench_robust",
+                     "bench_serve"}
     perf: dict = {}
     for name, fn in sections:
         if only == "perf":

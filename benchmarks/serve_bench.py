@@ -1,0 +1,208 @@
+"""Serve-side launch throughput: continuous launch batching vs
+per-launch dispatch (docs/performance.md "Serve side").
+
+Workload: ``TENANTS`` tenants each stream ``ROUNDS`` small launches of
+the same compiled kernel against their OWN buffer dicts — the
+multi-tenant steady state the runtime's :class:`LaunchService` exists
+for.  Two modes over identical inputs:
+
+  * **solo** — every launch goes through ``Runtime.launch`` alone: full
+    degradation chain, its own snapshot, its own grid-chunk decode.
+  * **coalesced** — launches are ``submit()``-ed to a LaunchService and
+    drained once per round: compatible launches fuse into shared grid
+    chunks (one decode, one lockstep walk for the whole tenant batch),
+    staging tables come from the Runtime's pooled allocator.
+
+Parity is a GATE, not a hope: before timing, one full streamed run per
+mode is compared tenant-by-tenant — final buffers byte-identical and
+per-launch ExecStats field-identical — so the speedup below is the
+price of nothing.
+
+Reported (``bench_serve`` in BENCH_perf.json): per-kernel launches/sec
+for both modes, p50/p99 per-launch latency, and the CHECKED
+``coalesce_speedup`` aggregate (wall-time ratio, small-launch streaming
+vs per-launch dispatch; acceptance floor 2x).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import interp, runtime
+from repro.core.passes.pipeline import ABLATION_LADDER
+from repro.volt_bench import BENCHES
+
+FULL = ABLATION_LADDER[-1]
+
+#: coalescible, separate-output registry benches with small launches —
+#: the regime where per-launch dispatch overhead dominates useful work
+SERVE_BENCHES = ["vecadd", "sfilter", "blackscholes"]
+
+TENANTS = 8
+ROUNDS = 30
+REPS = 3
+
+
+def _mk_tenants(bench, n: int, seed: int = 7):
+    out = []
+    for j in range(n):
+        rng = np.random.default_rng(seed + j)
+        bufs, scalars, params = bench.make(rng)
+        out.append((bufs, scalars, params))
+    return out
+
+
+def _stats_sig(st: interp.ExecStats):
+    return (st.instrs, dict(st.by_op), st.mem_requests, st.mem_insts,
+            st.shared_requests, st.atomic_serial, st.max_ipdom_depth,
+            st.prints)
+
+
+def _run_solo(fn, tenants, rounds: int) -> List[interp.ExecStats]:
+    rt = runtime.Runtime()
+    stats = []
+    for _ in range(rounds):
+        for (bufs, scalars, params) in tenants:
+            stats.append(rt.launch(
+                fn, grid=params.grid, block=params.local_size,
+                scalar_args=scalars, buffers=bufs))
+    return stats
+
+
+def _run_coalesced(fn, tenants, rounds: int,
+                   lat_ms: Optional[List[float]] = None
+                   ) -> List[interp.ExecStats]:
+    rt = runtime.Runtime()
+    svc = runtime.LaunchService(rt)
+    stats = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        handles = [svc.submit(fn, grid=params.grid,
+                              block=params.local_size, buffers=bufs,
+                              scalar_args=scalars, tenant=j)
+                   for j, (bufs, scalars, params) in enumerate(tenants)]
+        svc.flush()
+        if lat_ms is not None:
+            # every launch in the round completes at drain time: the
+            # per-launch latency is the round's submit+flush wall
+            lat_ms.extend(
+                [(time.perf_counter() - t0) * 1e3] * len(handles))
+        stats.extend(h.result() for h in handles)
+    assert svc.telemetry["groups"] >= rounds, \
+        f"coalescing never engaged: {dict(svc.telemetry)}"
+    return stats
+
+
+def _parity_gate(name: str, fn, bench, rounds: int) -> None:
+    solo_t = _mk_tenants(bench, TENANTS)
+    co_t = _mk_tenants(bench, TENANTS)
+    st_solo = _run_solo(fn, solo_t, rounds)
+    st_co = _run_coalesced(fn, co_t, rounds)
+    for j, ((sb, _, _), (cb, _, _)) in enumerate(zip(solo_t, co_t)):
+        for k in sb:
+            np.testing.assert_array_equal(
+                sb[k], cb[k],
+                err_msg=f"{name}: tenant {j} buffer {k} diverged "
+                        f"between solo and coalesced streaming")
+    for i, (a, b) in enumerate(zip(st_solo, st_co)):
+        assert _stats_sig(a) == _stats_sig(b), \
+            f"{name}: launch {i} stats diverged"
+
+
+def _best_of(fn, reps: int = REPS) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(benches: Optional[List[str]] = None,
+        rounds: int = ROUNDS) -> Dict:
+    names = benches or SERVE_BENCHES
+    out: Dict[str, Dict[str, float]] = {}
+    for name in names:
+        b = BENCHES[name]
+        ck = runtime.compile_kernel(b.handle, FULL)
+        _parity_gate(name, ck.fn, b, max(2, rounds // 10))
+
+        n_launches = TENANTS * rounds
+        t_solo = _best_of(
+            lambda: _run_solo(ck.fn, _mk_tenants(b, TENANTS), rounds))
+        # per-launch latency, solo: one timed streamed pass
+        solo_lat: List[float] = []
+        rt = runtime.Runtime()
+        for _ in range(rounds):
+            for (bufs, scalars, params) in _mk_tenants(b, TENANTS):
+                t0 = time.perf_counter()
+                rt.launch(ck.fn, grid=params.grid,
+                          block=params.local_size, scalar_args=scalars,
+                          buffers=bufs)
+                solo_lat.append((time.perf_counter() - t0) * 1e3)
+        co_lat: List[float] = []
+        t_co = _best_of(
+            lambda: _run_coalesced(ck.fn, _mk_tenants(b, TENANTS),
+                                   rounds, lat_ms=co_lat))
+        out[name] = {
+            "launches": n_launches,
+            "solo_ms": t_solo * 1e3,
+            "coalesced_ms": t_co * 1e3,
+            "solo_launches_per_sec": n_launches / t_solo,
+            "coalesced_launches_per_sec": n_launches / t_co,
+            "speedup": t_solo / t_co,
+            "solo_p50_latency_ms": float(np.percentile(solo_lat, 50)),
+            "solo_p99_latency_ms": float(np.percentile(solo_lat, 99)),
+            "p50_latency_ms": float(np.percentile(co_lat, 50)),
+            "p99_latency_ms": float(np.percentile(co_lat, 99)),
+        }
+    return out
+
+
+def aggregate(results: Dict) -> Dict[str, float]:
+    t_solo = sum(v["solo_ms"] for v in results.values())
+    t_co = sum(v["coalesced_ms"] for v in results.values())
+    n = sum(v["launches"] for v in results.values())
+    sp = [v["speedup"] for v in results.values()]
+    return {
+        "total_solo_ms": t_solo,
+        "total_coalesced_ms": t_co,
+        "launches_per_sec_solo": n / (t_solo * 1e-3),
+        "launches_per_sec_coalesced": n / (t_co * 1e-3),
+        "coalesce_speedup": t_solo / t_co,
+        "geomean_speedup": float(np.exp(np.mean(np.log(sp)))),
+        "min_speedup": min(sp),
+        "max_speedup": max(sp),
+    }
+
+
+def main(benches: Optional[List[str]] = None,
+         rounds: int = ROUNDS) -> Dict:
+    results = run(benches=benches, rounds=rounds)
+    agg = aggregate(results)
+    print(f"\n| bench | solo lps | coalesced lps | speedup | p50 ms "
+          f"| p99 ms |")
+    print("|---|---|---|---|---|---|")
+    for name, v in results.items():
+        print(f"| {name} | {v['solo_launches_per_sec']:,.0f} | "
+              f"{v['coalesced_launches_per_sec']:,.0f} | "
+              f"{v['speedup']:.2f}x | {v['p50_latency_ms']:.3f} | "
+              f"{v['p99_latency_ms']:.3f} |")
+    print(f"\nbench_serve aggregate: "
+          f"{agg['launches_per_sec_solo']:,.0f} -> "
+          f"{agg['launches_per_sec_coalesced']:,.0f} launches/sec "
+          f"({agg['coalesce_speedup']:.2f}x)")
+    return {"results": results, "aggregate": agg}
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    res = main(benches=SERVE_BENCHES[:1] if smoke else None,
+               rounds=5 if smoke else ROUNDS)
+    if res["aggregate"]["coalesce_speedup"] < (1.0 if smoke else 2.0):
+        print(f"FAIL: coalesce_speedup "
+              f"{res['aggregate']['coalesce_speedup']:.2f} below floor")
+        sys.exit(1)

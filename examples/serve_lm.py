@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/serve_lm.py
     PYTHONPATH=src python examples/serve_lm.py --storm
+    PYTHONPATH=src python examples/serve_lm.py --launch-storm
 
 ``--storm`` drives the same traffic through the governor's
 admission-control path (docs/robustness.md "Launch governor"): a
@@ -10,6 +11,15 @@ and a probabilistic serve.prefill / serve.decode fault storm absorbed
 by jittered retries.  The run asserts the soak invariants — every
 request reaches a terminal state and the engine never dies — and exits
 non-zero if either fails, so CI can use it as an end-to-end smoke.
+
+``--launch-storm`` is the KERNEL-side twin (docs/performance.md "Serve
+side"): multi-tenant small-launch streaming through the runtime's
+``LaunchService`` with coalescing + the pooled allocator enabled, under
+a probabilistic fault storm on the coalesced walk and the grid
+executor.  Invariants: every handle reaches a terminal state, every
+tenant's buffers stay BIT-IDENTICAL to a fault-free solo reference
+(aborted groups rerun solo, faulted solo launches demote + roll back),
+and backpressure (EngineBusy) sheds overflow instead of wedging.
 """
 import argparse
 import os
@@ -94,11 +104,83 @@ def storm() -> None:
     print("[storm] post-storm clean request ok — engine alive")
 
 
+def launch_storm() -> None:
+    from repro.core import faults, runtime
+    from repro.core.passes.pipeline import ABLATION_LADDER
+    from repro.volt_bench import BENCHES
+
+    seed = int(os.environ.get("VOLT_SOAK_SEED", "1234"))
+    tenants, rounds = 6, 12
+    bench = BENCHES["vecadd"]
+    ck = runtime.compile_kernel(bench.handle, ABLATION_LADDER[-1])
+
+    def mk(j):
+        bufs, scalars, params = bench.make(np.random.default_rng(100 + j))
+        return bufs, scalars, params
+
+    # fault-free solo reference (authoritative per-tenant results)
+    ref = [mk(j) for j in range(tenants)]
+    rt0 = runtime.Runtime()
+    for _ in range(rounds):
+        for (bufs, scalars, params) in ref:
+            rt0.launch(ck.fn, grid=params.grid, block=params.local_size,
+                       scalar_args=scalars, buffers=bufs)
+
+    rt = runtime.Runtime()
+    svc = runtime.LaunchService(rt, max_pending=tenants)
+    live = [mk(j) for j in range(tenants)]
+    handles = []
+    busy = 0
+    try:
+        faults.install_spec(
+            f"coalesce.exec:0.3:{seed % 1000}, "
+            f"grid.exec:0.1:{seed % 1000 + 1}")
+        for _ in range(rounds):
+            for j, (bufs, scalars, params) in enumerate(live):
+                while True:
+                    try:
+                        handles.append(svc.submit(
+                            ck.fn, grid=params.grid,
+                            block=params.local_size, buffers=bufs,
+                            scalar_args=scalars, tenant=j))
+                        break
+                    except EngineBusy:
+                        busy += 1
+                        svc.flush()     # backpressure: drain, resubmit
+            svc.flush()
+    finally:
+        faults.clear()
+    assert all(h.done() for h in handles), "storm: non-terminal handle"
+    failed = [h for h in handles if h.error is not None]
+    assert not failed, f"storm: {len(failed)} launches failed " \
+        f"(faults must abort-to-solo or demote, never surface): " \
+        f"{failed[:3]}"
+    for j, ((rb, _, _), (lb, _, _)) in enumerate(zip(ref, live)):
+        for k in rb:
+            np.testing.assert_array_equal(
+                rb[k], lb[k], err_msg=f"storm: tenant {j} buffer {k} "
+                f"diverged from the fault-free solo reference")
+    t = runtime.LAUNCH_TELEMETRY
+    print(f"[launch-storm] {len(handles)} launches over {tenants} "
+          f"tenants: {svc.telemetry['groups']} coalesced groups, "
+          f"{svc.telemetry['group_aborts']} group aborts -> solo, "
+          f"{t['demotions']} solo demotions, {busy} busy rejections")
+    print(f"[launch-storm] pool: {rt.pool.telemetry()}")
+    print("[launch-storm] all tenants bit-identical to the fault-free "
+          "reference — faults stayed per-launch, never per-chunk")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--storm", action="store_true",
                     help="fault-storm soak with backpressure + deadlines")
-    if ap.parse_args().storm:
+    ap.add_argument("--launch-storm", action="store_true",
+                    help="kernel-launch storm through the LaunchService "
+                         "with coalescing + pooled memory under faults")
+    ns = ap.parse_args()
+    if ns.launch_storm:
+        launch_storm()
+    elif ns.storm:
         storm()
     else:
         main()

@@ -53,6 +53,8 @@ follow the PR 6/7 contracts unchanged.
 """
 from __future__ import annotations
 
+from time import perf_counter
+
 import numpy as np
 
 import jax
@@ -96,7 +98,16 @@ JAX_TELEMETRY = {
     "refusals": 0,       # licence/trace refusals (silent fallthrough)
     "demotions": 0,      # certified launches that faulted -> grid
     "trace_cache_hits": 0,
+    "routed_small": 0,   # certified but sent to the grid rung: the
+                         # measured grid time beats the jitted-dispatch
+                         # floor at this launch-shape class
 }
+
+#: route a certified launch to the grid rung when the measured grid
+#: time is below this fraction of the measured jax time — the margin
+#: keeps borderline shape classes on the certified primary (timing
+#: noise must not flap the route)
+_ROUTE_MARGIN = 0.9
 
 
 def reset_jax_telemetry() -> None:
@@ -1209,9 +1220,25 @@ def _certs(fn: Function) -> dict:
     return d
 
 
-def _record(fn: Function, sig: str, verdict: str) -> None:
+def _verdict_of(entry) -> tuple:
+    """Normalize a cert-store entry to ``(verdict, jax_ms, grid_ms)``.
+    Schema 3 stores the 3-tuple (docs/performance.md "Serve side"): the
+    differential certification run measures the normal chain anyway, so
+    its wall time rides along with the verdict, and the first certified
+    primary fills in the warm jitted time — together they let the
+    dispatch router send launches whose grid time beats the ~0.5 ms
+    jitted-dispatch floor straight to the grid rung.  Plain-string
+    entries (legacy in-memory) mean "no timings yet"."""
+    if isinstance(entry, tuple):
+        return entry
+    return (entry, None, None)
+
+
+def _record(fn: Function, sig: str, verdict: str,
+            jax_ms: float | None = None,
+            grid_ms: float | None = None) -> None:
     certs = _certs(fn)
-    certs[sig] = verdict
+    certs[sig] = (verdict, jax_ms, grid_ms)
     hooks = _interp.JAX_CERT_HOOKS
     if hooks is not None:
         try:
@@ -1253,7 +1280,8 @@ def licence_check(fn: Function, params, buffers: dict,
 
 
 def orchestrate(fn: Function, buffers: dict, params, scalar_args: dict,
-                mem, argmap: dict, stats, mode, run_normal) -> bool:
+                mem, argmap: dict, stats, mode, run_normal,
+                route: bool = False) -> bool:
     """The jax rung's launch entry, called from ``interp._launch_impl``
     with the "jax" rung pushed.  Returns True when THIS call produced
     the launch's results (either the jitted program ran as the
@@ -1264,6 +1292,12 @@ def orchestrate(fn: Function, buffers: dict, params, scalar_args: dict,
     ``mode``: True (chain rung — failures raise EngineFault so the
     runtime demotes + rolls back) or "fallback" (standalone — failures
     silently fall through, buffers untouched either way).
+
+    ``route``: enable the small-launch dispatch router (the Runtime
+    chain's ``jax="route"`` mode) — pairs whose measured grid time
+    beats the jitted dispatch floor are declined so they land on the
+    grid rung.  Direct ``jax=True`` calls (conformance sweeps, the
+    jax-vs-grid benchmarks) keep unconditional engagement.
     """
     try:
         rec = _prepare(fn, params, buffers, scalar_args, argmap,
@@ -1287,9 +1321,24 @@ def orchestrate(fn: Function, buffers: dict, params, scalar_args: dict,
             if mode == "fallback":
                 return False
             raise
-    verdict = _certs(fn).get(rec.sig)
+    verdict, v_jax_ms, v_grid_ms = _verdict_of(_certs(fn).get(rec.sig))
 
     if verdict == "fail":
+        return False
+
+    # ---- small-launch dispatch router --------------------------------
+    # A certified pair whose measured grid time beats the measured
+    # jitted time (dominated by the per-dispatch jit-call floor for
+    # small launches) is SERVED BY THE GRID RUNG: falling through here
+    # lands exactly there, with the verdict untouched — a bigger shape
+    # class of the same kernel still takes the jitted primary.
+    if (route and verdict is not None and v_jax_ms is not None
+            and v_grid_ms is not None
+            and v_grid_ms < v_jax_ms * _ROUTE_MARGIN):
+        JAX_TELEMETRY["routed_small"] += 1
+        hook = getattr(_interp, "ROUTED_SMALL_HOOK", None)
+        if hook is not None:
+            hook()
         return False
 
     if verdict is None:
@@ -1318,7 +1367,9 @@ def orchestrate(fn: Function, buffers: dict, params, scalar_args: dict,
         except Exception:
             jok = False
         try:
+            t0 = perf_counter()
             run_normal(stats)
+            grid_ms = (perf_counter() - t0) * 1e3
         except Exception:
             # outcome parity: the caller sees exactly the normal
             # chain's exception; the pair is pinned to it from now on
@@ -1331,7 +1382,11 @@ def orchestrate(fn: Function, buffers: dict, params, scalar_args: dict,
                             for nm in rec.buf_names))
 
         if jok and _agrees(host_bufs, jstats):
-            _record(fn, rec.sig, "pass")
+            # grid_ms rides along with the verdict; jax_ms stays None
+            # until the first certified primary measures the WARM
+            # dispatch (the cert run's timing is polluted by jit
+            # compilation)
+            _record(fn, rec.sig, "pass", grid_ms=grid_ms)
             JAX_TELEMETRY["certified"] += 1
             return True
         # ---- exact-tier retry ---------------------------------------
@@ -1352,13 +1407,15 @@ def orchestrate(fn: Function, buffers: dict, params, scalar_args: dict,
         except Exception:
             ehost = None
         ok = ehost is not None and _agrees(ehost, ejstats)
-        _record(fn, rec.sig, "pass-exact" if ok else "fail")
+        _record(fn, rec.sig, "pass-exact" if ok else "fail",
+                grid_ms=grid_ms if ok else None)
         if ok:
             JAX_TELEMETRY["certified"] += 1
         return True
 
     # ---- certified primary ------------------------------------------
     tier = "exact" if verdict == "pass-exact" else "fast"
+    t0 = perf_counter()
     try:
         host_bufs, jstats = _run(rec, fn, buffers, scalar_args, params,
                                  tier=tier)
@@ -1378,4 +1435,10 @@ def orchestrate(fn: Function, buffers: dict, params, scalar_args: dict,
             site="jax.exec", rung="jax") from e
     _apply(host_bufs, jstats, buffers, stats)
     JAX_TELEMETRY["engaged"] += 1
+    if v_jax_ms is None:
+        # first warm primary at this shape class: measure the jitted
+        # wall (dispatch floor included) so the router has both sides
+        _record(fn, rec.sig, verdict,
+                jax_ms=(perf_counter() - t0) * 1e3,
+                grid_ms=v_grid_ms)
     return True

@@ -85,6 +85,15 @@ class InjectedFault(EngineFault):
     """An ``EngineFault`` raised by the injection harness itself."""
 
 
+class EngineBusy(RuntimeError):
+    """Admission control backpressure: a bounded submit queue (the serve
+    engine's request queue, the runtime's launch-service queue) is full.
+    Raised BEFORE any work starts, so the caller can shed load or retry
+    with backoff; never a kernel-launch demotion.  Lives here (not in
+    serve/engine.py, which re-exports it) so core/runtime.py's launch
+    service can raise it without a core → serve import."""
+
+
 class FaultSpecError(ValueError):
     """Malformed ``VOLT_FAULT`` / ``install_spec`` component.  The
     message names the offending component so a fat-fingered env var
@@ -127,6 +136,9 @@ register_site("handler.atomic", "contended-RMW serialization ladder")
 register_site("mem.alloc", "device-memory lazy allocation (shared tiles, "
               "zero-filled globals) — also where VOLT_MEM_BUDGET "
               "overruns surface")
+register_site("coalesce.exec", "cross-launch coalesced lockstep node "
+              "walk — a hit aborts the GROUP (staging tables dropped, "
+              "tenant buffers untouched) and every tenant reruns solo")
 # jax codegen rung (core/backends/jaxgen.py): licence + trace, chunked
 # jitted execution, certification-cache read — all scoped, so a faulted
 # jax launch demotes to the grid rung with buffers untouched ----------------

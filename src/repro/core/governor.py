@@ -39,6 +39,7 @@ import it, not the other way round.
 from __future__ import annotations
 
 import os
+import threading
 from dataclasses import dataclass, field
 from time import perf_counter
 from typing import Dict, List, Optional, Tuple
@@ -132,9 +133,11 @@ def deadline_check() -> None:
 _SUFFIX = {"k": 1 << 10, "m": 1 << 20, "g": 1 << 30}
 
 
-def parse_mem_budget(val: Optional[str]) -> Optional[int]:
+def parse_mem_budget(val: Optional[str],
+                     name: str = "VOLT_MEM_BUDGET") -> Optional[int]:
     """``'65536'`` / ``'64k'`` / ``'16m'`` / ``'2g'`` -> bytes;
-    ``None`` / ``''`` / ``'0'`` -> no budget."""
+    ``None`` / ``''`` / ``'0'`` -> no budget.  ``name`` labels the
+    source knob in error messages (VOLT_POOL_BUDGET reuses the parser)."""
     if val is None:
         return None
     s = val.strip().lower()
@@ -148,15 +151,22 @@ def parse_mem_budget(val: Optional[str]) -> Optional[int]:
         n = int(float(s) * mult)
     except ValueError:
         raise ValueError(
-            f"VOLT_MEM_BUDGET {val!r}: expected bytes with optional "
+            f"{name} {val!r}: expected bytes with optional "
             f"k/m/g suffix (e.g. '64m')") from None
     if n < 0:
-        raise ValueError(f"VOLT_MEM_BUDGET {val!r}: must be >= 0")
+        raise ValueError(f"{name} {val!r}: must be >= 0")
     return n or None
 
 
 def env_mem_budget() -> Optional[int]:
     return parse_mem_budget(os.environ.get("VOLT_MEM_BUDGET"))
+
+
+def env_pool_budget() -> Optional[int]:
+    """``VOLT_POOL_BUDGET`` — capacity of the Runtime's pooled device
+    allocator (bytes retained across launches; same k/m/g syntax)."""
+    return parse_mem_budget(os.environ.get("VOLT_POOL_BUDGET"),
+                            name="VOLT_POOL_BUDGET")
 
 
 @dataclass
@@ -171,6 +181,9 @@ class GovernorConfig:
     breaker_probe_every: int = 8
     #: device-memory + snapshot byte budget; None -> VOLT_MEM_BUDGET
     mem_budget: Optional[int] = None
+    #: pooled-allocator capacity (bytes of free-list backing retained
+    #: across launches); None -> VOLT_POOL_BUDGET, else a 64 MiB default
+    pool_budget: Optional[int] = None
 
 
 # --------------------------------------------------------------------------
@@ -198,67 +211,82 @@ class BreakerEntry:
 
 
 class CircuitBreaker:
+    """Per-kernel breaker bank.  State transitions are serialized by an
+    internal lock so concurrent tenants (the runtime's launch service
+    drains from caller threads) can't interleave plan/record and lose a
+    trip count or double-probe; the lock bounds nothing hot — breaker
+    calls are one-per-launch, not per-node."""
+
     def __init__(self, threshold: int = 3, probe_every: int = 8) -> None:
         self.threshold = max(1, int(threshold))
         self.probe_every = max(1, int(probe_every))
         self.entries: Dict[str, BreakerEntry] = {}
+        self._lock = threading.Lock()
 
-    def entry(self, key: str, kernel: str) -> BreakerEntry:
+    def _entry(self, key: str, kernel: str) -> BreakerEntry:
+        # internal: caller holds self._lock
         st = self.entries.get(key)
         if st is None:
             st = self.entries[key] = BreakerEntry(key, kernel)
         return st
+
+    def entry(self, key: str, kernel: str) -> BreakerEntry:
+        with self._lock:
+            return self._entry(key, kernel)
 
     def plan(self, key: str, kernel: str) -> Tuple[Optional[str], bool]:
         """Plan the next launch of ``key``: returns ``(pinned_rung,
         probing)``.  ``pinned_rung`` non-None means start the chain
         there (skip the doomed fast path); ``probing`` means this
         launch is a half-open probe of the full chain."""
-        st = self.entry(key, kernel)
-        if st.state == "open":
-            st._probe_countdown -= 1
-            if st._probe_countdown <= 0:
-                st.state = "half_open"
+        with self._lock:
+            st = self._entry(key, kernel)
+            if st.state == "open":
+                st._probe_countdown -= 1
+                if st._probe_countdown <= 0:
+                    st.state = "half_open"
+                    st.probes += 1
+                    return None, True
+                st.pinned_launches += 1
+                return st.pinned_rung, False
+            if st.state == "half_open":
+                # the previous probe never reached a verdict (e.g. a
+                # KernelFault mid-probe): probe again
                 st.probes += 1
                 return None, True
-            st.pinned_launches += 1
-            return st.pinned_rung, False
-        if st.state == "half_open":
-            # the previous probe never reached a verdict (e.g. a
-            # KernelFault mid-probe): probe again
-            st.probes += 1
-            return None, True
-        return None, False
+            return None, False
 
     def record(self, key: str, kernel: str, *, demoted: bool,
                final_rung: Optional[str], probing: bool) -> bool:
         """Record a completed launch; returns True if the breaker
         state changed (trip opened it or a probe re-promoted)."""
-        st = self.entry(key, kernel)
-        if demoted:
-            st.trips += 1
-            if probing or st.trips >= self.threshold:
-                st.state = "open"
-                st.pinned_rung = final_rung
-                st._probe_countdown = self.probe_every
+        with self._lock:
+            st = self._entry(key, kernel)
+            if demoted:
+                st.trips += 1
+                if probing or st.trips >= self.threshold:
+                    st.state = "open"
+                    st.pinned_rung = final_rung
+                    st._probe_countdown = self.probe_every
+                    return True
+                return False
+            if probing:
+                st.state = "closed"
+                st.trips = 0
+                st.pinned_rung = None
+                st.promotions += 1
                 return True
+            if st.state == "closed":
+                st.trips = 0
             return False
-        if probing:
-            st.state = "closed"
-            st.trips = 0
-            st.pinned_rung = None
-            st.promotions += 1
-            return True
-        if st.state == "closed":
-            st.trips = 0
-        return False
 
     def abort(self, key: str, kernel: str, *, probing: bool) -> None:
         """The launch surfaced an error before an ok/demotion verdict
         (KernelFault, deadline, exhausted chain).  A probe falls back
         to the previous pin; an open/closed launch is unchanged —
         kernel-semantic failures are not the engine's trips."""
-        st = self.entry(key, kernel)
-        if probing and st.pinned_rung is not None:
-            st.state = "open"
-            st._probe_countdown = self.probe_every
+        with self._lock:
+            st = self._entry(key, kernel)
+            if probing and st.pinned_rung is not None:
+                st.state = "open"
+                st._probe_countdown = self.probe_every

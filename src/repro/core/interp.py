@@ -25,6 +25,7 @@ at a time — the oracle for SIMT-semantics tests.
 from __future__ import annotations
 
 import itertools
+import threading
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
@@ -265,12 +266,103 @@ def _const_vec(c: Const, w: int) -> np.ndarray:
 # Device memory
 # --------------------------------------------------------------------------
 
+class DevicePool:
+    """Size-class-keyed free lists of device allocations (the tinygrad
+    ``CLBuffer``-cache idea): steady-state streaming traffic re-runs the
+    same kernels with the same footprints, so shared tiles, tile tables
+    and coalesced staging tables can be served from a bounded cache of
+    pow2-rounded byte arrays instead of fresh ``np.zeros`` every launch.
+
+    * ``take(shape, dtype)`` pops a free backing array of the rounded
+      size class (or allocates on miss) and returns a zero-filled view —
+      pooled reuse is invisible to kernels: zero-fill semantics are
+      preserved and stale bytes from a previous tenant are never
+      observable (tested in tests/test_launch_service.py).
+    * ``release(arr)`` walks ``arr.base`` back to the pool backing and
+      returns it to its free list, bounded by ``capacity`` bytes (the
+      ``VOLT_MEM_BUDGET`` governor's pool share); beyond capacity the
+      array is dropped to the gc.  Arrays that are never released are
+      ordinary garbage-collected numpy arrays — the pool keeps no
+      reference, so forgetting to release leaks nothing.
+
+    Thread-safe: the launch service drains queues from concurrent
+    submitters.
+    """
+
+    __slots__ = ("capacity", "held_bytes", "hits", "misses", "dropped",
+                 "_free", "_pooled_ids", "_lock")
+
+    def __init__(self, capacity: int = 64 << 20) -> None:
+        self.capacity = capacity
+        self.held_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.dropped = 0
+        self._free: Dict[int, List[np.ndarray]] = {}
+        self._pooled_ids: set = set()
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def _size_class(nbytes: int) -> int:
+        """Round up to the pow2 size class (64-byte floor)."""
+        return 1 << max(6, (int(nbytes) - 1).bit_length()) if nbytes > 64 \
+            else 64
+
+    def take(self, shape, dtype, zero: bool = True) -> np.ndarray:
+        dtype = np.dtype(dtype)
+        nbytes = int(np.prod(shape)) * dtype.itemsize
+        cls = self._size_class(nbytes)
+        with self._lock:
+            lst = self._free.get(cls)
+            if lst:
+                raw = lst.pop()
+                self._pooled_ids.discard(id(raw))
+                self.held_bytes -= cls
+                self.hits += 1
+            else:
+                raw = None
+                self.misses += 1
+        if raw is None:
+            raw = np.empty(cls, dtype=np.uint8)
+        view = raw[:nbytes].view(dtype).reshape(shape)
+        if zero:
+            view.fill(0)
+        return view
+
+    def release(self, arr: np.ndarray) -> bool:
+        """Return ``arr``'s backing to the pool.  The caller must drop
+        every live view of it — reuse hands the same bytes to the next
+        ``take``."""
+        raw = arr
+        while raw.base is not None:
+            raw = raw.base
+        if (raw.dtype != np.uint8 or not raw.flags["OWNDATA"]
+                or raw.nbytes != self._size_class(raw.nbytes)):
+            return False          # not a pool backing — leave to the gc
+        cls = raw.nbytes
+        with self._lock:
+            if id(raw) in self._pooled_ids:
+                return False      # already pooled (double release)
+            if self.held_bytes + cls > self.capacity:
+                self.dropped += 1
+                return False
+            self._free.setdefault(cls, []).append(raw)
+            self._pooled_ids.add(id(raw))
+            self.held_bytes += cls
+            return True
+
+    def telemetry(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "dropped": self.dropped, "held_bytes": self.held_bytes}
+
+
 class DeviceMemory:
     """Buffers for params (by name), module globals, and per-wg shared."""
 
     def __init__(self, buffers: Dict[str, np.ndarray],
                  globals_mem: Optional[Dict[str, np.ndarray]] = None,
-                 budget: Optional[int] = None) -> None:
+                 budget: Optional[int] = None,
+                 pool: Optional[DevicePool] = None) -> None:
         self.buffers = buffers
         self.globals_mem = globals_mem or {}
         self.shared: Dict[int, np.ndarray] = {}   # id(GlobalVar) -> array
@@ -286,6 +378,11 @@ class DeviceMemory:
         # tile table) or surfaces at the oracle floor
         self.budget = budget
         self.allocated = 0
+        # pooled allocator: shared arrays / tile tables come from the
+        # size-class cache instead of fresh np.zeros (zero-filled either
+        # way — pooling is semantically invisible); reset_shared returns
+        # them for the next chunk/launch to reuse
+        self.pool = pool
 
     def _alloc(self, shape, elem_ty, what: str) -> np.ndarray:
         if _faults.ACTIVE:
@@ -299,13 +396,31 @@ class DeviceMemory:
                     f"({self.allocated} + {nbytes} > {self.budget} "
                     f"bytes)", site="mem.alloc")
             self.allocated += nbytes
+        if self.pool is not None:
+            return self.pool.take(shape, dtype, zero=True)
         return np.zeros(shape, dtype=dtype)
+
+    def __del__(self) -> None:
+        # end-of-launch pool return: the final chunk/workgroup's tiles
+        # are only dropped when the launch's DeviceMemory dies, so hand
+        # them back to the free list here (guarded: interpreter
+        # shutdown may have torn the pool down already)
+        if getattr(self, "pool", None) is not None and self.shared:
+            try:
+                self.reset_shared()
+            except Exception:
+                pass
 
     def reset_shared(self) -> None:
         """Fresh shared memory for the next workgroup / grid chunk;
-        releases the previous allocations' budget charge."""
+        releases the previous allocations' budget charge.  Safe release
+        point for the pool: it is only reached once every state of the
+        previous chunk/workgroup is finished with its arrays."""
         if self.budget is not None and self.shared:
             self.allocated -= sum(a.nbytes for a in self.shared.values())
+        if self.pool is not None:
+            for a in self.shared.values():
+                self.pool.release(a)
         self.shared = {}
 
     def resolve(self, ptr: Value, argmap: Dict[int, Any]) -> Tuple[np.ndarray, bool]:
@@ -780,7 +895,7 @@ class _DState:
     __slots__ = ("env", "slots", "args", "argmap", "mem_arrs", "mask",
                  "active", "act_rows", "stack", "pending", "ret", "intr",
                  "ctx", "mem", "stats", "fuel", "warp_ctxs",
-                 "shared_row")
+                 "shared_row", "stripe")
 
     def __init__(self, prog: "_DProgram", argmap: Dict[int, Any],
                  mask: np.ndarray, ctx: _WarpCtx, mem: DeviceMemory,
@@ -810,6 +925,108 @@ class _DState:
         # grid-mode per-warp slices: which (n_wgs, size) tile row this
         # state's workgroup owns (set by _slice_state)
         self.shared_row: Optional[int] = None
+        # multi-launch coalescing: the per-tenant accounting stripe
+        # (_Stripe) when this batch packs rows of several launches
+        self.stripe: Optional["_Stripe"] = None
+
+
+class _CoalesceAbort(Exception):
+    """A coalesced multi-launch chunk cannot proceed as a group (fault,
+    desync, per-tenant fuel/deadline trip, OOB, …).  The staging tables
+    are dropped — tenant buffers were never touched — and every tenant
+    re-runs solo through the normal degradation chain, which is the
+    authority for exact per-launch errors and demotion."""
+
+
+class _Stripe:
+    """Per-tenant accounting for a coalesced multi-launch batch.
+
+    Rows of the batch belong to ``k`` different launches ("tenants");
+    ``row_tenant`` maps each row of the current chunk to its tenant.
+    Stats must de-mix bit-identically to running each launch alone, but
+    per-node per-tenant bincounts would swamp the hot path — so charges
+    accrue in *epochs*: between mask changes the active-row set is
+    constant, per-node charges accumulate as scalars
+    (``epoch_n``/``epoch_ops``), and one vector multiply per mask change
+    distributes them over tenants via the cached active-row tenant
+    counts.  Per-node cost stays ~identical to the solo ExecStats code.
+    """
+    __slots__ = ("k", "row_tenant", "row_col", "counts", "epoch_n",
+                 "epoch_ops", "instrs", "by_op", "mem_requests",
+                 "mem_insts", "shared_requests", "depth", "fuel_used",
+                 "fuel_budget")
+
+    def __init__(self, k: int, fuel_budgets) -> None:
+        self.k = k
+        self.instrs = np.zeros(k, np.int64)
+        self.by_op: Dict[int, np.ndarray] = {}
+        self.mem_requests = np.zeros(k, np.int64)
+        self.mem_insts = np.zeros(k, np.int64)
+        self.shared_requests = np.zeros(k, np.int64)
+        self.depth = np.zeros(k, np.int64)
+        self.fuel_used = np.zeros(k, np.int64)
+        self.fuel_budget = np.asarray(fuel_budgets, np.int64)
+        self.row_tenant: Optional[np.ndarray] = None
+        self.row_col: Optional[np.ndarray] = None
+        self.counts = np.zeros(k, np.int64)
+        self.epoch_n = 0
+        self.epoch_ops: Dict[int, int] = {}
+
+    def begin_chunk(self, row_tenant: np.ndarray,
+                    act_rows: np.ndarray) -> None:
+        self.flush()
+        self.row_tenant = row_tenant
+        self.row_col = row_tenant[:, None]
+        self.counts = np.bincount(row_tenant[act_rows], minlength=self.k)
+
+    def flush(self) -> None:
+        """Distribute the pending epoch over tenants (called at every
+        mask change and at chunk end)."""
+        n = self.epoch_n
+        if not n and not self.epoch_ops:
+            return
+        c = self.counts
+        self.instrs += n * c
+        self.fuel_used += n * c
+        byop = self.by_op
+        for opv, cnt in self.epoch_ops.items():
+            vec = byop.get(opv)
+            if vec is None:
+                vec = byop[opv] = np.zeros(self.k, np.int64)
+            vec += cnt * c
+        self.epoch_n = 0
+        self.epoch_ops.clear()
+        # early-abort heuristic only: the batch-level fuel counter (the
+        # summed budget) remains the hard backstop, and the solo rerun
+        # after an abort is the authority for the exact fuel error
+        if (self.fuel_used > self.fuel_budget).any():
+            raise _CoalesceAbort("per-tenant fuel budget exhausted")
+
+    def set_counts(self, act_rows: np.ndarray) -> None:
+        """Epoch boundary: flush against the OLD counts, then rebuild
+        the per-tenant active-row counts from the new mask."""
+        self.flush()
+        self.counts = np.bincount(self.row_tenant[act_rows],
+                                  minlength=self.k)
+
+    def charge_rows(self, dest: np.ndarray, per_row: np.ndarray) -> None:
+        """Aggregate a per-ROW charge vector (e.g. count_rows_split) into
+        the per-TENANT accumulator ``dest``."""
+        np.add.at(dest, self.row_tenant, per_row)
+
+    def demix(self, j: int) -> ExecStats:
+        """Tenant ``j``'s exact solo ExecStats."""
+        s = ExecStats()
+        s.instrs = int(self.instrs[j])
+        s.mem_requests = int(self.mem_requests[j])
+        s.mem_insts = int(self.mem_insts[j])
+        s.shared_requests = int(self.shared_requests[j])
+        s.max_ipdom_depth = int(self.depth[j])
+        for opv, vec in self.by_op.items():
+            v = int(vec[j])
+            if v:                  # solo Counters never hold zeros
+                s.by_op[opv] = v
+        return s
 
 
 class _DBlock:
@@ -1490,13 +1707,17 @@ _BARRIER = object()   # per-warp node (batched program): top-level barrier
 def _decode_batched(fn: Function, W: int, strict: bool, n_warps: int,
                     grid_mode: bool = False,
                     ride_along: bool = True,
-                    wg_rows: int = 1) -> "_BProgram":
+                    wg_rows: int = 1,
+                    coalesced: bool = False) -> "_BProgram":
     """Decode ``fn`` for workgroup-batched execution (memoized like
     _decode, in the same ir_version-keyed cache).  ``grid_mode`` batches
     independent workgroups (rows are warps grouped ``wg_rows`` per
     workgroup; a barrier synchronizes only the rows of its own
     workgroup); ``ride_along=False`` restores the stricter
-    desync-on-mixed-loop-exit behavior (used as a benchmark baseline)."""
+    desync-on-mixed-loop-exit behavior (used as a benchmark baseline).
+    ``coalesced`` decodes for the multi-launch coalescing path: global
+    LOAD/STORE handlers index per-tenant staging tables and statistics
+    route through the per-tenant stripe."""
     if _faults.ACTIVE:
         _faults.maybe_fault("decode")
     cache = getattr(fn, "_decode_cache", None)
@@ -1504,13 +1725,14 @@ def _decode_batched(fn: Function, W: int, strict: bool, n_warps: int,
         cache = {}
         fn._decode_cache = cache  # type: ignore[attr-defined]
     key = (fn.ir_version, W, bool(strict), "wg", n_warps, bool(grid_mode),
-           bool(ride_along), int(wg_rows))
+           bool(ride_along), int(wg_rows), bool(coalesced))
     prog = cache.get(key)
     if prog is None:
         for k in [k for k in cache if k[0] != fn.ir_version]:
             del cache[k]
         prog = _BProgram(fn, W, bool(strict), n_warps, grid_mode=grid_mode,
-                         ride_along=ride_along, wg_rows=wg_rows)
+                         ride_along=ride_along, wg_rows=wg_rows,
+                         coalesced=coalesced)
         cache[key] = prog
     return prog
 
@@ -1656,6 +1878,12 @@ DECODE_PLAN_HOOKS: Optional[Tuple[Any, Any]] = None
 #: certification verdicts (.vjc files, next to .vck/.vdp)
 JAX_CERT_HOOKS: Optional[Tuple[Any, Any]] = None
 
+#: zero-arg callable installed by core.runtime: the jax rung's dispatch
+#: router calls it when a certified launch is sent to the grid rung
+#: because the measured grid time beats the jitted-dispatch floor
+#: (LAUNCH_TELEMETRY["routed_small"])
+ROUTED_SMALL_HOOK: Optional[Any] = None
+
 _DECODE_PLAN_SCHEMA = 1
 
 
@@ -1758,10 +1986,16 @@ class _BProgram(_DProgram):
 
     def __init__(self, fn: Function, W: int, strict: bool,
                  n_warps: int, *, grid_mode: bool = False,
-                 ride_along: bool = True, wg_rows: int = 1) -> None:
+                 ride_along: bool = True, wg_rows: int = 1,
+                 coalesced: bool = False) -> None:
         self.n_warps = n_warps
         self.grid_mode = grid_mode
         self.ride_along = ride_along
+        # multi-launch coalescing decode: rows belong to different
+        # launches (tenants); global LOAD/STOREs index (k, size) staging
+        # tables by the stripe's per-row tenant column and statistics
+        # accumulate into the per-tenant stripe vectors
+        self.coalesced = coalesced
         # rows per workgroup: 1 except in multi-warp grid mode, where a
         # batch stacks (n_wg x wg_rows) rows and a barrier synchronizes
         # only the rows belonging to the same workgroup
@@ -2021,7 +2255,17 @@ class _BProgram(_DProgram):
                     if f[0] <= 0:
                         raise ExecError(
                             "out of fuel (possible infinite loop)")
-                    if n_act:
+                    sp = st.stripe
+                    if sp is not None:
+                        # per-tenant accounting: defer to the stripe's
+                        # epoch (mask-constant between control nodes, so
+                        # scalar accumulation here, one vector multiply
+                        # per mask change)
+                        sp.epoch_n += n
+                        eo = sp.epoch_ops
+                        for k, v in bo_items:
+                            eo[k] = eo.get(k, 0) + v
+                    elif n_act:
                         stt = st.stats
                         stt.instrs += n * n_act
                         byop = stt.by_op
@@ -2054,28 +2298,54 @@ class _BProgram(_DProgram):
         if self.grid_mode and op in (Op.LOAD, Op.STORE) \
                 and _shared_ptr(i.operands[0]):
             return self._bplain_tile(i)
+        if self.coalesced and op in (Op.LOAD, Op.STORE):
+            return self._bplain_coal(i)
         if op is Op.LOAD:
             mi = self._memref(i.operands[0])
             gi_ = g(i.operands[1])
             ri = self.reg_idx[id(i.result)]
             fact = self.mem_facts.index_fact.get(id(i))
 
-            def h(st, mi=mi, gi_=gi_, ri=ri, nw=nw, fact=fact):
+            def h(st, mi=mi, gi_=gi_, ri=ri, nw=nw, fact=fact, W=W):
                 buf, shared = st.mem_arrs[mi]
+                n_act = st.active
+                if not n_act:
+                    # every row is an empty ride-along: values loaded
+                    # here are unobservable (stats skipped, stores
+                    # masked), so skip the gather entirely
+                    st.env[ri] = np.zeros((nw, W), buf.dtype)
+                    return
                 ix = gi_(st).astype(np.int64)
                 if ix.ndim == 1:
                     ix = np.broadcast_to(ix, (nw, len(ix)))
-                safe = np.clip(ix, 0, len(buf) - 1)
-                if st.active:
-                    # each row counts its own coalesced lines
-                    uniq = _mem.count_rows(safe, st.mask, st.active,
+                stt = st.stats
+                if n_act * 4 <= nw:
+                    # mostly-dead batch (ragged ride-along tail): gather
+                    # and count only the live rows; dead rows read zeros
+                    # (unobservable, as above).  Per-row line counts are
+                    # row-local, so the compacted count is bit-identical.
+                    ar = st.act_rows
+                    sub = np.clip(ix[ar], 0, len(buf) - 1)
+                    uniq = _mem.count_rows(sub, st.mask[ar], n_act,
                                            len(buf), fact, st.ctx)
-                    stt = st.stats
+                    out = np.zeros((nw, ix.shape[1]), buf.dtype)
+                    out[ar] = buf[sub]
                     if shared:
                         stt.shared_requests += uniq
                     else:
                         stt.mem_requests += uniq
-                    stt.mem_insts += st.active
+                    stt.mem_insts += n_act
+                    st.env[ri] = out
+                    return
+                safe = np.clip(ix, 0, len(buf) - 1)
+                # each row counts its own coalesced lines
+                uniq = _mem.count_rows(safe, st.mask, n_act,
+                                       len(buf), fact, st.ctx)
+                if shared:
+                    stt.shared_requests += uniq
+                else:
+                    stt.mem_requests += uniq
+                stt.mem_insts += n_act
                 st.env[ri] = buf[safe]
             return h
         if op is Op.STORE:
@@ -2087,6 +2357,8 @@ class _BProgram(_DProgram):
 
             def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname, nw=nw,
                   fact=fact):
+                if not st.active:
+                    return            # all rows masked: nothing observable
                 buf, shared = st.mem_arrs[mi]
                 ix = gi_(st).astype(np.int64)
                 if ix.ndim == 1:
@@ -2179,14 +2451,23 @@ class _BProgram(_DProgram):
                   fact=fact):
                 tile = st.mem_arrs[mi][0]
                 tn = tile.shape[1]
+                if not st.active:
+                    st.env[ri] = np.zeros((nw, st.ctx.W), tile.dtype)
+                    return
                 ix = gi_(st).astype(np.int64)
                 if ix.ndim == 1:
                     ix = np.broadcast_to(ix, (nw, len(ix)))
                 safe = np.clip(ix, 0, tn - 1)
-                if st.active:
+                sp = st.stripe
+                if sp is None:
                     st.stats.shared_requests += _mem.count_rows(
                         safe, st.mask, st.active, tn, fact, st.ctx)
                     st.stats.mem_insts += st.active
+                else:
+                    sp.charge_rows(sp.shared_requests,
+                                   _mem.count_rows_split(
+                                       safe, st.mask, tn, fact, st.ctx))
+                    sp.mem_insts += sp.counts
                 st.env[ri] = tile[rowwg, safe]
             return h
         if op is Op.STORE:
@@ -2196,6 +2477,8 @@ class _BProgram(_DProgram):
 
             def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname, nw=nw,
                   rowwg=rowwg, fact=fact):
+                if not st.active:
+                    return
                 tile = st.mem_arrs[mi][0]
                 tn = tile.shape[1]
                 ix = gi_(st).astype(np.int64)
@@ -2205,19 +2488,97 @@ class _BProgram(_DProgram):
                 if v.ndim == 1:
                     v = np.broadcast_to(v, ix.shape)
                 mask = st.mask
-                if st.active:
-                    a_ix = ix[mask]
-                    if (a_ix < 0).any() or (a_ix >= tn).any():
-                        raise ExecError(
-                            f"OOB store in @{fname}: idx={a_ix} "
-                            f"size={tn}")
+                a_ix = ix[mask]
+                if (a_ix < 0).any() or (a_ix >= tn).any():
+                    raise ExecError(
+                        f"OOB store in @{fname}: idx={a_ix} "
+                        f"size={tn}")
+                sp = st.stripe
+                if sp is None:
                     st.stats.shared_requests += _mem.count_rows(
                         ix, mask, st.active, tn, fact, st.ctx)
                     st.stats.mem_insts += st.active
-                    rows = np.broadcast_to(rowwg, ix.shape)[mask]
-                    tile[rows, a_ix] = v[mask].astype(tile.dtype)
+                else:
+                    sp.charge_rows(sp.shared_requests,
+                                   _mem.count_rows_split(
+                                       ix, mask, tn, fact, st.ctx))
+                    sp.mem_insts += sp.counts
+                rows = np.broadcast_to(rowwg, ix.shape)[mask]
+                tile[rows, a_ix] = v[mask].astype(tile.dtype)
             return h
         raise ExecError(f"no batched tile handler for {op}")
+
+    def _bplain_coal(self, i: Instr):
+        """Batched handlers for COALESCED global LOAD/STOREs: several
+        launches' buffers for one pointer param are stacked into a
+        (k, size) staging table and row r of the batch belongs to tenant
+        ``stripe.row_tenant[r]`` — the ``_bplain_tile`` pattern with a
+        runtime per-row tenant column instead of the decode-time
+        workgroup map.  Bounds checks and per-row coalescing counts use
+        table-LOCAL indices (each tenant's row slice is its own buffer,
+        same length for every tenant in the group), and statistics
+        accumulate into the per-tenant stripe vectors so the drain can
+        de-mix ExecStats bit-identically to solo runs."""
+        op = i.op
+        W = self.W
+        nw = self.n_warps
+        g = self._getter
+        fname = self.fn.name
+        fact = self.mem_facts.index_fact.get(id(i))
+        if op is Op.LOAD:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            ri = self.reg_idx[id(i.result)]
+
+            def h(st, mi=mi, gi_=gi_, ri=ri, nw=nw, fact=fact, W=W):
+                table = st.mem_arrs[mi][0]
+                tn = table.shape[1]
+                if not st.active:
+                    st.env[ri] = np.zeros((nw, W), table.dtype)
+                    return
+                ix = gi_(st).astype(np.int64)
+                if ix.ndim == 1:
+                    ix = np.broadcast_to(ix, (nw, len(ix)))
+                safe = np.clip(ix, 0, tn - 1)
+                sp = st.stripe
+                sp.charge_rows(sp.mem_requests,
+                               _mem.count_rows_split(
+                                   safe, st.mask, tn, fact, st.ctx))
+                sp.mem_insts += sp.counts
+                st.env[ri] = table[sp.row_col, safe]
+            return h
+        if op is Op.STORE:
+            mi = self._memref(i.operands[0])
+            gi_ = g(i.operands[1])
+            gv = g(i.operands[2])
+
+            def h(st, mi=mi, gi_=gi_, gv=gv, fname=fname, nw=nw,
+                  fact=fact):
+                if not st.active:
+                    return
+                table = st.mem_arrs[mi][0]
+                tn = table.shape[1]
+                ix = gi_(st).astype(np.int64)
+                if ix.ndim == 1:
+                    ix = np.broadcast_to(ix, (nw, len(ix)))
+                v = gv(st)
+                if v.ndim == 1:
+                    v = np.broadcast_to(v, ix.shape)
+                mask = st.mask
+                a_ix = ix[mask]
+                if (a_ix < 0).any() or (a_ix >= tn).any():
+                    raise ExecError(
+                        f"OOB store in @{fname}: idx={a_ix} "
+                        f"size={tn}")
+                sp = st.stripe
+                sp.charge_rows(sp.mem_requests,
+                               _mem.count_rows_split(
+                                   ix, mask, tn, fact, st.ctx))
+                sp.mem_insts += sp.counts
+                rows = np.broadcast_to(sp.row_col, ix.shape)[mask]
+                table[rows, a_ix] = v[mask].astype(table.dtype)
+            return h
+        raise ExecError(f"no coalesced handler for {op}")
 
     # -- batched control nodes ---------------------------------------------
     def _bcontrol(self, i: Instr, b: Block):
@@ -2286,12 +2647,21 @@ class _BProgram(_DProgram):
                     st.pending = None
                     _bcount(st, opv, nw)
                     st.stack.append((sp.tok, mask, else_i, else_mask))
-                    if (ta & ea).any():
+                    div = ta & ea
+                    if div.any():
                         # oracle bumps the depth only for warps that truly
                         # diverge; the depth value is the shared stack len
-                        stt = st.stats
-                        stt.max_ipdom_depth = max(stt.max_ipdom_depth,
-                                                  len(st.stack))
+                        spr = st.stripe
+                        if spr is None:
+                            stt = st.stats
+                            stt.max_ipdom_depth = max(stt.max_ipdom_depth,
+                                                      len(st.stack))
+                        else:
+                            # only the tenants owning a diverging row get
+                            # the bump (a solo run of the others never
+                            # sees this split as two-sided)
+                            np.maximum.at(spr.depth, spr.row_tenant[div],
+                                          len(st.stack))
                     _bset_mask(st, then_mask, ta)
                     return then_i
                 # un-split branch: per-warp consensus, cross-warp agreement
@@ -2439,11 +2809,13 @@ class _BProgram(_DProgram):
             grid_mode = self.grid_mode
             ride_along = self.ride_along
             wg_rows = self.wg_rows if grid_mode else 1
+            coalesced = self.coalesced
 
             def bcall_node(st, callee=callee, binders=binders, ri=ri,
                            ret_dtype=ret_dtype, opv=opv, W=W, nw=nw,
                            strict=strict, grid_mode=grid_mode,
-                           ride_along=ride_along, wg_rows=wg_rows):
+                           ride_along=ride_along, wg_rows=wg_rows,
+                           coalesced=coalesced):
                 mask = st.mask
                 act = st.act_rows
                 n_act = st.active
@@ -2456,8 +2828,14 @@ class _BProgram(_DProgram):
                         st.env[ri] = np.zeros(W, dtype=ret_dtype)
                     return None
                 stt = st.stats
-                stt.instrs += n_act
-                stt.by_op[opv] += n_act
+                spr = st.stripe
+                if spr is not None:
+                    spr.epoch_n += 1
+                    eo = spr.epoch_ops
+                    eo[opv] = eo.get(opv, 0) + 1
+                else:
+                    stt.instrs += n_act
+                    stt.by_op[opv] += n_act
                 cargs: Dict[int, Any] = {}
                 for p, kind, payload in binders:
                     if kind == "ptr":
@@ -2470,11 +2848,19 @@ class _BProgram(_DProgram):
                 cprog = _decode_batched(callee, W, strict, nw,
                                         grid_mode=grid_mode,
                                         ride_along=ride_along,
-                                        wg_rows=wg_rows)
+                                        wg_rows=wg_rows,
+                                        coalesced=coalesced)
                 sub = _DState(cprog, cargs, mask.copy(), st.ctx, st.mem,
                               stt, st.fuel)
                 sub.warp_ctxs = st.warp_ctxs
+                sub.stripe = spr
                 r = _run_lockstep_fn(cprog, sub)
+                if spr is not None:
+                    # the callee's mask changes updated the stripe's
+                    # active-row counts through the sub-state; restore
+                    # them to the caller's rows (structured callees
+                    # return with the entry mask, but don't rely on it)
+                    spr.set_counts(st.act_rows)
                 r = np.broadcast_to(r, (nw, W)) if r.ndim == 1 else r
                 if not act.all():
                     # warps that did not issue the call get zeros (oracle:
@@ -2501,6 +2887,12 @@ def _bcount(st: _DState, opv: str, nw: int) -> None:
     f[0] -= max(st.active, 1)
     if f[0] <= 0:
         raise ExecError("out of fuel (possible infinite loop)")
+    sp = st.stripe
+    if sp is not None:
+        sp.epoch_n += 1
+        eo = sp.epoch_ops
+        eo[opv] = eo.get(opv, 0) + 1
+        return
     n_act = st.active
     if n_act:
         stt = st.stats
@@ -2510,12 +2902,17 @@ def _bcount(st: _DState, opv: str, nw: int) -> None:
 
 def _bset_mask(st: _DState, m: np.ndarray,
                ar: Optional[np.ndarray] = None) -> None:
-    """Assign a batched mask, keeping the active-row cache in sync."""
+    """Assign a batched mask, keeping the active-row cache in sync.
+    With a stripe attached this is the epoch boundary: accumulated
+    per-node charges are flushed against the OLD per-tenant active-row
+    counts, then the counts re-derive from the new mask."""
     st.mask = m
     if ar is None:
         ar = m.any(axis=1)
     st.act_rows = ar
     st.active = int(ar.sum())
+    if st.stripe is not None:
+        st.stripe.set_counts(ar)
 
 
 def _slice_state(bst: _DState, w: int, ctx: _WarpCtx,
@@ -2523,6 +2920,7 @@ def _slice_state(bst: _DState, w: int, ctx: _WarpCtx,
     """Row ``w`` of a batched state as an ordinary per-warp _DState.
     ``wg_rows`` (grid mode) pins the row's workgroup tile slice."""
     st = _DState.__new__(_DState)
+    st.stripe = None
     st.shared_row = (w // wg_rows) if wg_rows else None
     st.env = [v if (v is None or v.ndim == 1) else v[w] for v in bst.env]
     st.slots = [v if (v is None or v.ndim == 1) else v[w]
@@ -2999,6 +3397,36 @@ def _stack_intrs(ctxs: Sequence[_WarpCtx], W: int,
                     ctxs[0].affine_span)
 
 
+class _LazyRowCtxs:
+    """Per-row ``_WarpCtx`` sequence for a grid chunk, built on demand.
+
+    Lockstep execution only reads the stacked 2-D chunk context; the
+    per-row contexts are needed by the desync fallback alone
+    (``_slice_state`` / ``_split_batch``).  Building ``rows`` dicts of
+    ``np.full`` vectors per chunk was the dominant cost of small
+    streaming launches (the PR 5 profile's hot spot), so the vectorized
+    chunk template defers them: each row's dict materializes on first
+    index and is cached."""
+
+    __slots__ = ("n", "_build", "_cache")
+
+    def __init__(self, n: int, build) -> None:
+        self.n = n
+        self._build = build
+        self._cache: Dict[int, _WarpCtx] = {}
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __getitem__(self, r: int) -> _WarpCtx:
+        if not 0 <= r < self.n:
+            raise IndexError(r)
+        c = self._cache.get(r)
+        if c is None:
+            c = self._cache[r] = self._build(r)
+        return c
+
+
 #: live-workgroup fraction at or below which a private-store grid batch
 #: compacts its live rows into a dense sub-batch at a loop back-edge
 #: (0.0 disables compaction, 1.0 compacts whenever any row is dead)
@@ -3128,6 +3556,7 @@ def _merge_rows(bprog: "_BProgram", wstates: List[_DState],
     bst.pending = None
     bst.ret = None
     bst.shared_row = None
+    bst.stripe = None
     bst.intr = proto.intr
     bst.ctx = proto.ctx
     bst.mem = proto.mem
@@ -3222,6 +3651,7 @@ def _gather_rows(subprog: "_BProgram", bst: _DState,
         return entry
 
     st = _DState.__new__(_DState)
+    st.stripe = None
     st.shared_row = None
     st.env = [take(v) for v in bst.env]
     st.slots = [take(v) for v in bst.slots]
@@ -3364,6 +3794,396 @@ def _run_grid_batched(bprog: "_BProgram", bst: _DState,
 
 
 # --------------------------------------------------------------------------
+# Cross-launch coalescing: several pending launches of ONE kernel run as
+# shared grid chunks, rows tagged with a launch id ("tenant"), stats and
+# fuel de-mixed per tenant (core/runtime.py's LaunchService drives this)
+# --------------------------------------------------------------------------
+
+def _coalesce_struct(fn: Function
+                     ) -> Optional[Tuple[frozenset, frozenset]]:
+    """Binding-free structural licence for cross-launch coalescing:
+    ``(param names read, param names written)``, or None when ``fn``
+    can never coalesce.  Rules beyond the grid batcher's own licence:
+
+      * every global memory effect must resolve to a TOP-LEVEL pointer
+        param — the staging tables stack one row per tenant, and only
+        param-bound buffers are per-tenant.  Non-shared ``GlobalVar``
+        memory is one array shared by every tenant, so any touch
+        refuses; ``__shared__`` tiles stay private per workgroup row
+        and are exempt (top-level accesses only, like the grid gate).
+      * no atomics or prints (cross-tenant interleaving would be
+        observable; also excluded by ``order_free``, but refusing here
+        avoids a wasted staging round-trip).
+      * no structural read-write hazard: a param name both loaded and
+        stored anywhere in the call tree refuses (the grid gate's
+        loads & writes rule, at name level).
+
+    Cached on the function, keyed by IR version."""
+    cached = getattr(fn, "_coalesce_struct", None)
+    if cached is not None and cached[0] == fn.ir_version:
+        return cached[1]
+    reads: set = set()
+    writes: set = set()
+    ok = [True]
+
+    def resolve(ptr: Any, binding: Dict[int, Any],
+                depth: int) -> Optional[str]:
+        if isinstance(ptr, GlobalVar):
+            if ptr.space is AddrSpace.SHARED:
+                if depth > 0:
+                    ok[0] = False   # tile inside a callee: no slicing
+                return None         # private per-row tile: exempt
+            ok[0] = False           # module global: shared across tenants
+            return None
+        if isinstance(ptr, Param):
+            root = binding.get(id(ptr))
+            if isinstance(root, Param):
+                return root.name
+            if isinstance(root, GlobalVar):
+                return resolve(root, binding, depth)
+            ok[0] = False
+            return None
+        ok[0] = False
+        return None
+
+    def scan(f: Function, binding: Dict[int, Any], depth: int) -> None:
+        if depth > 8:
+            ok[0] = False
+            return
+        for i in f.instructions():
+            op = i.op
+            if op is Op.LOAD:
+                r = resolve(i.operands[0], binding, depth)
+                if r is not None:
+                    reads.add(r)
+            elif op is Op.STORE:
+                r = resolve(i.operands[0], binding, depth)
+                if r is not None:
+                    writes.add(r)
+            elif op in (Op.ATOMIC, Op.PRINT):
+                ok[0] = False
+            elif op is Op.CALL:
+                callee: Function = i.operands[0]
+                sub: Dict[int, Any] = {}
+                for p, a in zip(callee.params, i.operands[1:]):
+                    if _shared_ptr(a):
+                        ok[0] = False      # tile escaping into a callee
+                        return
+                    if p.ty is Ty.PTR:
+                        if isinstance(a, Param):
+                            sub[id(p)] = binding.get(id(a))
+                        elif isinstance(a, GlobalVar):
+                            sub[id(p)] = a
+                scan(callee, sub, depth + 1)
+            if not ok[0]:
+                return
+
+    top: Dict[int, Any] = {id(p): p for p in fn.params if p.ty is Ty.PTR}
+    scan(fn, top, 0)
+    result = None
+    if ok[0] and not (reads & writes):
+        result = (frozenset(reads), frozenset(writes))
+    fn._coalesce_struct = (fn.ir_version, result)  # type: ignore[attr-defined]
+    return result
+
+
+def _run_coalesced(gprog: "_BProgram", bst: _DState) -> None:
+    """Lockstep-only driver for one coalesced chunk: the grid batcher's
+    main loop minus every desync path.  Any event that would leave
+    lockstep (divergent unstructured control flow, per-warp fallback,
+    barrier divergence) aborts the GROUP instead of draining — the
+    desync drains re-enter per-row solo contexts that don't exist for
+    stacked tenants, and the abort protocol (rerun each tenant solo) is
+    both simpler and exact."""
+    bi = ni = 0
+    while True:
+        if _faults.ACTIVE:
+            _faults.maybe_fault("coalesce.exec")
+        if _gov.ACTIVE:
+            _gov.deadline_check()
+        nodes = gprog.bblocks[bi].nodes
+        nn = len(nodes)
+        jump: Optional[int] = None
+        while ni < nn:
+            r = nodes[ni](bst)
+            if r is None:
+                ni += 1
+                continue
+            if type(r) is int:
+                jump = r
+                break
+            raise _CoalesceAbort("desync in coalesced chunk")
+        if jump is None:
+            raise ExecError(
+                f"block %{gprog.bblocks[bi].label} fell through")
+        if jump < 0:
+            return
+        bi, ni = jump, 0
+
+
+def launch_coalesced(module_fn: Function,
+                     tenants: Sequence[Tuple[Dict[str, np.ndarray],
+                                             Dict[str, Any],
+                                             LaunchParams]],
+                     *, pool: Optional[DevicePool] = None,
+                     mem_budget: Optional[int] = None
+                     ) -> List[ExecStats]:
+    """Execute several pending launches of ONE kernel as shared grid
+    chunks.  ``tenants`` is a sequence of ``(buffers, scalar_args,
+    params)`` triples; returns one ``ExecStats`` per tenant, de-mixed
+    to be bit-identical to running each launch alone (the conformance
+    sweep in tests/test_launch_service.py proves it per kernel).
+
+    Transactional group-abort model: tenants run against stacked
+    STAGING tables (one row per tenant, pooled), so any condition the
+    group cannot handle — licence refusal, desync, a kernel error, a
+    fault-injection hit, a deadline or per-tenant fuel trip — raises
+    :class:`_CoalesceAbort` with every tenant buffer untouched.  The
+    caller (``runtime.LaunchService``) then reruns each tenant solo
+    through the normal degradation chain, which is the authority for
+    exact per-launch errors, demotion and breaker accounting.  Only a
+    fully successful group writes back."""
+    fn = module_fn
+    k = len(tenants)
+    p0 = tenants[0][2]
+    W = p0.warp_size
+    n_warps = p0.warps_per_wg
+    for (_, _, pt) in tenants:
+        if (pt.warp_size != W or pt.warps_per_wg != n_warps
+                or pt.local_size != p0.local_size
+                or pt.local_size_y != 1 or pt.grid_y != 1
+                or pt.strict_oob_loads):
+            raise _CoalesceAbort("launch-shape mismatch")
+    struct = _coalesce_struct(fn)
+    if struct is None:
+        raise _CoalesceAbort(f"@{fn.name} is not coalescible")
+    roots = write_root_buffers(fn)
+    if roots is None or roots[1]:
+        raise _CoalesceAbort("unresolvable or global write roots")
+    writes = roots[0]
+
+    # buffer signatures must agree across tenants (the service's group
+    # key includes them; re-checked here because this is the licence)
+    sigs: Dict[str, Tuple[Tuple[int, ...], Any]] = {}
+    ptr_params = [p for p in fn.params if p.ty is Ty.PTR]
+    for p in ptr_params:
+        b0 = tenants[0][0].get(p.name)
+        if not isinstance(b0, np.ndarray) or b0.ndim != 1:
+            raise _CoalesceAbort(f"no flat buffer bound for {p.name}")
+        for (bt, _, _) in tenants[1:]:
+            b = bt.get(p.name)
+            if (not isinstance(b, np.ndarray) or b.shape != b0.shape
+                    or b.dtype != b0.dtype):
+                raise _CoalesceAbort(
+                    f"buffer signature mismatch for {p.name}")
+        sigs[p.name] = (b0.shape, b0.dtype)
+    for (bt, _, _) in tenants:     # within-tenant views of one base
+        arrs = [bt[p.name] for p in ptr_params]
+        for i_ in range(len(arrs)):
+            for j_ in range(i_ + 1, len(arrs)):
+                if np.shares_memory(arrs[i_], arrs[j_]):
+                    raise _CoalesceAbort("aliasing buffers in a tenant")
+
+    # scalars: launch-uniform values stay 1-D (exactly the solo vector);
+    # tenant-varying ones materialize per chunk as row-uniform 2-D
+    argmap: Dict[int, Any] = {}
+    per_scal: List[Tuple[int, np.ndarray]] = []
+    for p in fn.params:
+        if p.ty is Ty.PTR:
+            continue
+        vs = []
+        for (_, sa, _) in tenants:
+            v = (sa or {}).get(p.name)
+            if v is None:
+                raise _CoalesceAbort(f"no scalar bound for {p.name}")
+            vs.append(v)
+        dt = _TY_DTYPE[p.ty]
+        if all(v == vs[0] for v in vs[1:]) or k == 1:
+            argmap[id(p)] = np.full(W, vs[0], dtype=dt)
+        else:
+            per_scal.append((id(p), np.asarray(vs, dtype=dt)))
+
+    grids = [pt.grid for (_, _, pt) in tenants]
+    wg_tenant = np.repeat(np.arange(k, dtype=np.int64), grids)
+    wg_gx = np.concatenate(
+        [np.arange(g, dtype=np.int64) for g in grids])
+    total_wgs = int(len(wg_tenant))
+    budgets = [pt.fuel for (_, _, pt) in tenants]
+    stripe = _Stripe(k, budgets)
+    fuel = [int(sum(budgets))]     # hard backstop: summed budgets
+    stats = ExecStats()            # batch sink (demix is authoritative)
+    mem = DeviceMemory({}, {}, budget=mem_budget, pool=pool)
+
+    # staging tables: one (k, n) row-per-tenant table per pointer param
+    tables: Dict[str, np.ndarray] = {}
+    if mem_budget is not None:
+        need = sum(k * int(np.prod(s)) * np.dtype(d).itemsize
+                   for (s, d) in sigs.values())
+        if need > mem_budget:
+            raise _CoalesceAbort("staging tables exceed memory budget")
+        mem.allocated += need
+    for p in ptr_params:
+        s, d = sigs[p.name]
+        t = (pool.take((k,) + s, d, zero=False) if pool is not None
+             else np.empty((k,) + s, dtype=d))
+        for j, (bt, _, _) in enumerate(tenants):
+            t[j] = bt[p.name]
+        tables[p.name] = t
+        argmap[id(p)] = t
+
+    try:
+        # per-warp template, identical to the solo grid path's
+        base_intr = {
+            ("local_size", 0): np.full(W, p0.local_size, np.int32),
+            ("local_size", 1): np.full(W, 1, np.int32),
+            ("num_groups", 1): np.full(W, 1, np.int32),
+            ("global_size", 1): np.full(W, 1, np.int32),
+            ("num_threads", 0): np.full(W, W, np.int32),
+            ("num_warps", 0): np.full(W, n_warps, np.int32),
+        }
+        # grid-dependent intrinsics: uniform across tenants stays 1-D
+        # (what _stack_intrs produced), mixed grids go row-uniform 2-D
+        grid_uni = all(g == grids[0] for g in grids[1:])
+        gridv = np.asarray(grids, dtype=np.int64)
+        if grid_uni:
+            base_intr[("num_groups", 0)] = np.full(W, grids[0], np.int32)
+            base_intr[("grid_dim", 0)] = np.full(W, grids[0], np.int32)
+            base_intr[("global_size", 0)] = np.full(
+                W, grids[0] * p0.local_size, np.int32)
+        lanes = np.arange(W)
+        warp_tmpl = []
+        for wrp in range(n_warps):
+            tid_lin = wrp * W + lanes
+            wactive = tid_lin < p0.wg_threads
+            lx = (tid_lin % p0.local_size).astype(np.int32)
+            wbase = dict(base_intr)
+            wbase[("local_id", 0)] = lx
+            wbase[("local_id", 1)] = np.zeros(W, np.int32)
+            wbase[("lane_id", 0)] = lanes.astype(np.int32)
+            wbase[("warp_id", 0)] = np.full(W, wrp, np.int32)
+            warp_tmpl.append((wactive, lx, wbase))
+        wact_stack = np.stack([t_[0] for t_ in warp_tmpl])
+        lx_stack = np.stack([t_[1] for t_ in warp_tmpl]).astype(np.int64)
+        warp_2d: Dict[Tuple[str, int], np.ndarray] = {}
+        if n_warps > 1:
+            for key in (("local_id", 0), ("local_id", 1),
+                        ("lane_id", 0), ("warp_id", 0)):
+                warp_2d[key] = np.stack(
+                    [t_[2][key] for t_ in warp_tmpl])
+            chunk_base = base_intr
+        else:
+            # single warp per wg: per-warp keys stay 1-D, like the solo
+            # grid path (_stack_intrs identity-stacking)
+            chunk_base = warp_tmpl[0][2]
+        affine_ok = p0.local_size % W == 0
+        affine_span = int(max(
+            g * p0.local_size * 1 * 1 + p0.local_size + W
+            for g in grids))
+
+        # whole-workgroup chunks: full chunks of the grid batcher's
+        # width, then power-of-two remainder chunks — NO dead-row
+        # padding (an all-dead padding row would force a desync at the
+        # first vx_pred loop), and the decode cache still sees a
+        # bounded set of widths
+        wg_chunk = max(1, _GRID_BATCH_MAX // n_warps)
+        spans: List[Tuple[int, int]] = []
+        c0 = 0
+        while total_wgs - c0 >= wg_chunk:
+            spans.append((c0, wg_chunk))
+            c0 += wg_chunk
+        rem = total_wgs - c0
+        pw = wg_chunk
+        while rem:
+            while pw > rem:
+                pw //= 2
+            spans.append((c0, pw))
+            c0 += pw
+            rem -= pw
+
+        with np.errstate(divide="ignore", invalid="ignore",
+                         over="ignore"):
+            for (c0, nc) in spans:
+                gprog = _decode_batched(fn, W, False, nc * n_warps,
+                                        grid_mode=True, ride_along=True,
+                                        wg_rows=n_warps, coalesced=True)
+                if not gprog.order_free:
+                    # hazard stores decode to desync nodes (which abort
+                    # at run time anyway) — refuse up front.  order_free
+                    # suffices: the coalesced driver replays the solo
+                    # grid batcher's row-major lockstep order exactly,
+                    # and each tenant's rows only touch its own table
+                    # row, so single-site last-wins scatters reproduce
+                    # the per-tenant solo result
+                    raise _CoalesceAbort(
+                        f"@{fn.name}: not order-free at this shape")
+                rows = nc * n_warps
+                wsel = slice(c0, c0 + nc)
+                gxs = wg_gx[wsel]
+                row_tenant = np.repeat(wg_tenant[wsel], n_warps)
+                gx_rep = np.repeat(gxs, n_warps)
+                gintr = dict(chunk_base)
+                gintr[("group_id", 0)] = np.broadcast_to(
+                    gx_rep.astype(np.int32)[:, None], (rows, W)).copy()
+                gintr[("group_id", 1)] = np.zeros((rows, W), np.int32)
+                gintr[("core_id", 0)] = np.broadcast_to(
+                    (gx_rep % 4).astype(np.int32)[:, None],
+                    (rows, W)).copy()
+                gintr[("global_id", 0)] = (
+                    gxs[:, None, None] * p0.local_size
+                    + lx_stack[None]).reshape(rows, W).astype(np.int32)
+                gintr[("global_id", 1)] = np.zeros((rows, W), np.int32)
+                if not grid_uni:
+                    gv = gridv[row_tenant]
+                    gintr[("num_groups", 0)] = np.broadcast_to(
+                        gv.astype(np.int32)[:, None], (rows, W)).copy()
+                    gintr[("grid_dim", 0)] = gintr[("num_groups", 0)]
+                    gintr[("global_size", 0)] = np.broadcast_to(
+                        (gv * p0.local_size).astype(np.int32)[:, None],
+                        (rows, W)).copy()
+                for key, stk in warp_2d.items():
+                    gintr[key] = np.tile(stk, (nc, 1))
+                am = argmap
+                if per_scal:
+                    am = dict(argmap)
+                    for pid, vals in per_scal:
+                        am[pid] = np.broadcast_to(
+                            vals[row_tenant][:, None],
+                            (rows, W)).copy()
+                gctx = _WarpCtx(W, gintr, False, affine_ok, affine_span)
+                mem.reset_shared()
+                mem.grid_wgs = nc
+                gst = _DState(gprog, am,
+                              np.tile(wact_stack, (nc, 1)), gctx, mem,
+                              stats, fuel)
+                mem.grid_wgs = None
+                gst.stripe = stripe
+                stripe.begin_chunk(row_tenant, gst.act_rows)
+                _run_coalesced(gprog, gst)
+        stripe.flush()
+        # full group success: write back the written params per tenant
+        for name in writes:
+            t = tables.get(name)
+            if t is None:
+                continue
+            for j, (bt, _, _) in enumerate(tenants):
+                bt[name][...] = t[j]
+        return [stripe.demix(j) for j in range(k)]
+    except _CoalesceAbort:
+        raise
+    except Exception as e:
+        # ANY failure aborts the group — staging tables are dropped,
+        # tenant buffers are untouched (nothing to roll back), and the
+        # solo reruns reproduce the exact per-tenant error / demotion /
+        # deadline behavior
+        raise _CoalesceAbort(f"{type(e).__name__}: {e}") from e
+    finally:
+        mem.reset_shared()
+        if pool is not None:
+            for t in tables.values():
+                pool.release(t)
+
+
+# --------------------------------------------------------------------------
 # Kernel launch (grid scheduling = the thread-schedule code VOLT's
 # front-end inserts; here it lives in the host runtime)
 # --------------------------------------------------------------------------
@@ -3378,7 +4198,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
            jax: Optional[Any] = None,
            deadline_t: Optional[float] = None,
            deadline_ms: Optional[float] = None,
-           mem_budget: Optional[int] = None) -> ExecStats:
+           mem_budget: Optional[int] = None,
+           pool: Optional[DevicePool] = None) -> ExecStats:
     """Execute a compiled kernel over the launch grid; returns stats.
     Buffers are mutated in place (device memory semantics).
 
@@ -3437,7 +4258,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
         return _launch_impl(fn, buffers, params, scalar_args,
                             globals_mem, stats=stats, decoded=decoded,
                             batched=batched, ride_along=ride_along,
-                            grid=grid, jax=jax, mem_budget=mem_budget)
+                            grid=grid, jax=jax, mem_budget=mem_budget,
+                            pool=pool)
     except ExecError as e:
         raise _add_ctx(e, kernel=fn.name)
     except _faults.KernelFault:
@@ -3466,10 +4288,11 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
                  ride_along: bool = True,
                  grid: Optional[bool] = None,
                  jax: Optional[Any] = None,
-                 mem_budget: Optional[int] = None) -> ExecStats:
+                 mem_budget: Optional[int] = None,
+                 pool: Optional[DevicePool] = None) -> ExecStats:
     fn = module_fn
     scalar_args = scalar_args or {}
-    mem = DeviceMemory(buffers, globals_mem, budget=mem_budget)
+    mem = DeviceMemory(buffers, globals_mem, budget=mem_budget, pool=pool)
     if stats is None:
         stats = ExecStats()
     W = params.warp_size
@@ -3508,12 +4331,12 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
             _launch_impl(fn, buffers, params, scalar_args, globals_mem,
                          stats=st, decoded=decoded, batched=batched,
                          ride_along=ride_along, grid=grid, jax=None,
-                         mem_budget=mem_budget)
+                         mem_budget=mem_budget, pool=pool)
 
         if _jaxgen.orchestrate(fn, buffers, params, scalar_args, mem,
                                argmap, stats,
                                "fallback" if jax == "fallback" else True,
-                               _run_normal):
+                               _run_normal, route=(jax == "route")):
             return stats
 
     want_grid = ride_along if grid is None else grid
@@ -3584,6 +4407,45 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
             wbase[("lane_id", 0)] = lanes.astype(np.int32)
             wbase[("warp_id", 0)] = warp_ids[wrp]
             warp_tmpl.append((wactive, lx, ly, wbase))
+        # vectorized chunk templates (the PR 5 profile hot spot): the
+        # per-warp pieces stack once per launch, each chunk's per-row
+        # intrinsics are then whole-array broadcasts/products instead of
+        # nc * n_warps Python dict builds + np.full calls per chunk
+        wact_stack = np.stack([t[0] for t in warp_tmpl])   # (n_warps, W)
+        lx_stack = np.stack([t[1] for t in warp_tmpl]).astype(np.int64)
+        ly_stack = np.stack([t[2] for t in warp_tmpl]).astype(np.int64)
+        warp_2d: Dict[Tuple[str, int], np.ndarray] = {}
+        if n_warps > 1:
+            # row-varying per-warp intrinsics, tiled per chunk below
+            for key in (("local_id", 0), ("local_id", 1),
+                        ("lane_id", 0), ("warp_id", 0)):
+                warp_2d[key] = np.stack(
+                    [t[3][key] for t in warp_tmpl])
+            chunk_base = base_intr
+        else:
+            # one warp per wg: the per-warp keys are launch-invariant
+            # and stay 1-D, exactly what _stack_intrs produced
+            # (identical objects stay unstacked)
+            chunk_base = warp_tmpl[0][3]
+
+        def _mk_row_ctx(r: int, c0: int) -> _WarpCtx:
+            # desync fallback only: one row's solo context, identical to
+            # the historical per-row construction
+            k, wrp = divmod(r, n_warps)
+            gx = (c0 + k) % params.grid
+            gy = (c0 + k) // params.grid
+            _, lx, ly, wbase = warp_tmpl[wrp]
+            intr = dict(wbase)
+            intr[("group_id", 0)] = np.full(W, gx, np.int32)
+            intr[("group_id", 1)] = np.full(W, gy, np.int32)
+            intr[("core_id", 0)] = np.full(W, gx % 4, np.int32)
+            intr[("global_id", 0)] = (gx * params.local_size
+                                      + lx).astype(np.int32)
+            intr[("global_id", 1)] = (gy * params.local_size_y
+                                      + ly).astype(np.int32)
+            return _WarpCtx(W, intr, params.strict_oob_loads,
+                            affine_ok, affine_span)
+
         wg_chunk = max(1, _GRID_BATCH_MAX // n_warps)
         # run-ahead licence (re-merge past returned workgroups, row
         # compaction) depends on the launch shape: bare
@@ -3603,35 +4465,40 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
                                         wg_rows=n_warps)
                 runahead = (gprog.private_stores if shape_1d
                             else gprog.private_stores_2d)
-                row_ctxs: List[_WarpCtx] = []
-                row_masks: List[np.ndarray] = []
-                chunk_ids: List[Tuple[int, int]] = []
-                for k in range(nc):
-                    gx = (c0 + k) % params.grid
-                    gy = (c0 + k) // params.grid
-                    chunk_ids.append((gx, gy))
-                    for wactive, lx, ly, wbase in warp_tmpl:
-                        intr = dict(wbase)
-                        intr[("group_id", 0)] = np.full(W, gx, np.int32)
-                        intr[("group_id", 1)] = np.full(W, gy, np.int32)
-                        intr[("core_id", 0)] = np.full(W, gx % 4,
-                                                       np.int32)
-                        intr[("global_id", 0)] = (gx * params.local_size
-                                                  + lx).astype(np.int32)
-                        intr[("global_id", 1)] = (
-                            gy * params.local_size_y + ly).astype(
-                                np.int32)
-                        row_ctxs.append(_WarpCtx(
-                            W, intr, params.strict_oob_loads,
-                            affine_ok, affine_span))
-                        row_masks.append(wactive)
-                gctx = _stack_intrs(row_ctxs, W, params.strict_oob_loads)
+                rows = nc * n_warps
+                ks = np.arange(nc, dtype=np.int64) + c0
+                gxs = ks % params.grid
+                gys = ks // params.grid
+                chunk_ids = list(zip(gxs.tolist(), gys.tolist()))
+                gx_rep = np.repeat(gxs, n_warps)       # (rows,)
+                gy_rep = np.repeat(gys, n_warps)
+                gintr = dict(chunk_base)
+                # int64 products truncated to int32 match the historical
+                # int32 arithmetic bit-for-bit (two's-complement wrap)
+                gintr[("group_id", 0)] = np.broadcast_to(
+                    gx_rep.astype(np.int32)[:, None], (rows, W)).copy()
+                gintr[("group_id", 1)] = np.broadcast_to(
+                    gy_rep.astype(np.int32)[:, None], (rows, W)).copy()
+                gintr[("core_id", 0)] = np.broadcast_to(
+                    (gx_rep % 4).astype(np.int32)[:, None],
+                    (rows, W)).copy()
+                gintr[("global_id", 0)] = (
+                    gxs[:, None, None] * params.local_size
+                    + lx_stack[None]).reshape(rows, W).astype(np.int32)
+                gintr[("global_id", 1)] = (
+                    gys[:, None, None] * params.local_size_y
+                    + ly_stack[None]).reshape(rows, W).astype(np.int32)
+                for key, stk in warp_2d.items():
+                    gintr[key] = np.tile(stk, (nc, 1))
+                gctx = _WarpCtx(W, gintr, params.strict_oob_loads,
+                                affine_ok, affine_span)
                 mem.reset_shared()     # fresh private tile table per
                 mem.grid_wgs = nc      # chunk: (nc, size) shared arrays
-                gst = _DState(gprog, argmap, np.stack(row_masks), gctx,
-                              mem, stats, fuel)
+                gst = _DState(gprog, argmap, np.tile(wact_stack, (nc, 1)),
+                              gctx, mem, stats, fuel)
                 mem.grid_wgs = None
-                gst.warp_ctxs = row_ctxs
+                gst.warp_ctxs = _LazyRowCtxs(
+                    rows, lambda r, c0=c0: _mk_row_ctx(r, c0))
                 try:
                     _run_grid_batched(gprog, gst, chunk_ids,
                                       runahead=runahead)

@@ -218,6 +218,55 @@ def count_rows(safe: np.ndarray, mask: np.ndarray, n_act: int,
     return len(np.unique(keys[mask]))
 
 
+def _run_starts(a: np.ndarray) -> np.ndarray:
+    """Boolean run-start marks of a row-separated key vector (first
+    element of every run of equal adjacent values)."""
+    starts = np.empty(len(a), dtype=bool)
+    starts[0] = True
+    np.not_equal(a[1:], a[:-1], out=starts[1:])
+    return starts
+
+
+def count_rows_split(safe: np.ndarray, mask: np.ndarray, buflen: int,
+                     fact: Optional[AffineFact] = None,
+                     ctx=None) -> np.ndarray:
+    """Per-row line counts for a batched access — the same counting rule
+    as :func:`count_rows`, returned as an ``(rows,)`` vector instead of
+    a sum.  The coalesced multi-launch path uses this to de-mix memory
+    statistics per tenant; ``out.sum()`` is bit-identical to
+    ``count_rows`` for the same access in every mode (the row bias keeps
+    rows in disjoint key ranges, so runs never cross rows and each
+    run-start's row is recoverable from its key)."""
+    if _faults.ACTIVE:
+        _faults.maybe_fault("handler.mem")
+    rows = mask.shape[0]
+    if FAST:
+        if fact is not None and ctx is not None and fact.ok(ctx):
+            if fact.kind == "uni":
+                return mask.any(axis=1).astype(np.int64)
+            keys = safe // CACHE_LINE_ELEMS
+            keys = keys + _row_bias(rows)
+            a = keys[mask]
+            if not len(a):
+                return np.zeros(rows, dtype=np.int64)
+            return np.bincount(a[_run_starts(a)] >> 36, minlength=rows)
+        keys = safe // CACHE_LINE_ELEMS
+        keys = keys + _row_bias(rows)
+        a = np.sort(keys[mask])
+        if not len(a):
+            return np.zeros(rows, dtype=np.int64)
+        return np.bincount(a[_run_starts(a)] >> 36, minlength=rows)
+    # reference mode: the historical row-offset unique, attributed back
+    # to rows by dividing the distinct keys by the per-row line span
+    nlines = buflen // CACHE_LINE_ELEMS + 1
+    rowoff = np.arange(rows, dtype=np.int64)[:, None]
+    keys = safe // CACHE_LINE_ELEMS + rowoff * nlines
+    uq = np.unique(keys[mask])
+    if not len(uq):
+        return np.zeros(rows, dtype=np.int64)
+    return np.bincount(uq // nlines, minlength=rows)
+
+
 def count_gathered(a_ix: np.ndarray, fact: Optional[AffineFact] = None,
                    ctx=None) -> int:
     """Line count over an already-gathered in-bounds active-lane index

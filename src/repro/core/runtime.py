@@ -29,6 +29,7 @@ import os
 import pickle
 import re
 import tempfile
+import threading
 from collections import Counter, deque
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -40,7 +41,7 @@ import numpy as np
 from . import faults as _faults
 from . import governor as _gov
 from . import interp as _interp
-from .faults import DeadlineExceeded, EngineFault, KernelFault
+from .faults import DeadlineExceeded, EngineBusy, EngineFault, KernelFault
 from .interp import ExecError, ExecStats, LaunchParams, \
     launch as interp_launch
 from .passes.pipeline import CompiledKernel, PassConfig, run_pipeline
@@ -380,8 +381,12 @@ _interp.DECODE_PLAN_HOOKS = (_decode_plan_load, _decode_plan_save)
 
 # schema 2: verdicts gained the "pass-exact" tier — a schema-1 "pass"
 # meant "certified at backend level 0" and must not promote a pair onto
-# the optimized fast tier, so old files are discarded wholesale
-_JAX_CERT_SCHEMA = 2
+# the optimized fast tier, so old files are discarded wholesale.
+# schema 3: verdicts carry measured (jax_ms, grid_ms) per launch-shape
+# class so the dispatch router can send small launches straight to the
+# grid rung (the ~0.5 ms jitted-dispatch floor fix); schema-2 verdicts
+# lack the timings and are discarded wholesale
+_JAX_CERT_SCHEMA = 3
 
 
 def _jax_cert_load(fn: Function) -> Optional[dict]:
@@ -428,6 +433,7 @@ def _jax_cert_save(fn: Function, certs: dict) -> None:
 
 
 _interp.JAX_CERT_HOOKS = (_jax_cert_load, _jax_cert_save)
+_interp.ROUTED_SMALL_HOOK = lambda: _tel("routed_small")
 
 
 @dataclass
@@ -454,11 +460,15 @@ _RUNG_ORDER = ("jax", "grid", "wg", "decoded", "oracle")
 #: interp.launch kwargs per rung.  "jax" is the top rung when the
 #: Runtime enables it (jax=True / VOLT_JAX=1): the jitted-codegen
 #: executor, auto-falling through to grid selection when the licence or
-#: certification gate refuses.  "grid" is the production default
-#: (auto-selects grid / wg-batched / decoded by eligibility); pinning
-#: grid=False / batched=False peels one fast path per rung.
+#: certification gate refuses.  The chain asks for ``jax="route"`` —
+#: like True, plus the small-launch dispatch router: certified pairs
+#: whose measured grid time beats the jitted dispatch floor are served
+#: by the grid rung (docs/performance.md "Serve side").  "grid" is the
+#: production default (auto-selects grid / wg-batched / decoded by
+#: eligibility); pinning grid=False / batched=False peels one fast
+#: path per rung.
 _RUNG_KWARGS: Dict[str, Dict[str, Any]] = {
-    "jax":     dict(decoded=True, batched=True, jax=True),
+    "jax":     dict(decoded=True, batched=True, jax="route"),
     "grid":    dict(decoded=True, batched=True),
     "wg":      dict(decoded=True, batched=True, grid=False),
     "decoded": dict(decoded=True, batched=False),
@@ -534,19 +544,38 @@ def _attach_report(e: BaseException, report: LaunchReport) -> None:
 #: process-lifetime launch/degradation counters (GRID_TELEMETRY's
 #: pattern: NOT part of ExecStats — stats stay bit-identical across
 #: executors by contract).  Printed by ``benchmarks/run.py --profile``.
+#: Mutate through ``_tel``/``_tel_ctr`` — the launch service drains
+#: queues from concurrent submitter threads, and bare ``+=`` on a module
+#: dict is a read-modify-write race.
 LAUNCH_TELEMETRY: Dict[str, Any] = {}
+
+_TEL_LOCK = threading.Lock()
+
+
+def _tel(key: str, n: int = 1) -> None:
+    with _TEL_LOCK:
+        LAUNCH_TELEMETRY[key] += n
+
+
+def _tel_ctr(key: str, sub: Any, n: int = 1) -> None:
+    with _TEL_LOCK:
+        LAUNCH_TELEMETRY[key][sub] += n
 
 
 def reset_launch_telemetry() -> None:
-    LAUNCH_TELEMETRY.clear()
-    LAUNCH_TELEMETRY.update(
-        launches=0, demotions=0, rollbacks=0, engine_faults=0,
-        kernel_faults=0, by_executor=Counter(),
-        demotion_reasons=Counter(),
-        # launch governor (core/governor.py)
-        deadline_expired=0, snapshot_budget_skips=0,
-        breaker_trips=0, breaker_pinned=0, breaker_probes=0,
-        breaker_promotions=0)
+    with _TEL_LOCK:
+        LAUNCH_TELEMETRY.clear()
+        LAUNCH_TELEMETRY.update(
+            launches=0, demotions=0, rollbacks=0, engine_faults=0,
+            kernel_faults=0, by_executor=Counter(),
+            demotion_reasons=Counter(),
+            # launch governor (core/governor.py)
+            deadline_expired=0, snapshot_budget_skips=0,
+            breaker_trips=0, breaker_pinned=0, breaker_probes=0,
+            breaker_promotions=0,
+            # launch service (continuous batching + small-launch router)
+            coalesced_groups=0, coalesced_launches=0, coalesce_aborts=0,
+            routed_small=0)
 
 
 reset_launch_telemetry()
@@ -596,6 +625,15 @@ class Runtime:
             _gov.CircuitBreaker(self.gov_cfg.breaker_threshold,
                                 self.gov_cfg.breaker_probe_every) \
             if govern else None
+        pb = self.gov_cfg.pool_budget
+        if pb is None:
+            pb = _gov.env_pool_budget()
+        #: pooled device allocator (interp.DevicePool): shared tiles,
+        #: tile tables and the launch service's coalesced staging tables
+        #: reuse backing arrays across launches instead of allocating —
+        #: bounded by GovernorConfig.pool_budget / VOLT_POOL_BUDGET
+        self.pool = _interp.DevicePool(
+            capacity=pb if pb is not None else 64 << 20)
         self.buffers: Dict[str, np.ndarray] = {}
         self.globals_mem: Dict[str, np.ndarray] = {}
         self._pending_symbols: Dict[str, np.ndarray] = {}
@@ -603,11 +641,20 @@ class Runtime:
         self.last_stats: Optional[ExecStats] = None
         self.last_report: Optional[LaunchReport] = None
         self._reports: deque = deque(maxlen=REPORT_RING)
+        # the launch service drains tenant queues from submitter
+        # threads; the ring and last_report are shared post-mortem state
+        self._report_lock = threading.Lock()
 
     def last_reports(self) -> List[LaunchReport]:
         """The last ``REPORT_RING`` LaunchReports, oldest first — the
         post-mortem trail when a failure is noticed after the fact."""
-        return list(self._reports)
+        with self._report_lock:
+            return list(self._reports)
+
+    def _push_report(self, report: LaunchReport) -> None:
+        with self._report_lock:
+            self.last_report = report
+            self._reports.append(report)
 
     # -- OpenCL-ish -----------------------------------------------------------
     def create_buffer(self, name: str, data: np.ndarray) -> Buffer:
@@ -655,8 +702,11 @@ class Runtime:
     def _snapshot_write_roots(self, kernel_fn: Function,
                               report: LaunchReport,
                               budget: Optional[int] = None,
-                              force: bool = False
-                              ) -> Optional[Dict[Any, Any]]:
+                              force: bool = False,
+                              buffers: Optional[Dict[str, np.ndarray]]
+                              = None,
+                              globals_mem: Optional[Dict[str, np.ndarray]]
+                              = None) -> Optional[Dict[Any, Any]]:
         """Transactional snapshot: copy the buffers this kernel may
         WRITE (interp.write_root_buffers; everything bound when the
         scan cannot resolve a store root).  Read-only buffers are never
@@ -670,60 +720,77 @@ class Runtime:
         OOMing mid-chain.  ``force`` overrides the budget: an armed
         deadline's rollback contract outranks the budget (the snapshot
         is the only thing that makes a timed-out launch bit-invisible)."""
+        bufs = self.buffers if buffers is None else buffers
+        gmem = self.globals_mem if globals_mem is None else globals_mem
         roots = _interp.write_root_buffers(kernel_fn)
         pairs: List[Tuple[Any, np.ndarray]] = []
         if roots is None:
-            pairs.extend((("b", n), a) for n, a in self.buffers.items())
-            pairs.extend((("g", n), a)
-                         for n, a in self.globals_mem.items())
+            pairs.extend((("b", n), a) for n, a in bufs.items())
+            pairs.extend((("g", n), a) for n, a in gmem.items())
         else:
             params_w, globals_w = roots
             for name in params_w:
-                arr = self.buffers.get(name)
+                arr = bufs.get(name)
                 if arr is not None:
                     pairs.append((("b", name), arr))
             for name in globals_w:
-                arr = self.globals_mem.get(name)
+                arr = gmem.get(name)
                 if arr is not None:
                     pairs.append((("g", name), arr))
         total = sum(a.nbytes for _, a in pairs)
         if budget is not None and total > budget and not force:
             report.snapshot_skipped = "mem-budget"
-            LAUNCH_TELEMETRY["snapshot_budget_skips"] += 1
+            _tel("snapshot_budget_skips")
             return None
         snap: Dict[Any, Any] = {k: a.copy() for k, a in pairs}
-        snap["__globals_keys__"] = set(self.globals_mem)
+        snap["__globals_keys__"] = set(gmem)
         report.snapshot_bytes = total
         return snap
 
-    def _rollback(self, snap: Dict[Any, Any]) -> None:
+    def _rollback(self, snap: Dict[Any, Any],
+                  buffers: Optional[Dict[str, np.ndarray]] = None,
+                  globals_mem: Optional[Dict[str, np.ndarray]] = None
+                  ) -> None:
+        bufs = self.buffers if buffers is None else buffers
+        gmem = self.globals_mem if globals_mem is None else globals_mem
         for key, arr in snap.items():
             if not isinstance(key, tuple):
                 continue
             kind, name = key
-            dst = self.buffers[name] if kind == "b" \
-                else self.globals_mem[name]
+            dst = bufs[name] if kind == "b" else gmem[name]
             dst[:] = arr
         # globals the failed attempt lazily zero-created: drop them so
         # the retry re-creates them identically
-        for name in list(self.globals_mem):
+        for name in list(gmem):
             if name not in snap["__globals_keys__"]:
-                del self.globals_mem[name]
+                del gmem[name]
 
     def launch(self, kernel_fn: Function, *, grid: int, block: int,
                scalar_args: Optional[Dict[str, Any]] = None,
-               deadline_ms: Optional[float] = None) -> ExecStats:
+               deadline_ms: Optional[float] = None,
+               buffers: Optional[Dict[str, np.ndarray]] = None,
+               globals_mem: Optional[Dict[str, np.ndarray]] = None,
+               fuel: Optional[int] = None) -> ExecStats:
+        """Run one kernel launch through the full degradation chain.
+        ``buffers``/``globals_mem`` override the Runtime-owned dicts —
+        the launch service runs each tenant's launch against the
+        tenant's own buffer set while sharing this Runtime's breaker
+        bank, governor, pool and report ring."""
+        bufs = self.buffers if buffers is None else buffers
+        gmem = self.globals_mem if globals_mem is None else globals_mem
         # materialize staged symbols now that "addresses are resolved"
         for sym, data in self._pending_symbols.items():
-            buf = self.globals_mem.get(sym)
+            buf = gmem.get(sym)
             if buf is None or len(buf) < len(data):
                 buf = np.zeros(max(len(data), 1), dtype=data.dtype)
             buf[:len(data)] = data
-            self.globals_mem[sym] = buf
+            gmem[sym] = buf
         self._pending_symbols.clear()
 
         params = LaunchParams(grid=grid, local_size=block,
                               warp_size=self.warp_size)
+        if fuel is not None:
+            params = dataclasses.replace(params, fuel=fuel)
         chain = list(_RUNG_ORDER) if self.batched \
             else list(_RUNG_ORDER[_RUNG_ORDER.index("decoded"):])
         if not self.jax:
@@ -731,9 +798,8 @@ class Runtime:
         if not (self.degrade and self.transactional):
             chain = chain[:1]      # single attempt, no retry
         report = LaunchReport(kernel=kernel_fn.name)
-        self.last_report = report
-        self._reports.append(report)
-        LAUNCH_TELEMETRY["launches"] += 1
+        self._push_report(report)
+        _tel("launches")
 
         # ---- governor plan (core/governor.py) ------------------------
         if deadline_ms is None and self.govern:
@@ -754,13 +820,13 @@ class Runtime:
                 bkey, kernel_fn.name).state
             report.probe = probing
             if probing:
-                LAUNCH_TELEMETRY["breaker_probes"] += 1
+                _tel("breaker_probes")
             if pin is not None:
                 # open breaker: start at the last-good rung, skipping
                 # the doomed fast path (and, when pinned at the oracle
                 # floor with no deadline, the snapshot too)
                 report.pinned_rung = pin
-                LAUNCH_TELEMETRY["breaker_pinned"] += 1
+                _tel("breaker_pinned")
                 kp = _RUNG_ORDER.index(pin)
                 chain = [r for r in chain
                          if _RUNG_ORDER.index(r) >= kp] or [chain[-1]]
@@ -776,7 +842,8 @@ class Runtime:
                     (i + 1 < len(chain) or deadline_t is not None):
                 txn = self._snapshot_write_roots(
                     kernel_fn, report, budget=mem_budget,
-                    force=deadline_t is not None)
+                    force=deadline_t is not None,
+                    buffers=bufs, globals_mem=gmem)
                 if txn is None and i + 1 < len(chain):
                     # over-budget snapshot: degrade straight to the
                     # oracle floor, which needs no retry snapshot
@@ -784,12 +851,13 @@ class Runtime:
                     rung = chain[i]
             t0 = perf_counter()
             try:
-                stats = interp_launch(kernel_fn, self.buffers, params,
+                stats = interp_launch(kernel_fn, bufs, params,
                                       scalar_args=scalar_args,
-                                      globals_mem=self.globals_mem,
+                                      globals_mem=gmem,
                                       deadline_t=deadline_t,
                                       deadline_ms=deadline_ms,
                                       mem_budget=mem_budget,
+                                      pool=self.pool,
                                       **_RUNG_KWARGS[rung])
             except DeadlineExceeded as e:
                 used = _interp.LAST_EXECUTOR[0] or rung
@@ -797,11 +865,11 @@ class Runtime:
                     rung, used, "deadline", str(e),
                     (perf_counter() - t0) * 1e3))
                 report.deadline_expired = True
-                LAUNCH_TELEMETRY["deadline_expired"] += 1
+                _tel("deadline_expired")
                 if txn is not None:
-                    self._rollback(txn)
+                    self._rollback(txn, buffers=bufs, globals_mem=gmem)
                     report.rolled_back += 1
-                    LAUNCH_TELEMETRY["rollbacks"] += 1
+                    _tel("rollbacks")
                 report.wall_ms = (perf_counter() - t_launch) * 1e3
                 if bkey is not None:
                     self.breaker.abort(bkey, kernel_fn.name,
@@ -814,7 +882,7 @@ class Runtime:
                 report.attempts.append(LaunchAttempt(
                     rung, used, "engine_fault", str(e),
                     (perf_counter() - t0) * 1e3))
-                LAUNCH_TELEMETRY["engine_faults"] += 1
+                _tel("engine_faults")
                 # demote BELOW the executor that actually ran (a
                 # gate-refused grid request already fell back before
                 # the fault fired)
@@ -832,13 +900,13 @@ class Runtime:
                                            probing=probing)
                     _attach_report(e, report)
                     raise
-                self._rollback(txn)
+                self._rollback(txn, buffers=bufs, globals_mem=gmem)
                 report.rolled_back += 1
                 report.demotions += 1
-                LAUNCH_TELEMETRY["rollbacks"] += 1
-                LAUNCH_TELEMETRY["demotions"] += 1
-                LAUNCH_TELEMETRY["demotion_reasons"][
-                    getattr(e, "site", None) or "exec"] += 1
+                _tel("rollbacks")
+                _tel("demotions")
+                _tel_ctr("demotion_reasons",
+                         getattr(e, "site", None) or "exec")
                 i = nxt
                 continue
             except KernelFault as e:
@@ -846,7 +914,7 @@ class Runtime:
                 report.attempts.append(LaunchAttempt(
                     rung, _interp.LAST_EXECUTOR[0], "kernel_fault",
                     str(e), (perf_counter() - t0) * 1e3))
-                LAUNCH_TELEMETRY["kernel_faults"] += 1
+                _tel("kernel_faults")
                 report.wall_ms = (perf_counter() - t_launch) * 1e3
                 if bkey is not None:
                     # never a breaker trip — but a probe that hit a
@@ -860,16 +928,15 @@ class Runtime:
                 rung, used, "ok", "", (perf_counter() - t0) * 1e3))
             report.executor = used
             report.wall_ms = (perf_counter() - t_launch) * 1e3
-            LAUNCH_TELEMETRY["by_executor"][used] += 1
+            _tel_ctr("by_executor", used)
             if bkey is not None:
                 demoted = report.demotions > 0
                 changed = self.breaker.record(
                     bkey, kernel_fn.name, demoted=demoted,
                     final_rung=used, probing=probing)
                 if changed:
-                    LAUNCH_TELEMETRY[
-                        "breaker_trips" if demoted
-                        else "breaker_promotions"] += 1
+                    _tel("breaker_trips" if demoted
+                         else "breaker_promotions")
                 report.breaker = self.breaker.entry(
                     bkey, kernel_fn.name).state
             self.last_stats = stats
@@ -894,3 +961,282 @@ class Runtime:
         if st is None:
             raise RuntimeError("no kernel has been launched")
         return self.cycle_model.cycles(st)
+
+
+# --------------------------------------------------------------------------
+# Launch service: continuous launch batching over the Runtime
+# --------------------------------------------------------------------------
+
+
+class LaunchHandle:
+    """One launch submitted to a :class:`LaunchService`.  ``flush()``
+    fills in exactly one of ``stats`` / ``error``; ``result()`` replays
+    the solo-launch contract (return the ExecStats or raise the stored
+    exception, with ``.report`` attached where the solo path attaches
+    it)."""
+
+    __slots__ = ("kernel", "tenant", "grid", "block", "stats", "error",
+                 "report", "mode")
+
+    def __init__(self, kernel: str, tenant: Any, grid: int,
+                 block: int) -> None:
+        self.kernel = kernel
+        self.tenant = tenant
+        self.grid = grid
+        self.block = block
+        self.stats: Optional[ExecStats] = None
+        self.error: Optional[BaseException] = None
+        self.report: Optional[LaunchReport] = None
+        #: "coalesced" | "solo" | None (not flushed yet)
+        self.mode: Optional[str] = None
+
+    def done(self) -> bool:
+        return self.stats is not None or self.error is not None
+
+    def result(self) -> ExecStats:
+        if self.error is not None:
+            raise self.error
+        if self.stats is None:
+            raise RuntimeError(
+                f"launch of @{self.kernel} not flushed yet "
+                f"(call LaunchService.flush())")
+        return self.stats
+
+    def __repr__(self) -> str:   # pragma: no cover - debugging aid
+        state = ("error" if self.error is not None
+                 else "ok" if self.stats is not None else "pending")
+        return (f"LaunchHandle(@{self.kernel}, tenant={self.tenant!r}, "
+                f"grid={self.grid}, {state}, mode={self.mode})")
+
+
+class LaunchService:
+    """Async multi-tenant launch front-end over one :class:`Runtime`.
+
+    Tenants ``submit()`` launches against their OWN buffer dicts into a
+    bounded pending queue (overflow raises ``EngineBusy`` — the serve
+    engine's backpressure contract); ``flush()`` drains it, coalescing
+    compatible launches of the same compiled kernel — same decode-plan
+    content hash, same block shape, same buffer signature, coalescing
+    licence granted (``interp._coalesce_struct``) — into shared grid
+    chunks via :func:`interp.launch_coalesced`.  Results are
+    bit-identical to running each launch alone: stats are de-mixed per
+    tenant by the striped accounting, buffers write back per tenant
+    from the staging tables, and ANY group condition the coalesced
+    driver cannot reproduce exactly (licence refusal at decode,
+    desync, a kernel error, an injected fault, a deadline) aborts the
+    group untouched and reruns every member through the normal
+    ``Runtime.launch`` degradation chain — so faults, deadlines and
+    breaker trips stay per-launch, never per-chunk.
+
+    The runtime's governor context is shared: coalesced groups run
+    against the same ``DevicePool`` and ``VOLT_MEM_BUDGET``, arm the
+    tightest member deadline, are skipped while the kernel's circuit
+    breaker is open (a demoting kernel must keep its per-launch chain),
+    and pause after ``ABORT_STREAK`` consecutive aborts (re-probing
+    every ``RETRY_EVERY`` flushes) so a persistently-refusing group
+    stops paying the staging cost."""
+
+    #: consecutive group aborts before a group key stops coalescing
+    ABORT_STREAK = 3
+    #: paused group keys re-probe coalescing every N-th flush
+    RETRY_EVERY = 8
+
+    def __init__(self, runtime: Runtime, *, max_pending: int = 256,
+                 coalesce: bool = True) -> None:
+        self.rt = runtime
+        self.max_pending = max_pending
+        self.coalesce = coalesce
+        self._lock = threading.Lock()      # queue admission
+        self._flush_lock = threading.Lock()  # serializes drains
+        self._pending: List[Tuple[Any, ...]] = []
+        self._aborts: Dict[Tuple[Any, ...], int] = {}
+        self._cooldown: Dict[Tuple[Any, ...], int] = {}
+        self.telemetry: Counter = Counter()
+        self.last_abort: Optional[str] = None
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, kernel_fn: Function, *, grid: int, block: int,
+               buffers: Dict[str, np.ndarray],
+               scalar_args: Optional[Dict[str, Any]] = None,
+               deadline_ms: Optional[float] = None,
+               tenant: Any = None) -> LaunchHandle:
+        """Queue one launch of ``kernel_fn`` against ``buffers`` (the
+        tenant's own dict — mutated in place exactly as
+        ``Runtime.launch`` would).  Raises ``EngineBusy`` when the
+        pending queue is full."""
+        with self._lock:
+            if len(self._pending) >= self.max_pending:
+                self.telemetry["busy_rejections"] += 1
+                raise EngineBusy(
+                    f"launch queue full ({len(self._pending)}/"
+                    f"{self.max_pending}); flush() or retry later")
+            h = LaunchHandle(
+                kernel_fn.name,
+                tenant if tenant is not None else len(self._pending),
+                grid, block)
+            self._pending.append(
+                (kernel_fn, grid, block, buffers, scalar_args,
+                 deadline_ms, h))
+            return h
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    # -- drain --------------------------------------------------------------
+    def flush(self) -> List[LaunchHandle]:
+        """Drain the queue: group, coalesce where licensed, solo-run the
+        rest.  Returns the drained handles in submission order; errors
+        are STORED on their handle (``.result()`` re-raises), never
+        raised from flush — one tenant's fault must not block the
+        drain."""
+        with self._lock:
+            batch, self._pending = self._pending, []
+        if not batch:
+            return []
+        with self._flush_lock:
+            groups: Dict[Tuple[Any, ...], List[Tuple[Any, ...]]] = {}
+            for entry in batch:
+                groups.setdefault(self._group_key(entry), []).append(entry)
+            for key, entries in groups.items():
+                self._run_group(key, entries)
+        return [entry[6] for entry in batch]
+
+    def _group_key(self, entry: Tuple[Any, ...]) -> Tuple[Any, ...]:
+        fn, grid, block, buffers, _scal, _dl, _h = entry
+        sig = []
+        for p in fn.params:
+            if p.ty is not Ty.PTR:
+                continue
+            b = buffers.get(p.name)
+            if isinstance(b, np.ndarray):
+                sig.append((p.name, b.shape, b.dtype.str))
+            else:
+                sig.append((p.name, None, None))
+        return (_decode_plan_key(fn), block, self.rt.warp_size,
+                tuple(sig))
+
+    def _run_group(self, key: Tuple[Any, ...],
+                   entries: List[Tuple[Any, ...]]) -> None:
+        fn = entries[0][0]
+        if (self.coalesce and len(entries) >= 2
+                and self._may_coalesce(key, fn)
+                and self._run_coalesced(key, fn, entries)):
+            return
+        for (fn_, grid, block, bufs, scal, dl, h) in entries:
+            self._run_solo(fn_, grid, block, bufs, scal, dl, h)
+
+    def _may_coalesce(self, key: Tuple[Any, ...], fn: Function) -> bool:
+        if _interp._coalesce_struct(fn) is None:
+            self.telemetry["no_licence"] += 1
+            return False
+        rt = self.rt
+        if rt.breaker is not None:
+            # read-only peek: an open/half-open breaker means this
+            # kernel is demoting — its launches need the full
+            # per-launch chain (and the probe accounting), which only
+            # the solo path runs
+            st = rt.breaker.entry(key[0], fn.name)
+            if st.state != "closed":
+                self.telemetry["breaker_solo"] += 1
+                return False
+        if self._aborts.get(key, 0) >= self.ABORT_STREAK:
+            cd = self._cooldown.get(key, self.RETRY_EVERY) - 1
+            if cd > 0:
+                self._cooldown[key] = cd
+                self.telemetry["abort_paused"] += 1
+                return False
+            self._cooldown[key] = self.RETRY_EVERY
+        return True
+
+    def _run_coalesced(self, key: Tuple[Any, ...], fn: Function,
+                       entries: List[Tuple[Any, ...]]) -> bool:
+        rt = self.rt
+        # cross-tenant aliasing: two queued launches sharing a buffer
+        # must run sequentially (the second reads the first's output);
+        # staged write-back would make them last-wins instead
+        arrs = [[a for a in bufs.values() if isinstance(a, np.ndarray)]
+                for (_f, _g, _b, bufs, _s, _d, _h) in entries]
+        for i in range(len(arrs)):
+            for j in range(i + 1, len(arrs)):
+                for a in arrs[i]:
+                    for b in arrs[j]:
+                        if np.shares_memory(a, b):
+                            self.telemetry["alias_solo"] += 1
+                            return False
+        triples = []
+        deadlines = []
+        for (_f, grid, block, bufs, scal, dl, _h) in entries:
+            triples.append((bufs, scal, LaunchParams(
+                grid=grid, local_size=block,
+                warp_size=rt.warp_size)))
+            if dl is None and rt.govern:
+                dl = rt.gov_cfg.deadline_ms
+            if dl is not None:
+                deadlines.append(dl)
+        deadline_ms = min(deadlines) if deadlines else None
+        mem_budget = rt.mem_budget if rt.govern else None
+        armed = False
+        t0 = perf_counter()
+        try:
+            if deadline_ms is not None:
+                # tightest member deadline governs the group; a trip
+                # aborts it untouched and the solo reruns re-arm each
+                # tenant's own budget
+                _gov.arm_deadline(perf_counter() + deadline_ms * 1e-3,
+                                  deadline_ms)
+                armed = True
+            with _faults.rung("grid"):
+                stats = _interp.launch_coalesced(
+                    fn, triples, pool=rt.pool, mem_budget=mem_budget)
+        except _interp._CoalesceAbort as e:
+            self._aborts[key] = self._aborts.get(key, 0) + 1
+            self._cooldown[key] = self.RETRY_EVERY
+            self.telemetry["group_aborts"] += 1
+            self.last_abort = str(e)
+            _tel("coalesce_aborts")
+            return False
+        finally:
+            if armed:
+                _gov.disarm_deadline()
+        self._aborts.pop(key, None)
+        self._cooldown.pop(key, None)
+        wall_ms = (perf_counter() - t0) * 1e3
+        self.telemetry["groups"] += 1
+        self.telemetry["coalesced_launches"] += len(entries)
+        _tel("coalesced_groups")
+        _tel("coalesced_launches", len(entries))
+        for (_f, _g, _b, _bufs, _s, _d, h), st in zip(entries, stats):
+            report = LaunchReport(kernel=fn.name)
+            report.executor = "grid"
+            report.wall_ms = wall_ms    # group wall: shared chunks
+            report.attempts.append(LaunchAttempt(
+                "grid", "grid", "ok",
+                f"coalesced x{len(entries)}", wall_ms))
+            rt._push_report(report)
+            h.stats = st
+            h.report = report
+            h.mode = "coalesced"
+            rt.last_stats = st
+            _tel("launches")
+            _tel_ctr("by_executor", "grid")
+        if rt.breaker is not None:
+            rt.breaker.record(key[0], fn.name, demoted=False,
+                              final_rung="grid", probing=False)
+        return True
+
+    def _run_solo(self, fn: Function, grid: int, block: int,
+                  bufs: Dict[str, np.ndarray],
+                  scal: Optional[Dict[str, Any]],
+                  dl: Optional[float], h: LaunchHandle) -> None:
+        self.telemetry["solo_launches"] += 1
+        try:
+            h.stats = self.rt.launch(
+                fn, grid=grid, block=block, scalar_args=scal,
+                deadline_ms=dl, buffers=bufs)
+        except Exception as e:
+            h.error = e
+            h.report = getattr(e, "report", None)
+        else:
+            h.report = self.rt.last_report
+        h.mode = "solo"

@@ -29,13 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import faults as _faults
-from repro.core.faults import EngineFault
-
-
-class EngineBusy(RuntimeError):
-    """Admission control: the submit queue is full.  Explicit
-    backpressure — the client retries later instead of the engine
-    accepting unbounded work it cannot drain."""
+# EngineBusy moved to core/faults.py (the runtime's launch service
+# raises it too); re-exported here for every existing import site
+from repro.core.faults import EngineBusy, EngineFault
 
 
 @dataclass
