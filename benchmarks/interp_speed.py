@@ -128,6 +128,23 @@ JAX_BENCHES = [
 # by actual execution.
 JAX_STEADY_STATE_GRID_MS = 2.0
 
+# Large-grid launches for the host-parallel dispatcher section
+# (``interp_speed_parallel``): the suite shapes scaled up until the grid
+# spans many batch chunks, because the parallel dispatcher's unit of
+# work is a decode-licensed chunk of workgroups.  Per-bench make
+# functions live in ``_mk_parallel`` — same buffer layouts as the
+# volt_bench originals, bigger grids.  Measured: ``workers=N`` vs
+# ``workers=1`` (today's sequential chunk walk) on the SAME executor
+# configuration, parity-gated bit-identical (stats + every buffer) at
+# every measured worker count.
+PARALLEL_BENCHES = [
+    "spmv_csr", "spmv_tail", "kmeans", "nearn", "reduce0", "psum",
+]
+
+#: worker count for the measured ``par`` column (and the CHECKED
+#: aggregate); the parity gate additionally sweeps 2 and 8
+PARALLEL_WORKERS = 4
+
 
 def multi_warp_params(params: interp.LaunchParams,
                       factor: int = 4) -> interp.LaunchParams:
@@ -821,6 +838,145 @@ def main_mem(benches: Optional[List[str]] = None) -> Dict:
     return {"per_bench": results, "aggregate": agg}
 
 
+def _mk_parallel(name: str, rng) -> tuple:
+    """Large-grid variants of the suite benches — identical buffer
+    layouts and kernel handles, grids scaled until the launch spans many
+    grid-batch chunks (the parallel dispatcher's unit of work)."""
+    from repro.volt_bench.suite import _params, _ragged_csr
+    if name == "spmv_csr":
+        g = 256
+        n = g * 32
+        row_ptr, cols = _ragged_csr(rng, n)
+        vals = rng.standard_normal(len(cols)).astype(np.float32)
+        x = rng.standard_normal(n).astype(np.float32)
+        return {"row_ptr": row_ptr, "cols": cols, "vals": vals, "x": x,
+                "y": np.zeros(n, np.float32)}, {"n": n}, _params(g)
+    if name == "spmv_tail":
+        # Pareto-tail degree pattern of the original, 4x the grid
+        g = 256
+        n = g * 32
+        deg = rng.integers(0, 4, n)
+        hot = rng.uniform(0, 1, n) < 0.008
+        deg[hot] = rng.integers(250, 400, int(hot.sum()))
+        row_ptr = np.zeros(n + 1, np.int32)
+        row_ptr[1:] = np.cumsum(deg)
+        cols = rng.integers(0, n, int(row_ptr[-1])).astype(np.int32)
+        vals = rng.standard_normal(len(cols)).astype(np.float32)
+        x = rng.standard_normal(n).astype(np.float32)
+        return {"row_ptr": row_ptr, "cols": cols, "vals": vals, "x": x,
+                "y": np.zeros(n, np.float32)}, {"n": n}, _params(g)
+    if name == "kmeans":
+        g = 256
+        npoints, k, dims = g * 32, 5, 4
+        feats = rng.standard_normal(npoints * dims).astype(np.float32)
+        cents = rng.standard_normal(k * dims).astype(np.float32)
+        return {"features": feats, "centroids": cents,
+                "assign": np.zeros(g * 32, np.int32)}, \
+            {"npoints": npoints, "k": k, "dims": dims}, _params(g)
+    if name == "nearn":
+        g = 128
+        npoints, dims, nq = 48, 4, g * 32
+        feats = rng.standard_normal(npoints * dims).astype(np.float32)
+        q = rng.standard_normal(nq * dims).astype(np.float32)
+        return {"features": feats, "query": q,
+                "out_idx": np.zeros(g * 32, np.int32)}, \
+            {"npoints": npoints, "dims": dims, "nq": nq}, _params(g)
+    if name == "reduce0":
+        g = 256
+        x = rng.standard_normal(g * 32).astype(np.float32)
+        return {"x": x, "out": np.zeros(g, np.float32)}, \
+            {"n": g * 32 - 13}, _params(g)
+    if name == "psum":
+        g = 256
+        x = rng.standard_normal(g * 32).astype(np.float32)
+        return {"x": x, "y": np.zeros(g * 32, np.float32)}, \
+            {"n": g * 32 - 7}, _params(g)
+    raise KeyError(f"no large-grid variant for bench {name!r}")
+
+
+def run_parallel(seed: int = 7, benches: Optional[List[str]] = None,
+                 workers: int = PARALLEL_WORKERS) -> Dict:
+    """Host-parallel grid dispatch: decode-licensed grid chunks farmed
+    across the worker pool (``workers=N``) vs today's sequential chunk
+    walk (``workers=1``) on the same executor configuration.  Parity
+    gate: stats + every buffer bit-identical at workers in {1, 2, N, 8},
+    and the pool must actually be exercised at ``workers=N`` — a bench
+    whose launch falls back to the sequential path would silently time
+    1.0x and dilute the aggregate."""
+    from repro.core import parallel as par_mod
+    names = benches or PARALLEL_BENCHES
+    out: Dict[str, Dict[str, float]] = {}
+    for name in names:
+        b = BENCHES[name]
+        rng = np.random.default_rng(seed)
+        bufs0, scalars, params = _mk_parallel(name, rng)
+        ck = runtime.compile_kernel(b.handle, FULL)
+
+        def launch_with(nworkers: int):
+            bufs = {k: v.copy() for k, v in bufs0.items()}
+            st = interp.launch(ck.fn, bufs, params, scalar_args=scalars,
+                               workers=nworkers)
+            return st, bufs
+
+        # ---- parity gate: every worker count bit-identical -------------
+        st1, ref = launch_with(1)
+        real_pool, pool_hits = par_mod.get_pool, []
+
+        def counting_pool(n, backend="thread"):
+            pool_hits.append((n, backend))
+            return real_pool(n, backend)
+
+        for w in sorted({2, workers, 8}):
+            try:
+                if w == workers:
+                    par_mod.get_pool = counting_pool
+                stw, bufs = launch_with(w)
+            finally:
+                par_mod.get_pool = real_pool
+            _assert_stats_equal(f"{name}/workers={w}", st1, stw)
+            for k in bufs0:
+                np.testing.assert_array_equal(
+                    ref[k], bufs[k],
+                    err_msg=f"{name}/workers={w}: buffer {k} diverged")
+        assert pool_hits, \
+            f"{name}: parallel dispatch never engaged at workers={workers}"
+
+        # interleaved best-of (the reported number is a ratio)
+        variants = {"seq": 1, "par": workers}
+        best = {k: float("inf") for k in variants}
+        for _ in range(max(REPS, 5)):
+            for label, w in variants.items():
+                bufs = {k: v.copy() for k, v in bufs0.items()}
+                t0 = time.perf_counter()
+                interp.launch(ck.fn, bufs, params, scalar_args=scalars,
+                              workers=w)
+                best[label] = min(best[label],
+                                  time.perf_counter() - t0)
+        t_seq, t_par = best["seq"], best["par"]
+        out[name] = {
+            "seq_ms": t_seq * 1e3, "par_ms": t_par * 1e3,
+            "speedup": t_seq / t_par,
+            "workers": workers,
+            "workgroups": params.grid * params.grid_y,
+            "instrs": st1.instrs,
+        }
+    return out
+
+
+def aggregate_parallel(results: Dict) -> Dict[str, float]:
+    t_seq = sum(v["seq_ms"] for v in results.values())
+    t_par = sum(v["par_ms"] for v in results.values())
+    sp = [v["speedup"] for v in results.values()]
+    return {
+        "total_seq_ms": t_seq,
+        "total_par_ms": t_par,
+        "suite_speedup": t_seq / t_par,
+        "parallel_geomean_speedup": float(np.exp(np.mean(np.log(sp)))),
+        "min_speedup": min(sp),
+        "max_speedup": max(sp),
+    }
+
+
 def main(benches: Optional[List[str]] = None) -> Dict:
     results = run(benches=benches)
     agg = aggregate(results)
@@ -938,6 +1094,28 @@ def main_grid_mw(benches: Optional[List[str]] = None) -> Dict:
     return {"per_bench": results, "aggregate": agg}
 
 
+def main_parallel(benches: Optional[List[str]] = None) -> Dict:
+    results = run_parallel(benches=benches)
+    agg = aggregate_parallel(results)
+    print("# host-parallel grid dispatch — large-grid launches "
+          f"(workers={PARALLEL_WORKERS} vs sequential chunk walk)")
+    print("| bench | workgroups | seq ms | parallel ms | speedup |")
+    print("|---|---|---|---|---|")
+    for name, v in results.items():
+        print(f"| {name} | {v['workgroups']} | {v['seq_ms']:.1f} | "
+              f"{v['par_ms']:.1f} | {v['speedup']:.2f}x |")
+    print(f"\nparallel suite speedup vs sequential dispatch: "
+          f"{agg['suite_speedup']:.2f}x "
+          f"(geomean {agg['parallel_geomean_speedup']:.2f}x, "
+          f"min {agg['min_speedup']:.2f}x, max {agg['max_speedup']:.2f}x)")
+    for name, v in results.items():
+        print(f"interp_speed_parallel/{name},{v['par_ms'] * 1e3:.1f},"
+              f"speedup={v['speedup']:.3f}")
+    print(f"interp_speed_parallel/suite,{agg['total_par_ms'] * 1e3:.1f},"
+          f"speedup={agg['suite_speedup']:.3f}")
+    return {"per_bench": results, "aggregate": agg}
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     only: Optional[List[str]] = None
@@ -962,6 +1140,8 @@ if __name__ == "__main__":
         main_mem(benches=only)
     elif "--jax" in argv:
         main_jax(benches=only)
+    elif "--parallel" in argv:
+        main_parallel(benches=only)
     else:
         main(benches=only)
         main_batched(benches=only)
@@ -970,3 +1150,4 @@ if __name__ == "__main__":
         main_grid_mw()
         main_mem()
         main_jax()
+        main_parallel()

@@ -24,6 +24,10 @@ markdown tables above them).  Sections:
   interp_speed_jax : certified jax-codegen rung (whole-kernel XLA
                    compilation, tiered fast/exact executables) vs the
                    grid executor on every licensed bench
+  interp_speed_parallel : host-parallel grid dispatcher — decode-
+                   licensed grid chunks farmed across the worker pool
+                   vs the sequential chunk walk on large-grid launches,
+                   parity-gated bit-identical at every worker count
   bench_robust   : fault-isolation costs — transactional-snapshot
                    overhead on the clean path (<5% acceptance) and
                    degraded-mode throughput per executor rung
@@ -80,6 +84,9 @@ CHECKED_METRICS = [
     # amortize dispatch) — the headline claim for the codegen backend
     ("interp_speed_jax", "steady_geomean_speedup"),
     ("interp_speed_jax", "steady_suite_speedup"),
+    # host-parallel dispatch vs sequential chunk walk on the large-grid
+    # bench set — the PR 10 headline (acceptance floor 1.5x at 4 workers)
+    ("interp_speed_parallel", "parallel_geomean_speedup"),
     ("compile_time", "suite_speedup"),
     # clean/transactional wall-time ratio: a drop below the committed
     # value means the degradation chain's snapshot got more expensive
@@ -169,6 +176,7 @@ def main() -> None:
         ("interp_speed_grid_mw", interp_speed.main_grid_mw),
         ("interp_speed_mem", interp_speed.main_mem),
         ("interp_speed_jax", interp_speed.main_jax),
+        ("interp_speed_parallel", interp_speed.main_parallel),
         ("bench_robust", robustness.main),
         ("bench_serve", serve_bench.main),
         ("kernels", kernels_bench.main),
@@ -182,8 +190,8 @@ def main() -> None:
     perf_sections = {"interp_speed", "interp_speed_batched",
                      "interp_speed_ragged", "interp_speed_grid",
                      "interp_speed_grid_mw", "interp_speed_mem",
-                     "interp_speed_jax", "compile_time", "bench_robust",
-                     "bench_serve"}
+                     "interp_speed_jax", "interp_speed_parallel",
+                     "compile_time", "bench_robust", "bench_serve"}
     perf: dict = {}
     for name, fn in sections:
         if only == "perf":

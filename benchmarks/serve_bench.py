@@ -22,6 +22,16 @@ Reported (``bench_serve`` in BENCH_perf.json): per-kernel launches/sec
 for both modes, p50/p99 per-launch latency, and the CHECKED
 ``coalesce_speedup`` aggregate (wall-time ratio, small-launch streaming
 vs per-launch dispatch; acceptance floor 2x).
+
+A second table (``parallel_serve``) streams LARGE launches — grids big
+enough that the fused tenant batch spans several grid chunks — through
+three modes: solo, coalesced at ``workers=1``, and coalesced with the
+host-parallel dispatcher farming the fused chunks across the worker
+pool (``Runtime(workers=N)``).  The mechanisms compose: coalescing
+removes per-launch dispatch (its win lives in the small-launch regime
+above), parallel dispatch then multiplies the fused chunk walk itself
+— the table reports the parallel multiplier and the honest end-to-end
+ratio vs solo.
 """
 from __future__ import annotations
 
@@ -45,6 +55,14 @@ TENANTS = 8
 ROUNDS = 30
 REPS = 3
 
+#: large-launch streaming sub-section — tenants stream a grid big
+#: enough (several grid chunks once fused) that the parallel dispatcher
+#: engages on the coalesced walk
+PAR_TENANTS = 3
+PAR_ROUNDS = 4
+PAR_GRID = 256
+SERVE_PAR_WORKERS = 4
+
 
 def _mk_tenants(bench, n: int, seed: int = 7):
     out = []
@@ -55,14 +73,34 @@ def _mk_tenants(bench, n: int, seed: int = 7):
     return out
 
 
+def _mk_par_tenants(n: int, seed: int = 7):
+    """Large spmv_csr tenants sharing one CSR skeleton (coalescing
+    requires identical buffer signatures), per-tenant values/input."""
+    from repro.volt_bench.suite import _params, _ragged_csr
+    g = PAR_GRID
+    nrows = g * 32
+    skel = np.random.default_rng(5)
+    row_ptr, cols = _ragged_csr(skel, nrows)
+    out = []
+    for j in range(n):
+        rng = np.random.default_rng(seed + j)
+        bufs = {"row_ptr": row_ptr.copy(), "cols": cols.copy(),
+                "vals": rng.standard_normal(len(cols)).astype(np.float32),
+                "x": rng.standard_normal(nrows).astype(np.float32),
+                "y": np.zeros(nrows, np.float32)}
+        out.append((bufs, {"n": nrows}, _params(g)))
+    return out
+
+
 def _stats_sig(st: interp.ExecStats):
     return (st.instrs, dict(st.by_op), st.mem_requests, st.mem_insts,
             st.shared_requests, st.atomic_serial, st.max_ipdom_depth,
             st.prints)
 
 
-def _run_solo(fn, tenants, rounds: int) -> List[interp.ExecStats]:
-    rt = runtime.Runtime()
+def _run_solo(fn, tenants, rounds: int,
+              workers: int = 1) -> List[interp.ExecStats]:
+    rt = runtime.Runtime(workers=workers)
     stats = []
     for _ in range(rounds):
         for (bufs, scalars, params) in tenants:
@@ -73,9 +111,9 @@ def _run_solo(fn, tenants, rounds: int) -> List[interp.ExecStats]:
 
 
 def _run_coalesced(fn, tenants, rounds: int,
-                   lat_ms: Optional[List[float]] = None
-                   ) -> List[interp.ExecStats]:
-    rt = runtime.Runtime()
+                   lat_ms: Optional[List[float]] = None,
+                   workers: int = 1) -> List[interp.ExecStats]:
+    rt = runtime.Runtime(workers=workers)
     svc = runtime.LaunchService(rt)
     stats = []
     for _ in range(rounds):
@@ -179,6 +217,73 @@ def aggregate(results: Dict) -> Dict[str, float]:
     }
 
 
+def run_parallel_serve(workers: int = SERVE_PAR_WORKERS) -> Dict:
+    """Large-launch streaming through solo / coalesced / coalesced+
+    parallel dispatch — the multiplicative composition table.  Parity
+    gate first: all three modes bit-identical per tenant, and the
+    worker pool must actually engage in the parallel mode."""
+    from repro.core import parallel as par_mod
+    b = BENCHES["spmv_csr"]
+    ck = runtime.compile_kernel(b.handle, FULL)
+    rounds = PAR_ROUNDS
+
+    # ---- parity gate across all three modes ----------------------------
+    modes = {
+        "solo": lambda t: _run_solo(ck.fn, t, 2),
+        "co": lambda t: _run_coalesced(ck.fn, t, 2),
+        "co_par": lambda t: _run_coalesced(ck.fn, t, 2, workers=workers),
+    }
+    ref_t = ref_st = None
+    real_pool, pool_hits = par_mod.get_pool, []
+
+    def counting_pool(n, backend="thread"):
+        pool_hits.append((n, backend))
+        return real_pool(n, backend)
+
+    for label, runner in modes.items():
+        tenants = _mk_par_tenants(PAR_TENANTS)
+        try:
+            if label == "co_par":
+                par_mod.get_pool = counting_pool
+            st = runner(tenants)
+        finally:
+            par_mod.get_pool = real_pool
+        if ref_t is None:
+            ref_t, ref_st = tenants, st
+            continue
+        for j, ((sb, _, _), (cb, _, _)) in enumerate(zip(ref_t, tenants)):
+            for k in sb:
+                np.testing.assert_array_equal(
+                    sb[k], cb[k],
+                    err_msg=f"parallel_serve/{label}: tenant {j} "
+                            f"buffer {k} diverged")
+        for i, (a, c) in enumerate(zip(ref_st, st)):
+            assert _stats_sig(a) == _stats_sig(c), \
+                f"parallel_serve/{label}: launch {i} stats diverged"
+    assert pool_hits, "parallel dispatch never engaged on coalesced walk"
+
+    n_launches = PAR_TENANTS * rounds
+    t_solo = _best_of(
+        lambda: _run_solo(ck.fn, _mk_par_tenants(PAR_TENANTS), rounds))
+    t_co = _best_of(
+        lambda: _run_coalesced(ck.fn, _mk_par_tenants(PAR_TENANTS),
+                               rounds))
+    t_co_par = _best_of(
+        lambda: _run_coalesced(ck.fn, _mk_par_tenants(PAR_TENANTS),
+                               rounds, workers=workers))
+    return {
+        "bench": "spmv_csr", "workgroups": PAR_GRID,
+        "tenants": PAR_TENANTS, "launches": n_launches,
+        "workers": workers,
+        "solo_ms": t_solo * 1e3,
+        "coalesced_ms": t_co * 1e3,
+        "coalesced_parallel_ms": t_co_par * 1e3,
+        "coalesce_speedup": t_solo / t_co,
+        "parallel_multiplier": t_co / t_co_par,
+        "total_speedup": t_solo / t_co_par,
+    }
+
+
 def main(benches: Optional[List[str]] = None,
          rounds: int = ROUNDS) -> Dict:
     results = run(benches=benches, rounds=rounds)
@@ -195,7 +300,23 @@ def main(benches: Optional[List[str]] = None,
           f"{agg['launches_per_sec_solo']:,.0f} -> "
           f"{agg['launches_per_sec_coalesced']:,.0f} launches/sec "
           f"({agg['coalesce_speedup']:.2f}x)")
-    return {"results": results, "aggregate": agg}
+    par = run_parallel_serve()
+    print(f"\n# large-launch streaming — coalescing x parallel dispatch "
+          f"({par['bench']}, {par['tenants']} tenants x "
+          f"{par['workgroups']} wgs, workers={par['workers']})")
+    print("| mode | ms | vs solo |")
+    print("|---|---|---|")
+    print(f"| solo | {par['solo_ms']:.1f} | 1.00x |")
+    print(f"| coalesced | {par['coalesced_ms']:.1f} | "
+          f"{par['coalesce_speedup']:.2f}x |")
+    print(f"| coalesced+parallel | {par['coalesced_parallel_ms']:.1f} | "
+          f"{par['total_speedup']:.2f}x |")
+    print(f"\nparallel multiplier on the fused chunk walk: "
+          f"{par['parallel_multiplier']:.2f}x (composes with coalescing "
+          f"to {par['total_speedup']:.2f}x total)")
+    agg["serve_parallel_multiplier"] = par["parallel_multiplier"]
+    agg["serve_parallel_total_speedup"] = par["total_speedup"]
+    return {"results": results, "aggregate": agg, "parallel_serve": par}
 
 
 if __name__ == "__main__":

@@ -139,6 +139,18 @@ register_site("mem.alloc", "device-memory lazy allocation (shared tiles, "
 register_site("coalesce.exec", "cross-launch coalesced lockstep node "
               "walk — a hit aborts the GROUP (staging tables dropped, "
               "tenant buffers untouched) and every tenant reruns solo")
+# host-parallel chunk dispatcher (core/parallel.py + interp): a hit at
+# any of the three sites aborts the whole in-flight chunk set and the
+# launch demotes with bit-exact rollback, like any other engine fault --
+register_site("parallel.submit", "host-parallel dispatcher: per-chunk "
+              "submission to the worker pool (main thread, chunk order)")
+register_site("parallel.worker.exec", "host-parallel dispatcher: chunk "
+              "execution on a pool worker — the verdict is drawn on the "
+              "MAIN thread in chunk order (see faults.decide) and the "
+              "fault raised inside the worker, so injection stays "
+              "deterministic under any thread schedule")
+register_site("parallel.merge", "host-parallel dispatcher: deterministic "
+              "chunk-order merge of per-chunk stats/telemetry")
 # jax codegen rung (core/backends/jaxgen.py): licence + trace, chunked
 # jitted execution, certification-cache read — all scoped, so a faulted
 # jax launch demotes to the grid rung with buffers untouched ----------------
@@ -241,6 +253,48 @@ def maybe_fault(site: str) -> None:
             raise InjectedFault(
                 f"injected fault at site {site!r} (hit {inj.hits}, "
                 f"seed {inj.seed})", site=site, rung=_RUNG[-1])
+
+
+def decide(site: str) -> bool:
+    """Draw the injection verdict for ``site`` WITHOUT raising:
+    identical bookkeeping to ``maybe_fault`` (hits, ``after`` skip,
+    per-injection seeded RNG), but the verdict is returned so the
+    caller can carry it somewhere else before raising.  The parallel
+    dispatcher uses this to pre-draw ``parallel.worker.exec`` verdicts
+    on the MAIN thread in chunk order — drawing from worker threads
+    would make the shared RNG sequence depend on the thread schedule,
+    breaking seed-determinism."""
+    meta = SITES.get(site)
+    if meta is not None and meta["scoped"] and _RUNG[-1] not in DEMOTABLE:
+        return False
+    for inj in _INJECTIONS:
+        if not fnmatch.fnmatchcase(site, inj.pattern):
+            continue
+        inj.hits += 1
+        if inj.hits <= inj.after:
+            continue
+        if inj.prob >= 1.0 or inj.rng.random() < inj.prob:
+            inj.fired += 1
+            return True
+    return False
+
+
+def parallel_safe() -> bool:
+    """True when parallel chunk dispatch cannot perturb injection
+    determinism.  Sites that fire from inside worker threads
+    (``grid.exec``, the handler family, ``mem.alloc``, ...) draw from
+    the armed injections' shared RNGs in execution order; under a
+    thread schedule that order is not reproducible, so the dispatcher
+    falls back to exact sequential dispatch whenever any armed
+    injection could match a non-``parallel.*`` site.  The
+    ``parallel.*`` sites themselves stay safe at any worker count:
+    their verdicts are drawn on the main thread in chunk order."""
+    for inj in _INJECTIONS:
+        for site in SITES:
+            if (not site.startswith("parallel.")
+                    and fnmatch.fnmatchcase(site, inj.pattern)):
+                return False
+    return True
 
 
 @contextmanager

@@ -35,6 +35,7 @@ import numpy as np
 from . import faults as _faults
 from . import governor as _gov
 from . import interp_mem as _mem
+from . import parallel as _parallel
 from .passes.analysis import affine_mem_facts
 from .vir import (AddrSpace, BINOPS, Block, Const, Function, GlobalVar,
                   Instr, Module, Op, Param, Reg, Slot, Ty, UNOPS, Value)
@@ -452,6 +453,74 @@ class DeviceMemory:
                 self.globals_mem[ptr.name] = arr
             return arr, False
         raise ExecError(f"cannot resolve pointer {ptr!r}")
+
+
+class _SharedBudget:
+    """Cross-worker view of one launch's memory budget: per-chunk
+    scratch (shared tiles / tile tables) allocated by concurrent
+    workers charges ONE launch-wide ledger under a lock, so
+    ``VOLT_MEM_BUDGET`` bounds the true concurrent footprint rather
+    than each worker's private slice of it."""
+
+    __slots__ = ("limit", "used", "lock")
+
+    def __init__(self, limit: Optional[int], used0: int) -> None:
+        self.limit = limit
+        self.used = used0
+        self.lock = threading.Lock()
+
+    def charge(self, nbytes: int, what: str) -> None:
+        if self.limit is None:
+            return
+        with self.lock:
+            if self.used + nbytes > self.limit:
+                raise _faults.EngineFault(
+                    f"device memory budget exceeded allocating {what} "
+                    f"({self.used} + {nbytes} > {self.limit} bytes)",
+                    site="mem.alloc")
+            self.used += nbytes
+
+    def release(self, nbytes: int) -> None:
+        if self.limit is None:
+            return
+        with self.lock:
+            self.used -= nbytes
+
+
+class _WorkerMemory(DeviceMemory):
+    """One worker's DeviceMemory for a parallel grid chunk.
+
+    Shares the launch's buffers / globals / pool (safe: the
+    store-privacy licence keeps cell writes disjoint, non-shared
+    globals are pre-resolved on the main thread, and the pool carries
+    its own lock) but keeps a PRIVATE ``shared`` dict — each chunk gets
+    its own tile table, exactly like the sequential per-chunk
+    ``reset_shared()`` — and charges the launch-wide
+    :class:`_SharedBudget` instead of a per-instance counter."""
+
+    def __init__(self, base: DeviceMemory, budget: _SharedBudget) -> None:
+        super().__init__(base.buffers, base.globals_mem,
+                         budget=None, pool=base.pool)
+        self.shared_budget = budget
+
+    def _alloc(self, shape, elem_ty, what: str) -> np.ndarray:
+        if _faults.ACTIVE:
+            _faults.maybe_fault("mem.alloc")
+        dtype = _TY_DTYPE[elem_ty]
+        self.shared_budget.charge(
+            int(np.prod(shape)) * np.dtype(dtype).itemsize, what)
+        if self.pool is not None:
+            return self.pool.take(shape, dtype, zero=True)
+        return np.zeros(shape, dtype=dtype)
+
+    def reset_shared(self) -> None:
+        if self.shared:
+            self.shared_budget.release(
+                sum(a.nbytes for a in self.shared.values()))
+            if self.pool is not None:
+                for a in self.shared.values():
+                    self.pool.release(a)
+            self.shared = {}
 
 
 # --------------------------------------------------------------------------
@@ -1027,6 +1096,28 @@ class _Stripe:
             if v:                  # solo Counters never hold zeros
                 s.by_op[opv] = v
         return s
+
+    def merge(self, o: "_Stripe") -> None:
+        """Fold a chunk-private stripe in (parallel coalesced dispatch;
+        called on the main thread in chunk order).  Sums mirror the
+        sequential accumulation on one stripe; ``depth`` is a running
+        per-tenant max.  Re-checks the per-tenant fuel budgets after
+        folding — a chunk-private stripe only sees its own usage, so
+        the cumulative early-abort check moves to the merge."""
+        self.instrs += o.instrs
+        self.mem_requests += o.mem_requests
+        self.mem_insts += o.mem_insts
+        self.shared_requests += o.shared_requests
+        self.fuel_used += o.fuel_used
+        np.maximum(self.depth, o.depth, out=self.depth)
+        for opv, vec in o.by_op.items():
+            mine = self.by_op.get(opv)
+            if mine is None:
+                self.by_op[opv] = vec.copy()
+            else:
+                mine += vec
+        if (self.fuel_used > self.fuel_budget).any():
+            raise _CoalesceAbort("per-tenant fuel budget exhausted")
 
 
 class _DBlock:
@@ -3205,6 +3296,17 @@ def _run_wg_batched(bprog: "_BProgram", bst: _DState,
 
 _GRID_BATCH_MAX = 64
 
+#: parallel-dispatch chunk widening cap, in batch ROWS (warps).  With
+#: VOLT_WORKERS > 1 the dispatcher widens chunks to
+#: ``_GRID_BATCH_MAX * workers`` rows (bounded here) before farming
+#: them out: on a licensed launch chunk width is semantics-invisible
+#: (tests/test_grid_metamorphic.py::test_chunk_size_invariance), and a
+#: wider chunk pays the per-node Python dispatch of the lockstep walk
+#: over fewer walks — the dominant term of the parallel win on hosts
+#: where numpy's GIL-released regions are short.  Bounded so one chunk
+#: never balloons per-chunk scratch past what the governor budgeted.
+_GRID_PAR_ROWS_MAX = 512
+
 
 def _grid_batchable(fn: Function, argmap: Dict[int, Any],
                     globals_mem: Optional[Dict[str, np.ndarray]] = None
@@ -3455,6 +3557,18 @@ class _GridTelemetry:
 
 GRID_TELEMETRY = _GridTelemetry()
 
+#: thread-local redirect for the grid telemetry: parallel worker tasks
+#: install a PRIVATE _GridTelemetry here (core/parallel.py dispatch in
+#: launch) which the main thread folds into GRID_TELEMETRY in chunk
+#: order after the join — the process-global counters stay
+#: deterministic at every worker count and pool backend
+_TEL_TLS = threading.local()
+
+
+def _tel() -> _GridTelemetry:
+    t = getattr(_TEL_TLS, "tel", None)
+    return GRID_TELEMETRY if t is None else t
+
 
 def _drive_wg(bprog: "_BProgram", gens: List[Any], rows: Sequence[int],
               wg: Tuple[int, int], park: bool
@@ -3582,7 +3696,7 @@ def _drain_grid(bprog: "_BProgram", bst: _DState, bi: int, ni: int,
     wg_rows = bprog.wg_rows
     n_rows = bprog.n_warps
     n_wgs = n_rows // wg_rows
-    GRID_TELEMETRY.desyncs += 1
+    _tel().desyncs += 1
     wstates = [_slice_state(bst, r, bst.warp_ctxs[r], wg_rows)
                for r in range(n_rows)]
     gens = [_resume_decoded(bprog, wstates[r], bi, ni)
@@ -3613,7 +3727,7 @@ def _drain_grid(bprog: "_BProgram", bst: _DState, bi: int, ni: int,
                       range(g * wg_rows, (g + 1) * wg_rows),
                       wg_ids[g], False)
         return None
-    GRID_TELEMETRY.remerges += 1
+    _tel().remerges += 1
     pbi, pni = next(iter(locs))
     return merged, pbi, pni
 
@@ -3722,7 +3836,7 @@ def _compact_grid(bprog: "_BProgram", bst: _DState, bi: int,
     n_rows = bprog.n_warps
     n_wgs = n_rows // wg_rows
     live_wg = bst.act_rows.reshape(n_wgs, wg_rows).any(axis=1)
-    GRID_TELEMETRY.compactions += 1
+    _tel().compactions += 1
     dead_gs = [g for g in range(n_wgs) if not live_wg[g]]
     live_gs = [g for g in range(n_wgs) if live_wg[g]]
     _split_batch(bprog, bst, wg_ids, dead_gs, bi, runahead)
@@ -3740,7 +3854,7 @@ def _run_grid_batched(bprog: "_BProgram", bst: _DState,
     (``runahead`` = private_stores for 1-D launches, private_stores_2d
     for 2-D, picked in launch()).  At loop back-edges, mostly-empty
     such batches compact their live rows into a dense sub-batch."""
-    GRID_TELEMETRY.batches += 1
+    _tel().batches += 1
     n_rows = bprog.n_warps
     n_wgs = n_rows // bprog.wg_rows
     compact_ok = (runahead and n_wgs >= _COMPACT_MIN_WGS
@@ -3926,13 +4040,23 @@ def launch_coalesced(module_fn: Function,
                                              Dict[str, Any],
                                              LaunchParams]],
                      *, pool: Optional[DevicePool] = None,
-                     mem_budget: Optional[int] = None
+                     mem_budget: Optional[int] = None,
+                     workers: Optional[object] = None
                      ) -> List[ExecStats]:
     """Execute several pending launches of ONE kernel as shared grid
     chunks.  ``tenants`` is a sequence of ``(buffers, scalar_args,
     params)`` triples; returns one ``ExecStats`` per tenant, de-mixed
     to be bit-identical to running each launch alone (the conformance
     sweep in tests/test_launch_service.py proves it per kernel).
+
+    ``workers`` composes host-parallel chunk dispatch with coalescing
+    (multiplicative: fewer lockstep walks per launch x fewer launches
+    per walk).  Parallel mode needs the store-privacy licence on top of
+    order-freedom — concurrent chunks write disjoint staging-table
+    cells — and otherwise falls back to this exact sequential drain.
+    Any worker failure aborts the whole group exactly like a sequential
+    failure would (same ``_CoalesceAbort`` funnel, solo regains
+    authority).
 
     Transactional group-abort model: tenants run against stacked
     STAGING tables (one row per tenant, pooled), so any condition the
@@ -3945,6 +4069,8 @@ def launch_coalesced(module_fn: Function,
     fully successful group writes back."""
     fn = module_fn
     k = len(tenants)
+    par_n = _parallel.resolve_workers(workers)
+    par_backend = _parallel.resolve_backend() if par_n > 1 else "thread"
     p0 = tenants[0][2]
     W = p0.warp_size
     n_warps = p0.warps_per_wg
@@ -4100,65 +4226,193 @@ def launch_coalesced(module_fn: Function,
             c0 += pw
             rem -= pw
 
+        # full-batch intrinsic templates, hoisted exactly like the solo
+        # grid path: built once over all tenants' workgroups, each
+        # chunk slices contiguous row views (slices at workgroup
+        # boundaries reproduce the historical per-chunk builds bit for
+        # bit)
+        rows_tot = total_wgs * n_warps
+        row_tenant_all = np.repeat(wg_tenant, n_warps)
+        gx_rep_all = np.repeat(wg_gx, n_warps)
+        co_intr: Dict[Tuple[str, int], np.ndarray] = {
+            ("group_id", 0): np.broadcast_to(
+                gx_rep_all.astype(np.int32)[:, None],
+                (rows_tot, W)).copy(),
+            ("group_id", 1): np.zeros((rows_tot, W), np.int32),
+            ("core_id", 0): np.broadcast_to(
+                (gx_rep_all % 4).astype(np.int32)[:, None],
+                (rows_tot, W)).copy(),
+            ("global_id", 0): (
+                wg_gx[:, None, None] * p0.local_size
+                + lx_stack[None]).reshape(rows_tot, W).astype(np.int32),
+            ("global_id", 1): np.zeros((rows_tot, W), np.int32),
+        }
+        if not grid_uni:
+            gv = gridv[row_tenant_all]
+            co_intr[("num_groups", 0)] = np.broadcast_to(
+                gv.astype(np.int32)[:, None], (rows_tot, W)).copy()
+            co_intr[("grid_dim", 0)] = co_intr[("num_groups", 0)]
+            co_intr[("global_size", 0)] = np.broadcast_to(
+                (gv * p0.local_size).astype(np.int32)[:, None],
+                (rows_tot, W)).copy()
+        for key, stk in warp_2d.items():
+            co_intr[key] = np.tile(stk, (total_wgs, 1))
+        am_all = argmap
+        if per_scal:
+            am_all = dict(argmap)
+            for pid, vals in per_scal:
+                am_all[pid] = np.broadcast_to(
+                    vals[row_tenant_all][:, None], (rows_tot, W)).copy()
+
+        def _exec_cochunk(c0: int, nc: int, gprog, cmem: DeviceMemory,
+                          cstats: ExecStats, cfuel: List[int],
+                          cstripe: _Stripe) -> None:
+            rows = nc * n_warps
+            r0 = c0 * n_warps
+            gintr = dict(chunk_base)
+            for key, arr in co_intr.items():
+                gintr[key] = arr[r0:r0 + rows]
+            am = am_all
+            if per_scal:
+                am = dict(am_all)
+                for pid, _vals in per_scal:
+                    am[pid] = am_all[pid][r0:r0 + rows]
+            gctx = _WarpCtx(W, gintr, False, affine_ok, affine_span)
+            cmem.reset_shared()
+            cmem.grid_wgs = nc
+            gst = _DState(gprog, am,
+                          np.tile(wact_stack, (nc, 1)), gctx, cmem,
+                          cstats, cfuel)
+            cmem.grid_wgs = None
+            gst.stripe = cstripe
+            cstripe.begin_chunk(row_tenant_all[r0:r0 + rows],
+                                gst.act_rows)
+            _run_coalesced(gprog, gst)
+
+        def _parallel_coalesced() -> bool:
+            """Concurrent coalesced chunks: each worker runs against a
+            private ``_WorkerMemory`` / ``_Stripe`` / fuel box, merged
+            on the main thread in chunk order via ``_Stripe.merge``.
+            True = completed.  False = the group runs the sequential
+            drain (licence missing, injection armed, or nothing to
+            overlap).  Worker failures re-raise into the surrounding
+            ``_CoalesceAbort`` funnel — identical abort authority to a
+            sequential failure."""
+            if _faults.ACTIVE and not _faults.parallel_safe():
+                return False
+            wide = max(wg_chunk,
+                       min(wg_chunk * par_n,
+                           max(1, _GRID_PAR_ROWS_MAX // n_warps)))
+            pspans: List[Tuple[int, int]] = []
+            pc = 0
+            while total_wgs - pc >= wide:
+                pspans.append((pc, wide))
+                pc += wide
+            prem = total_wgs - pc
+            ppw = wg_chunk
+            while prem:
+                while ppw > prem:
+                    ppw //= 2
+                pspans.append((pc, ppw))
+                pc += ppw
+                prem -= ppw
+            if len(pspans) < 2:
+                return False
+            plans: Dict[int, Any] = {}
+            for _, nc in pspans:
+                if nc not in plans:
+                    gp = _decode_batched(fn, W, False, nc * n_warps,
+                                         grid_mode=True,
+                                         ride_along=True,
+                                         wg_rows=n_warps,
+                                         coalesced=True)
+                    if not (gp.order_free and gp.private_stores):
+                        # concurrent chunks need store privacy on top
+                        # of order-freedom: disjoint staging-table
+                        # cells per row, no cross-chunk ordering to
+                        # replay
+                        return False
+                    plans[nc] = gp
+            for v in _kernel_globals(fn):
+                if v.space is not AddrSpace.SHARED:
+                    mem.resolve(v, argmap)
+            fuel0 = fuel[0]
+            sbudget = _SharedBudget(mem.budget, mem.allocated)
+            flagged: List[bool] = []
+            for _ in pspans:
+                if _faults.ACTIVE:
+                    _faults.maybe_fault("parallel.submit")
+                    flagged.append(
+                        _faults.decide("parallel.worker.exec"))
+                else:
+                    flagged.append(False)
+
+            def _mk_task(ci: int, c0: int, nc: int):
+                gprog = plans[nc]
+                inj = flagged[ci]
+
+                def _task():
+                    wmem = _WorkerMemory(mem, sbudget)
+                    cstats = ExecStats()
+                    cfuel = [fuel0]
+                    cstripe = _Stripe(k, budgets)
+                    try:
+                        if inj:
+                            raise _faults.InjectedFault(
+                                f"injected fault at site "
+                                f"'parallel.worker.exec' (chunk {ci})",
+                                site="parallel.worker.exec",
+                                rung="grid")
+                        with np.errstate(divide="ignore",
+                                         invalid="ignore",
+                                         over="ignore"):
+                            _exec_cochunk(c0, nc, gprog, wmem,
+                                          cstats, cfuel, cstripe)
+                        cstripe.flush()
+                        return cstripe, fuel0 - cfuel[0]
+                    finally:
+                        wmem.reset_shared()
+                return _task
+
+            wpool = _parallel.get_pool(par_n, par_backend)
+            res = wpool.run([_mk_task(ci, c0, nc)
+                             for ci, (c0, nc) in enumerate(pspans)])
+            err = next((r for r in res
+                        if isinstance(r, _parallel.TaskError)), None)
+            if err is not None:
+                raise err.error
+            if _faults.ACTIVE:
+                _faults.maybe_fault("parallel.merge")
+            used = [r[1] for r in res]
+            for cstripe, _ in res:
+                stripe.merge(cstripe)
+            if sum(used) > fuel0:
+                raise _CoalesceAbort("summed fuel backstop exhausted")
+            fuel[0] = fuel0 - sum(used)
+            return True
+
         with np.errstate(divide="ignore", invalid="ignore",
                          over="ignore"):
-            for (c0, nc) in spans:
-                gprog = _decode_batched(fn, W, False, nc * n_warps,
-                                        grid_mode=True, ride_along=True,
-                                        wg_rows=n_warps, coalesced=True)
-                if not gprog.order_free:
-                    # hazard stores decode to desync nodes (which abort
-                    # at run time anyway) — refuse up front.  order_free
-                    # suffices: the coalesced driver replays the solo
-                    # grid batcher's row-major lockstep order exactly,
-                    # and each tenant's rows only touch its own table
-                    # row, so single-site last-wins scatters reproduce
-                    # the per-tenant solo result
-                    raise _CoalesceAbort(
-                        f"@{fn.name}: not order-free at this shape")
-                rows = nc * n_warps
-                wsel = slice(c0, c0 + nc)
-                gxs = wg_gx[wsel]
-                row_tenant = np.repeat(wg_tenant[wsel], n_warps)
-                gx_rep = np.repeat(gxs, n_warps)
-                gintr = dict(chunk_base)
-                gintr[("group_id", 0)] = np.broadcast_to(
-                    gx_rep.astype(np.int32)[:, None], (rows, W)).copy()
-                gintr[("group_id", 1)] = np.zeros((rows, W), np.int32)
-                gintr[("core_id", 0)] = np.broadcast_to(
-                    (gx_rep % 4).astype(np.int32)[:, None],
-                    (rows, W)).copy()
-                gintr[("global_id", 0)] = (
-                    gxs[:, None, None] * p0.local_size
-                    + lx_stack[None]).reshape(rows, W).astype(np.int32)
-                gintr[("global_id", 1)] = np.zeros((rows, W), np.int32)
-                if not grid_uni:
-                    gv = gridv[row_tenant]
-                    gintr[("num_groups", 0)] = np.broadcast_to(
-                        gv.astype(np.int32)[:, None], (rows, W)).copy()
-                    gintr[("grid_dim", 0)] = gintr[("num_groups", 0)]
-                    gintr[("global_size", 0)] = np.broadcast_to(
-                        (gv * p0.local_size).astype(np.int32)[:, None],
-                        (rows, W)).copy()
-                for key, stk in warp_2d.items():
-                    gintr[key] = np.tile(stk, (nc, 1))
-                am = argmap
-                if per_scal:
-                    am = dict(argmap)
-                    for pid, vals in per_scal:
-                        am[pid] = np.broadcast_to(
-                            vals[row_tenant][:, None],
-                            (rows, W)).copy()
-                gctx = _WarpCtx(W, gintr, False, affine_ok, affine_span)
-                mem.reset_shared()
-                mem.grid_wgs = nc
-                gst = _DState(gprog, am,
-                              np.tile(wact_stack, (nc, 1)), gctx, mem,
-                              stats, fuel)
-                mem.grid_wgs = None
-                gst.stripe = stripe
-                stripe.begin_chunk(row_tenant, gst.act_rows)
-                _run_coalesced(gprog, gst)
+            if not (par_n > 1 and _parallel_coalesced()):
+                for (c0, nc) in spans:
+                    gprog = _decode_batched(fn, W, False, nc * n_warps,
+                                            grid_mode=True,
+                                            ride_along=True,
+                                            wg_rows=n_warps,
+                                            coalesced=True)
+                    if not gprog.order_free:
+                        # hazard stores decode to desync nodes (which
+                        # abort at run time anyway) — refuse up front.
+                        # order_free suffices: the coalesced driver
+                        # replays the solo grid batcher's row-major
+                        # lockstep order exactly, and each tenant's
+                        # rows only touch its own table row, so
+                        # single-site last-wins scatters reproduce the
+                        # per-tenant solo result
+                        raise _CoalesceAbort(
+                            f"@{fn.name}: not order-free at this shape")
+                    _exec_cochunk(c0, nc, gprog, mem, stats, fuel,
+                                  stripe)
         stripe.flush()
         # full group success: write back the written params per tenant
         for name in writes:
@@ -4183,6 +4437,37 @@ def launch_coalesced(module_fn: Function,
                 pool.release(t)
 
 
+def _kernel_globals(fn: Function) -> List[GlobalVar]:
+    """Every GlobalVar referenced anywhere in ``fn``'s call tree, in
+    deterministic first-appearance order (cached per IR version).  The
+    parallel dispatcher pre-resolves the non-shared ones on the main
+    thread: the lazy zero-fill in ``DeviceMemory.resolve`` is a
+    check-then-insert on the launch-shared ``globals_mem`` dict, which
+    two workers must never race (the loser's array would swallow
+    writes); the cell writes themselves are licence-disjoint."""
+    cached = getattr(fn, "_kernel_globals", None)
+    if cached is not None and cached[0] == fn.ir_version:
+        return cached[1]
+    out: Dict[int, GlobalVar] = {}
+    seen: set = set()
+
+    def walk(f: Function) -> None:
+        if id(f) in seen:
+            return
+        seen.add(id(f))
+        for i in f.instructions():
+            for v in i.operands:
+                if isinstance(v, GlobalVar):
+                    out.setdefault(id(v), v)
+            if i.op is Op.CALL:
+                walk(i.operands[0])
+
+    walk(fn)
+    res = list(out.values())
+    fn._kernel_globals = (fn.ir_version, res)  # type: ignore[attr-defined]
+    return res
+
+
 # --------------------------------------------------------------------------
 # Kernel launch (grid scheduling = the thread-schedule code VOLT's
 # front-end inserts; here it lives in the host runtime)
@@ -4199,9 +4484,24 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
            deadline_t: Optional[float] = None,
            deadline_ms: Optional[float] = None,
            mem_budget: Optional[int] = None,
-           pool: Optional[DevicePool] = None) -> ExecStats:
+           pool: Optional[DevicePool] = None,
+           workers: Optional[object] = None) -> ExecStats:
     """Execute a compiled kernel over the launch grid; returns stats.
     Buffers are mutated in place (device memory semantics).
+
+    ``workers`` (default: the ``VOLT_WORKERS`` knob; ``1`` = exact
+    sequential dispatch) engages the host-parallel grid dispatcher on
+    store-privacy-licensed grid launches: mutually independent chunks
+    widen to ``_GRID_PAR_ROWS_MAX`` rows and run concurrently on the
+    persistent ``core/parallel.py`` pool, per-chunk ExecStats /
+    telemetry / fuel merging back deterministically in chunk order, so
+    results are bit-identical to sequential dispatch at every worker
+    count.  Unlicensed launches keep the exact sequential wg-order
+    drain.  A worker EngineFault / deadline surfaces exactly like its
+    sequential counterpart (the runtime chain demotes with rollback);
+    any other worker failure falls back to a full sequential pass,
+    which reproduces the exact sequential error (chunk writes are
+    idempotent under the licence).
 
     ``decoded=True`` (default) runs the pre-decoded table-driven executor;
     ``decoded=False`` keeps the original instruction-at-a-time loop — the
@@ -4247,6 +4547,11 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
     allocation (overruns are ``EngineFault``s at site "mem.alloc")."""
     fn = module_fn
     LAST_EXECUTOR[0] = None
+    # resolve the parallel-dispatch config BEFORE entering the demotable
+    # region: a malformed VOLT_WORKERS is a caller error that must
+    # surface as-is, not an engine fault to demote on
+    par_n = _parallel.resolve_workers(workers)
+    par_backend = _parallel.resolve_backend() if par_n > 1 else "thread"
     depth = _faults.rung_depth()
     stats = ExecStats()
     governed = deadline_t is not None or deadline_ms is not None
@@ -4259,7 +4564,8 @@ def launch(module_fn: Function, buffers: Dict[str, np.ndarray],
                             globals_mem, stats=stats, decoded=decoded,
                             batched=batched, ride_along=ride_along,
                             grid=grid, jax=jax, mem_budget=mem_budget,
-                            pool=pool)
+                            pool=pool, workers=par_n,
+                            par_backend=par_backend)
     except ExecError as e:
         raise _add_ctx(e, kernel=fn.name)
     except _faults.KernelFault:
@@ -4289,7 +4595,9 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
                  grid: Optional[bool] = None,
                  jax: Optional[Any] = None,
                  mem_budget: Optional[int] = None,
-                 pool: Optional[DevicePool] = None) -> ExecStats:
+                 pool: Optional[DevicePool] = None,
+                 workers: int = 1,
+                 par_backend: str = "thread") -> ExecStats:
     fn = module_fn
     scalar_args = scalar_args or {}
     mem = DeviceMemory(buffers, globals_mem, budget=mem_budget, pool=pool)
@@ -4331,7 +4639,8 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
             _launch_impl(fn, buffers, params, scalar_args, globals_mem,
                          stats=st, decoded=decoded, batched=batched,
                          ride_along=ride_along, grid=grid, jax=None,
-                         mem_budget=mem_budget, pool=pool)
+                         mem_budget=mem_budget, pool=pool,
+                         workers=workers, par_backend=par_backend)
 
         if _jaxgen.orchestrate(fn, buffers, params, scalar_args, mem,
                                argmap, stats,
@@ -4454,7 +4763,187 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
         # chains keep the licence on 2-D grids too
         # (``private_stores_2d``)
         shape_1d = params.grid_y == 1 and params.local_size_y == 1
+
+        # full-grid intrinsic templates: built ONCE per launch, each
+        # chunk slices a contiguous row view — the per-chunk broadcast
+        # + dict rebuild was the remaining PR 5 --profile hot spot, and
+        # parallel dispatch would multiply it by the chunk count.
+        # int64 products truncated to int32 match the historical int32
+        # arithmetic bit-for-bit (two's-complement wrap)
+        ks_all = np.arange(n_wg, dtype=np.int64)
+        gxs_all = ks_all % params.grid
+        gys_all = ks_all // params.grid
+        rows_all = n_wg * n_warps
+        gx_rep_all = np.repeat(gxs_all, n_warps)
+        gy_rep_all = np.repeat(gys_all, n_warps)
+        grid_intr: Dict[Tuple[str, int], np.ndarray] = {
+            ("group_id", 0): np.broadcast_to(
+                gx_rep_all.astype(np.int32)[:, None],
+                (rows_all, W)).copy(),
+            ("group_id", 1): np.broadcast_to(
+                gy_rep_all.astype(np.int32)[:, None],
+                (rows_all, W)).copy(),
+            ("core_id", 0): np.broadcast_to(
+                (gx_rep_all % 4).astype(np.int32)[:, None],
+                (rows_all, W)).copy(),
+            ("global_id", 0): (
+                gxs_all[:, None, None] * params.local_size
+                + lx_stack[None]).reshape(rows_all, W).astype(np.int32),
+            ("global_id", 1): (
+                gys_all[:, None, None] * params.local_size_y
+                + ly_stack[None]).reshape(rows_all, W).astype(np.int32),
+        }
+        for key, stk in warp_2d.items():
+            # period-n_warps tiling: any slice starting at a workgroup
+            # boundary reproduces the per-chunk np.tile exactly
+            grid_intr[key] = np.tile(stk, (n_wg, 1))
+
+        def _exec_chunk(c0: int, nc: int, gprog: "_BProgram",
+                        runahead: bool, cmem: DeviceMemory,
+                        cstats: ExecStats, cfuel: List[int]) -> None:
+            rows = nc * n_warps
+            r0 = c0 * n_warps
+            gintr = dict(chunk_base)
+            for key, arr in grid_intr.items():
+                gintr[key] = arr[r0:r0 + rows]
+            chunk_ids = list(zip(gxs_all[c0:c0 + nc].tolist(),
+                                 gys_all[c0:c0 + nc].tolist()))
+            gctx = _WarpCtx(W, gintr, params.strict_oob_loads,
+                            affine_ok, affine_span)
+            cmem.reset_shared()    # fresh private tile table per
+            cmem.grid_wgs = nc     # chunk: (nc, size) shared arrays
+            gst = _DState(gprog, argmap, np.tile(wact_stack, (nc, 1)),
+                          gctx, cmem, cstats, cfuel)
+            cmem.grid_wgs = None
+            gst.warp_ctxs = _LazyRowCtxs(
+                rows, lambda r, c0=c0: _mk_row_ctx(r, c0))
+            try:
+                _run_grid_batched(gprog, gst, chunk_ids,
+                                  runahead=runahead)
+            except ExecError as e:
+                # lockstep-phase errors span the chunk; desync-phase
+                # errors already carry their exact workgroup (the
+                # innermost annotation wins)
+                raise _add_ctx(
+                    e, workgroup=f"{chunk_ids[0]}..{chunk_ids[-1]}")
+
+        def _parallel_grid() -> bool:
+            """Host-parallel dispatch attempt (core/parallel.py):
+            store-privacy-licensed chunks widen to _GRID_PAR_ROWS_MAX
+            rows and run concurrently, each against a private
+            _WorkerMemory / ExecStats / fuel box / telemetry, merged on
+            the main thread in chunk order.  True = completed (results
+            bit-identical to sequential dispatch — chunk width is
+            semantics-invisible under the licence, proven by the
+            chunk-size-invariance metamorphic suite).  False = run the
+            exact sequential loop instead; nothing observable happened
+            (chunk state was private; any partial buffer writes are
+            rewritten idempotently — the licence makes each cell's
+            writer unique and deterministic).  A worker EngineFault or
+            DeadlineExceeded re-raises: the runtime chain demotes /
+            surfaces it with bit-exact rollback, like any sequential
+            engine fault."""
+            if _faults.ACTIVE and not _faults.parallel_safe():
+                return False       # injection order must stay exact
+            wide = max(wg_chunk,
+                       min(wg_chunk * workers,
+                           max(1, _GRID_PAR_ROWS_MAX // n_warps)))
+            spans = [(c0, min(wide, n_wg - c0))
+                     for c0 in range(0, n_wg, wide)]
+            # pre-decode every distinct width on the main thread (warm
+            # plan cache; the licence is re-read from the widened plan)
+            plans: Dict[int, "_BProgram"] = {}
+            for _, nc in spans:
+                if nc not in plans:
+                    gp = _decode_batched(fn, W, params.strict_oob_loads,
+                                         nc * n_warps, grid_mode=True,
+                                         ride_along=ride_along,
+                                         wg_rows=n_warps)
+                    if not (gp.private_stores if shape_1d
+                            else gp.private_stores_2d):
+                        # unlicensed: keep the exact sequential
+                        # wg-order drain
+                        return False
+                    plans[nc] = gp
+            for v in _kernel_globals(fn):
+                if v.space is not AddrSpace.SHARED:
+                    mem.resolve(v, argmap)
+            fuel0 = fuel[0]
+            sbudget = _SharedBudget(mem.budget, mem.allocated)
+            flagged: List[bool] = []
+            for _ in spans:
+                if _faults.ACTIVE:
+                    _faults.maybe_fault("parallel.submit")
+                    flagged.append(
+                        _faults.decide("parallel.worker.exec"))
+                else:
+                    flagged.append(False)
+
+            def _mk_task(ci: int, c0: int, nc: int):
+                gprog = plans[nc]
+                inj = flagged[ci]
+
+                def _task():
+                    tel = _GridTelemetry()
+                    _TEL_TLS.tel = tel
+                    wmem = _WorkerMemory(mem, sbudget)
+                    cstats = ExecStats()
+                    cfuel = [fuel0]   # prefix-checked at the merge
+                    try:
+                        if inj:
+                            raise _faults.InjectedFault(
+                                f"injected fault at site "
+                                f"'parallel.worker.exec' (chunk {ci})",
+                                site="parallel.worker.exec",
+                                rung="grid")
+                        # np.errstate is thread-local: each worker
+                        # re-enters the launch's suppression scope
+                        with np.errstate(divide="ignore",
+                                         invalid="ignore",
+                                         over="ignore"):
+                            _exec_chunk(c0, nc, gprog, True, wmem,
+                                        cstats, cfuel)
+                        return cstats, fuel0 - cfuel[0], tel
+                    finally:
+                        _TEL_TLS.tel = None
+                        wmem.reset_shared()
+                return _task
+
+            wpool = _parallel.get_pool(workers, par_backend)
+            res = wpool.run([_mk_task(ci, c0, nc)
+                             for ci, (c0, nc) in enumerate(spans)])
+            err = next((r for r in res
+                        if isinstance(r, _parallel.TaskError)), None)
+            if err is not None:
+                # best-effort partial stats (the deadline error's
+                # governor arm carries the launch stats object)
+                for r in res:
+                    if type(r) is tuple:
+                        stats.merge(r[0])
+                if isinstance(err.error, (_faults.EngineFault,
+                                          _faults.DeadlineExceeded)):
+                    raise err.error
+                return False       # exact sequential rerun
+            if _faults.ACTIVE:
+                _faults.maybe_fault("parallel.merge")
+            used = [r[1] for r in res]
+            if sum(used) > fuel0:
+                # a cumulative budget no single chunk saw alone ran out
+                # mid-grid: the sequential rerun reproduces the exact
+                # out-of-fuel error, context and partial stats
+                return False
+            for cstats, _, tel in res:
+                stats.merge(cstats)
+                GRID_TELEMETRY.desyncs += tel.desyncs
+                GRID_TELEMETRY.remerges += tel.remerges
+                GRID_TELEMETRY.compactions += tel.compactions
+                GRID_TELEMETRY.batches += tel.batches
+            fuel[0] = fuel0 - sum(used)
+            return True
+
         with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+            if workers > 1 and n_wg > wg_chunk and _parallel_grid():
+                return stats
             for c0 in range(0, n_wg, wg_chunk):
                 if _faults.ACTIVE:
                     _faults.maybe_fault("chunk.dispatch")
@@ -4465,49 +4954,7 @@ def _launch_impl(module_fn: Function, buffers: Dict[str, np.ndarray],
                                         wg_rows=n_warps)
                 runahead = (gprog.private_stores if shape_1d
                             else gprog.private_stores_2d)
-                rows = nc * n_warps
-                ks = np.arange(nc, dtype=np.int64) + c0
-                gxs = ks % params.grid
-                gys = ks // params.grid
-                chunk_ids = list(zip(gxs.tolist(), gys.tolist()))
-                gx_rep = np.repeat(gxs, n_warps)       # (rows,)
-                gy_rep = np.repeat(gys, n_warps)
-                gintr = dict(chunk_base)
-                # int64 products truncated to int32 match the historical
-                # int32 arithmetic bit-for-bit (two's-complement wrap)
-                gintr[("group_id", 0)] = np.broadcast_to(
-                    gx_rep.astype(np.int32)[:, None], (rows, W)).copy()
-                gintr[("group_id", 1)] = np.broadcast_to(
-                    gy_rep.astype(np.int32)[:, None], (rows, W)).copy()
-                gintr[("core_id", 0)] = np.broadcast_to(
-                    (gx_rep % 4).astype(np.int32)[:, None],
-                    (rows, W)).copy()
-                gintr[("global_id", 0)] = (
-                    gxs[:, None, None] * params.local_size
-                    + lx_stack[None]).reshape(rows, W).astype(np.int32)
-                gintr[("global_id", 1)] = (
-                    gys[:, None, None] * params.local_size_y
-                    + ly_stack[None]).reshape(rows, W).astype(np.int32)
-                for key, stk in warp_2d.items():
-                    gintr[key] = np.tile(stk, (nc, 1))
-                gctx = _WarpCtx(W, gintr, params.strict_oob_loads,
-                                affine_ok, affine_span)
-                mem.reset_shared()     # fresh private tile table per
-                mem.grid_wgs = nc      # chunk: (nc, size) shared arrays
-                gst = _DState(gprog, argmap, np.tile(wact_stack, (nc, 1)),
-                              gctx, mem, stats, fuel)
-                mem.grid_wgs = None
-                gst.warp_ctxs = _LazyRowCtxs(
-                    rows, lambda r, c0=c0: _mk_row_ctx(r, c0))
-                try:
-                    _run_grid_batched(gprog, gst, chunk_ids,
-                                      runahead=runahead)
-                except ExecError as e:
-                    # lockstep-phase errors span the chunk; desync-phase
-                    # errors already carry their exact workgroup (the
-                    # innermost annotation wins)
-                    raise _add_ctx(
-                        e, workgroup=f"{chunk_ids[0]}..{chunk_ids[-1]}")
+                _exec_chunk(c0, nc, gprog, runahead, mem, stats, fuel)
         return stats
 
     for wg_lin in range(n_wg):

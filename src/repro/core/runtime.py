@@ -41,6 +41,7 @@ import numpy as np
 from . import faults as _faults
 from . import governor as _gov
 from . import interp as _interp
+from . import parallel as _parallel
 from .faults import DeadlineExceeded, EngineBusy, EngineFault, KernelFault
 from .interp import ExecError, ExecStats, LaunchParams, \
     launch as interp_launch
@@ -608,9 +609,14 @@ class Runtime:
                  degrade: bool = True,
                  transactional: bool = True,
                  govern: bool = True,
-                 governor: Optional[_gov.GovernorConfig] = None) -> None:
+                 governor: Optional[_gov.GovernorConfig] = None,
+                 workers: Optional[object] = None) -> None:
         self.warp_size = warp_size
         self.batched = batched     # workgroup-batched lockstep executor
+        # host-parallel grid dispatch (core/parallel.py): resolved ONCE
+        # here so a malformed VOLT_WORKERS fails at construction, not
+        # mid-launch; 1 = today's exact sequential dispatch
+        self.workers = _parallel.resolve_workers(workers)
         # jax codegen rung: opt-in (jax=True or VOLT_JAX=1) — default
         # OFF so the numpy chain stays the reference behaviour
         self.jax = bool(jax) if jax is not None \
@@ -858,6 +864,7 @@ class Runtime:
                                       deadline_ms=deadline_ms,
                                       mem_budget=mem_budget,
                                       pool=self.pool,
+                                      workers=self.workers,
                                       **_RUNG_KWARGS[rung])
             except DeadlineExceeded as e:
                 used = _interp.LAST_EXECUTOR[0] or rung
@@ -1042,10 +1049,17 @@ class LaunchService:
     RETRY_EVERY = 8
 
     def __init__(self, runtime: Runtime, *, max_pending: int = 256,
-                 coalesce: bool = True) -> None:
+                 coalesce: bool = True,
+                 pressure: Optional[float] = 0.5) -> None:
         self.rt = runtime
         self.max_pending = max_pending
         self.coalesce = coalesce
+        #: latency-bounded flush: when the OLDEST queued launch has
+        #: burned this fraction of its deadline budget just waiting in
+        #: the queue, the next submit() drains everything — batching
+        #: must never turn a deadline miss into a queueing artifact.
+        #: None disables (explicit flush() only).
+        self.pressure = pressure
         self._lock = threading.Lock()      # queue admission
         self._flush_lock = threading.Lock()  # serializes drains
         self._pending: List[Tuple[Any, ...]] = []
@@ -1076,8 +1090,31 @@ class LaunchService:
                 grid, block)
             self._pending.append(
                 (kernel_fn, grid, block, buffers, scalar_args,
-                 deadline_ms, h))
-            return h
+                 deadline_ms, h, perf_counter()))
+            urgent = self._deadline_pressure()
+        if urgent:
+            # drain OUTSIDE the admission lock (flush() takes it to
+            # swap the queue; holding it here would deadlock)
+            self.telemetry["pressure_flushes"] += 1
+            self.flush()
+        return h
+
+    def _deadline_pressure(self) -> bool:
+        """True when any queued launch (the oldest first — entries are
+        in submission order) has burned more than ``self.pressure`` of
+        its deadline budget waiting (caller holds ``self._lock``)."""
+        if self.pressure is None or not self._pending:
+            return False
+        now = perf_counter()
+        default_dl = self.rt.gov_cfg.deadline_ms if self.rt.govern \
+            else None
+        for entry in self._pending:
+            dl = entry[5] if entry[5] is not None else default_dl
+            if dl is None:
+                continue
+            if (now - entry[7]) * 1e3 >= self.pressure * dl:
+                return True
+        return False
 
     def pending(self) -> int:
         with self._lock:
@@ -1103,7 +1140,7 @@ class LaunchService:
         return [entry[6] for entry in batch]
 
     def _group_key(self, entry: Tuple[Any, ...]) -> Tuple[Any, ...]:
-        fn, grid, block, buffers, _scal, _dl, _h = entry
+        fn, grid, block, buffers, _scal, _dl, _h, _t = entry
         sig = []
         for p in fn.params:
             if p.ty is not Ty.PTR:
@@ -1123,7 +1160,7 @@ class LaunchService:
                 and self._may_coalesce(key, fn)
                 and self._run_coalesced(key, fn, entries)):
             return
-        for (fn_, grid, block, bufs, scal, dl, h) in entries:
+        for (fn_, grid, block, bufs, scal, dl, h, _t) in entries:
             self._run_solo(fn_, grid, block, bufs, scal, dl, h)
 
     def _may_coalesce(self, key: Tuple[Any, ...], fn: Function) -> bool:
@@ -1156,7 +1193,7 @@ class LaunchService:
         # must run sequentially (the second reads the first's output);
         # staged write-back would make them last-wins instead
         arrs = [[a for a in bufs.values() if isinstance(a, np.ndarray)]
-                for (_f, _g, _b, bufs, _s, _d, _h) in entries]
+                for (_f, _g, _b, bufs, _s, _d, _h, _t) in entries]
         for i in range(len(arrs)):
             for j in range(i + 1, len(arrs)):
                 for a in arrs[i]:
@@ -1166,7 +1203,7 @@ class LaunchService:
                             return False
         triples = []
         deadlines = []
-        for (_f, grid, block, bufs, scal, dl, _h) in entries:
+        for (_f, grid, block, bufs, scal, dl, _h, _t) in entries:
             triples.append((bufs, scal, LaunchParams(
                 grid=grid, local_size=block,
                 warp_size=rt.warp_size)))
@@ -1188,7 +1225,8 @@ class LaunchService:
                 armed = True
             with _faults.rung("grid"):
                 stats = _interp.launch_coalesced(
-                    fn, triples, pool=rt.pool, mem_budget=mem_budget)
+                    fn, triples, pool=rt.pool, mem_budget=mem_budget,
+                    workers=rt.workers)
         except _interp._CoalesceAbort as e:
             self._aborts[key] = self._aborts.get(key, 0) + 1
             self._cooldown[key] = self.RETRY_EVERY
@@ -1206,7 +1244,7 @@ class LaunchService:
         self.telemetry["coalesced_launches"] += len(entries)
         _tel("coalesced_groups")
         _tel("coalesced_launches", len(entries))
-        for (_f, _g, _b, _bufs, _s, _d, h), st in zip(entries, stats):
+        for (_f, _g, _b, _bufs, _s, _d, h, _t), st in zip(entries, stats):
             report = LaunchReport(kernel=fn.name)
             report.executor = "grid"
             report.wall_ms = wall_ms    # group wall: shared chunks

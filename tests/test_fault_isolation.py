@@ -419,6 +419,128 @@ def test_jax_rung_skipped_entirely_when_disabled():
 
 
 # --------------------------------------------------------------------------
+# parallel dispatch sites (core/parallel.py): the matrix above runs them
+# at the default worker count, where small conformance grids never widen
+# past one chunk and the sites stay dead code — exactly the workers=1
+# contract.  Here large licensed grids at VOLT_WORKERS=4 force every
+# site to FIRE, and the chain must demote with bit-exact rollback.
+# --------------------------------------------------------------------------
+
+_PAR_SITES = ("parallel.submit", "parallel.worker.exec", "parallel.merge")
+_PAR_ORACLE = {}
+
+
+def _par_case(bench: str):
+    """Large-grid licensed launches (store-private stores, several
+    widened chunks at 4 workers)."""
+    from repro.core.passes.pipeline import ABLATION_LADDER, run_pipeline
+    from repro.volt_bench import BENCHES
+    from repro.volt_bench.suite import _params, _ragged_csr
+    rng = np.random.default_rng(3)
+    g = 96
+    if bench == "spmv_csr":
+        n = g * 32
+        row_ptr, cols = _ragged_csr(rng, n)
+        bufs = {"row_ptr": row_ptr, "cols": cols,
+                "vals": rng.standard_normal(len(cols)).astype(np.float32),
+                "x": rng.standard_normal(n).astype(np.float32),
+                "y": np.zeros(n, np.float32)}
+        sc = {"n": n}
+    else:
+        bufs = {"x": rng.standard_normal(g * 32).astype(np.float32),
+                "out": np.zeros(g, np.float32)}
+        sc = {"n": g * 32 - 13}
+    handle = BENCHES[bench].handle
+    fn = run_pipeline(handle.build(None), handle.name,
+                      ABLATION_LADDER[-1]).fn
+    return fn, bufs, sc, _params(g)
+
+
+def _par_oracle(bench: str):
+    if bench not in _PAR_ORACLE:
+        fn, bufs0, sc, params = _par_case(bench)
+        bufs = {k: v.copy() for k, v in bufs0.items()}
+        st = interp.launch(fn, bufs, params, scalar_args=sc,
+                           decoded=False)
+        _PAR_ORACLE[bench] = (conf._stats_tuple(st), bufs)
+    return _PAR_ORACLE[bench]
+
+
+def _par_rt_launch(bench: str, **rt_kw):
+    fn, bufs0, sc, params = _par_case(bench)
+    rt = Runtime(workers=4, **rt_kw)
+    for k, v in bufs0.items():
+        rt.create_buffer(k, v.copy())
+    st = rt.launch(fn, grid=params.grid, block=params.local_size,
+                   scalar_args=sc)
+    return st, rt
+
+
+@pytest.mark.parametrize("site", _PAR_SITES)
+@pytest.mark.parametrize("bench", ["spmv_csr", "reduce0"])
+def test_parallel_site_recovers_to_oracle(bench, site):
+    """Every parallel fault site actually fires at 4 workers on these
+    grids, and the launch recovers to oracle equivalence through the
+    ordinary demote-with-rollback chain (a worker crash is just another
+    EngineFault)."""
+    ostats, obufs = _par_oracle(bench)
+    with faults.inject(site) as inj:
+        st, rt = _par_rt_launch(bench)
+    rep = rt.last_report
+    assert inj.fired >= 1, f"{site} never fired at 4 workers"
+    assert rep.demotions >= 1 and rep.rolled_back == rep.demotions
+    eng = [a for a in rep.attempts if a.outcome == "engine_fault"]
+    assert any(a.reason.startswith("injected fault") for a in eng)
+    assert conf._stats_tuple(st) == ostats, \
+        f"{bench}/{site}: ExecStats diverged through demotion"
+    for k in obufs:
+        np.testing.assert_array_equal(obufs[k], rt.buffers[k],
+                                      err_msg=f"{bench}/{site}: {k}")
+
+
+def test_parallel_worker_fault_surfaces_when_nontransactional():
+    """transactional=False disables the retry chain: a worker-injected
+    EngineFault must surface to the caller, not be silently retried
+    over partially-written buffers."""
+    with faults.inject("parallel.worker.exec") as inj:
+        with pytest.raises(faults.EngineFault):
+            _par_rt_launch("spmv_csr", transactional=False)
+    assert inj.fired >= 1
+
+
+def test_parallel_sites_dead_at_one_worker():
+    """workers=1 is today's exact sequential dispatch: the parallel
+    sites are dead code and armed injections never fire."""
+    for site in _PAR_SITES:
+        fn, bufs0, sc, params = _par_case("spmv_csr")
+        rt = Runtime(workers=1)
+        for k, v in bufs0.items():
+            rt.create_buffer(k, v.copy())
+        with faults.inject(site) as inj:
+            rt.launch(fn, grid=params.grid, block=params.local_size,
+                      scalar_args=sc)
+        assert inj.fired == 0, f"{site} fired at workers=1"
+        assert rt.last_report.demotions == 0
+
+
+def test_parallel_disabled_when_other_sites_armed():
+    """Deterministic injection bookkeeping requires the exact
+    sequential site order: arming any non-parallel site forces the
+    sequential path (faults.parallel_safe), so chunk.dispatch fires in
+    its historical order even at 4 workers."""
+    ostats, obufs = _par_oracle("spmv_csr")
+    with faults.inject("chunk.dispatch", after=1) as inj:
+        st, rt = _par_rt_launch("spmv_csr")
+    assert inj.fired >= 1
+    rep = rt.last_report
+    assert rep.demotions >= 1 and rep.rolled_back == rep.demotions
+    assert conf._stats_tuple(st) == ostats
+    for k in obufs:
+        np.testing.assert_array_equal(obufs[k], rt.buffers[k],
+                                      err_msg=f"parallel-safe {k}")
+
+
+# --------------------------------------------------------------------------
 # randomized sweep (CI's second job leg; seed from the environment)
 # --------------------------------------------------------------------------
 

@@ -441,6 +441,103 @@ def test_jax_disable_jit_invariance(monkeypatch):
 
 
 # --------------------------------------------------------------------------
+# parallel dispatch (core/parallel.py): scheduling nondeterminism — worker
+# count, pool backend, submission interleaving — must be bit-invisible
+# --------------------------------------------------------------------------
+
+def _parallel_case(seed=3, g=96):
+    """Large-grid spmv_csr: enough workgroups that the widened parallel
+    chunk plan has several spans at every swept worker count (the
+    native bench shapes fit in one or two chunks and would leave the
+    merge path untested)."""
+    from repro.volt_bench.suite import _params, _ragged_csr
+    rng = np.random.default_rng(seed)
+    n = g * 32
+    row_ptr, cols = _ragged_csr(rng, n)
+    bufs = {"row_ptr": row_ptr, "cols": cols,
+            "vals": rng.standard_normal(len(cols)).astype(np.float32),
+            "x": rng.standard_normal(n).astype(np.float32),
+            "y": np.zeros(n, np.float32)}
+    fn = _compiled(BENCHES["spmv_csr"].handle, "spmv_csr")
+    return fn, bufs, {"n": n}, _params(g)
+
+
+def _tel_snapshot():
+    t = interp.GRID_TELEMETRY
+    return (t.desyncs, t.remerges, t.compactions, t.batches)
+
+
+@pytest.mark.parametrize("w", [2, 4, 8])
+def test_worker_count_invariance(w):
+    """Buffers AND ExecStats are bit-identical to single-worker (and
+    oracle) dispatch at every worker count — the merge order is chunk
+    order, never completion order."""
+    fn, bufs, sc, params = _parallel_case()
+    oracle = _launch(fn, bufs, params, sc, decoded=False)
+    seq = _launch(fn, bufs, params, sc, grid=True, workers=1)
+    par = _launch(fn, bufs, params, sc, grid=True, workers=w)
+    _assert_same("spmv_csr workers=1 vs oracle", oracle, seq)
+    _assert_same(f"spmv_csr workers={w}", seq, par)
+
+
+def test_worker_env_knob(monkeypatch):
+    """VOLT_WORKERS is the deployment knob: unset/auto/explicit all
+    resolve through the same clamp, and results stay bit-identical."""
+    fn, bufs, sc, params = _parallel_case(seed=5, g=80)
+    seq = _launch(fn, bufs, params, sc, grid=True, workers=1)
+    monkeypatch.setenv("VOLT_WORKERS", "4")
+    par = _launch(fn, bufs, params, sc, grid=True)
+    _assert_same("spmv_csr VOLT_WORKERS=4", seq, par)
+    monkeypatch.setenv("VOLT_WORKERS", "not-a-number")
+    with pytest.raises(ValueError, match="VOLT_WORKERS"):
+        _launch(fn, bufs, params, sc, grid=True)
+
+
+def test_backend_and_interleaving_invariance(monkeypatch):
+    """Same worker count, different SCHEDULES: serial backend (zero
+    concurrency, same chunk plan) vs thread backend under reversed and
+    shuffled submission orders.  Results, stats AND grid telemetry must
+    be identical — the chunk plan and merge order are functions of the
+    launch alone, never of scheduling."""
+    from repro.core import parallel
+    fn, bufs, sc, params = _parallel_case(seed=11, g=64)
+    runs = {}
+    orders = {
+        "fifo": None,
+        "reversed": lambda n: list(range(n))[::-1],
+        "shuffled": lambda n: list(
+            np.random.default_rng(13).permutation(n)),
+    }
+    for backend in ("thread", "serial"):
+        monkeypatch.setenv("VOLT_PAR_BACKEND", backend)
+        for oname, fnorder in orders.items():
+            monkeypatch.setattr(parallel, "SUBMIT_ORDER", fnorder)
+            interp.GRID_TELEMETRY.reset()
+            runs[(backend, oname)] = (
+                _launch(fn, bufs, params, sc, grid=True, workers=4),
+                _tel_snapshot())
+    base = runs[("thread", "fifo")]
+    for key, (res, tel) in runs.items():
+        _assert_same(f"spmv_csr {key}", base[0], res)
+        assert tel == base[1], f"telemetry diverged under {key}"
+
+
+def test_parallel_chunks_off_at_one_worker(monkeypatch):
+    """workers=1 must not touch the pool at all — it is the exact
+    historical sequential dispatch (the `1 = today's path` contract)."""
+    from repro.core import parallel
+
+    def _boom(*a, **k):
+        raise AssertionError("worker pool touched at VOLT_WORKERS=1")
+
+    monkeypatch.setattr(parallel, "get_pool", _boom)
+    fn, bufs, sc, params = _parallel_case(seed=2, g=48)
+    oracle = _launch(fn, bufs, params, sc, decoded=False)
+    seq = _launch(fn, bufs, params, sc, grid=True, workers=1)
+    _assert_same("spmv_csr workers=1", oracle, seq)
+
+
+# --------------------------------------------------------------------------
 # hypothesis fuzzing
 # --------------------------------------------------------------------------
 
@@ -497,6 +594,42 @@ if _HAVE_HYPOTHESIS:
         oracle = _launch(fn, bufs, params, sc, decoded=False)
         got = _launch(fn, bufs, params, sc, grid=True)
         _assert_same(f"cfg{(n_warps, grid, chunk, fraction, seed)}",
+                     oracle, got)
+
+    @needs_hypothesis
+    @settings(max_examples=min(25, _H_EXAMPLES), deadline=None,
+              **_FIXTURE_OK)
+    @given(workers=st.integers(2, 8),
+           chunk=st.sampled_from([1, 3, 8, 64]),
+           par_cap=st.sampled_from([8, 64, 512]),
+           grid=st.integers(2, 12),
+           max_trip=st.integers(0, 24),
+           seed=st.integers(0, 2**31 - 1))
+    def test_parallel_worker_chunk_invariance_random(monkeypatch,
+                                                     workers, chunk,
+                                                     par_cap, grid,
+                                                     max_trip, seed):
+        """Worker count x base chunk size x widening cap x grid shape,
+        over random ragged trip vectors: parallel dispatch must match
+        the oracle bit for bit wherever the chunk plan boundaries land
+        (including degenerate one-wg chunks and caps below the base
+        chunk size)."""
+        monkeypatch.setattr(interp, "_GRID_BATCH_MAX", chunk)
+        monkeypatch.setattr(interp, "_GRID_PAR_ROWS_MAX", par_cap)
+        rng = np.random.default_rng(seed)
+        W = 32
+        total = grid * W
+        params = interp.LaunchParams(grid=grid, local_size=W,
+                                     warp_size=W)
+        fn = _compiled(K.ragged_nested, "ragged_nested")
+        bufs = {"trip": rng.integers(0, max_trip + 1,
+                                     total).astype(np.int32),
+                "x": (rng.standard_normal(total) * 2).astype(np.float32),
+                "out": np.zeros(total, np.float32)}
+        sc = {"n": total}
+        oracle = _launch(fn, bufs, params, sc, decoded=False)
+        got = _launch(fn, bufs, params, sc, grid=True, workers=workers)
+        _assert_same(f"par{(workers, chunk, par_cap, grid, seed)}",
                      oracle, got)
 
     @needs_hypothesis
@@ -560,6 +693,10 @@ if _HAVE_HYPOTHESIS:
 else:
     @needs_hypothesis
     def test_grid_config_invariance_random():
+        pass
+
+    @needs_hypothesis
+    def test_parallel_worker_chunk_invariance_random():
         pass
 
     @needs_hypothesis

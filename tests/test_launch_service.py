@@ -613,3 +613,142 @@ def test_concurrent_submitters_and_solo_launches():
     t = runtime.LAUNCH_TELEMETRY
     assert t["launches"] == 8
     assert len(rt.last_reports()) == 8
+
+
+# --------------------------------------------------------------------------
+# latency-bounded flush: deadline pressure drains the queue from submit()
+# --------------------------------------------------------------------------
+
+def test_pressure_flush_drains_on_submit():
+    """When the oldest queued launch has burned over `pressure` of its
+    deadline budget waiting, the next submit() drains the queue —
+    batching never turns a deadline miss into a queueing artifact."""
+    import time
+    fn = _compiled(BENCHES["vecadd"].handle)
+    rt = Runtime()
+    svc = LaunchService(rt, pressure=0.5)
+    b1, s1, p = _mk_vecadd(0)
+    h1 = svc.submit(fn, grid=p.grid, block=p.local_size, buffers=b1,
+                    scalar_args=s1, deadline_ms=40.0)
+    # fresh entry: far under 50% of its 40ms budget — no drain
+    assert svc.pending() == 1
+    time.sleep(0.03)               # 30ms queued > 0.5 * 40ms
+    b2, s2, _ = _mk_vecadd(1)
+    h2 = svc.submit(fn, grid=p.grid, block=p.local_size, buffers=b2,
+                    scalar_args=s2, deadline_ms=40.0)
+    assert svc.pending() == 0, "pressure submit must drain the queue"
+    assert svc.telemetry["pressure_flushes"] == 1
+    assert h1.error is None and h2.error is None
+    assert h1.stats is not None and h2.stats is not None
+
+
+def test_pressure_none_disables_auto_flush():
+    import time
+    fn = _compiled(BENCHES["vecadd"].handle)
+    rt = Runtime()
+    svc = LaunchService(rt, pressure=None)
+    for seed in (0, 1):
+        b, s, p = _mk_vecadd(seed)
+        svc.submit(fn, grid=p.grid, block=p.local_size, buffers=b,
+                   scalar_args=s, deadline_ms=5.0)
+        time.sleep(0.02)
+    assert svc.pending() == 2      # explicit flush() only
+    assert svc.telemetry["pressure_flushes"] == 0
+    svc.flush()
+
+
+def test_pressure_ignores_deadlineless_entries():
+    """Entries with no deadline (and no governor default) exert no
+    pressure — there is no budget to burn."""
+    import time
+    fn = _compiled(BENCHES["vecadd"].handle)
+    rt = Runtime()
+    assert rt.gov_cfg.deadline_ms is None
+    svc = LaunchService(rt, pressure=0.0)
+    for seed in (0, 1):
+        b, s, p = _mk_vecadd(seed)
+        svc.submit(fn, grid=p.grid, block=p.local_size, buffers=b,
+                   scalar_args=s)
+        time.sleep(0.005)
+    assert svc.pending() == 2
+    assert svc.telemetry["pressure_flushes"] == 0
+    svc.flush()
+
+
+# --------------------------------------------------------------------------
+# parallel workers x coalescing (the multiplicative serve-side win)
+# --------------------------------------------------------------------------
+
+def _mk_big_spmv(seed, g=96):
+    """Coalescible large-grid spmv tenants: the CSR skeleton (and with
+    it every buffer SHAPE) is shared — the group key requires matching
+    signatures — while values, x and the seed-varying data differ."""
+    from repro.volt_bench.suite import _params, _ragged_csr
+    n = g * 32
+    row_ptr, cols = _ragged_csr(np.random.default_rng(5), n)
+    rng = np.random.default_rng(seed)
+    return ({"row_ptr": row_ptr.copy(), "cols": cols.copy(),
+             "vals": rng.standard_normal(len(cols)).astype(np.float32),
+             "x": rng.standard_normal(n).astype(np.float32),
+             "y": np.zeros(n, np.float32)},
+            {"n": n}, _params(g))
+
+
+def test_coalesced_parallel_parity():
+    """Parallel chunk dispatch inside a coalesced group: demixed
+    per-tenant stats and written buffers bit-identical to the
+    sequential coalesced drain AND to each tenant running solo."""
+    fn = _compiled(BENCHES["spmv_csr"].handle)
+    tenants = [_mk_big_spmv(s) for s in (21, 22, 23)]
+    solo = []
+    for bufs, scal, p in tenants:
+        bb = {k: v.copy() for k, v in bufs.items()}
+        st = interp.launch(fn, bb, p, scalar_args=scal)
+        solo.append((st, bb))
+
+    def run(workers):
+        cb = [{k: v.copy() for k, v in bufs.items()}
+              for bufs, _, _ in tenants]
+        ct = [(cb[j], tenants[j][1], tenants[j][2])
+              for j in range(len(tenants))]
+        return interp.launch_coalesced(fn, ct, workers=workers), cb
+
+    seq_stats, seq_bufs = run(1)
+    par_stats, par_bufs = run(4)
+    for j, (sst, sb) in enumerate(solo):
+        assert _stats_sig(seq_stats[j]) == _stats_sig(sst)
+        assert _stats_sig(par_stats[j]) == _stats_sig(sst), \
+            f"tenant {j}: parallel coalesced stats diverged"
+        for k in sb:
+            np.testing.assert_array_equal(seq_bufs[j][k], sb[k])
+            np.testing.assert_array_equal(
+                par_bufs[j][k], sb[k],
+                err_msg=f"tenant {j} buffer {k} (parallel coalesced)")
+
+
+def test_service_parallel_workers_end_to_end():
+    """LaunchService over Runtime(workers=4): groups still coalesce
+    (mode == 'coalesced') and every tenant's results match a
+    single-worker service run bit for bit."""
+    fn = _compiled(BENCHES["spmv_csr"].handle)
+
+    def serve(workers):
+        ins = [_mk_big_spmv(s) for s in (31, 32, 33)]
+        rt = Runtime(workers=workers)
+        svc = LaunchService(rt)
+        hs = [svc.submit(fn, grid=p.grid, block=p.local_size,
+                         buffers=b, scalar_args=s, tenant=j)
+              for j, (b, s, p) in enumerate(ins)]
+        svc.flush()
+        assert all(h.error is None for h in hs)
+        return ins, hs, svc
+
+    ins1, hs1, svc1 = serve(1)
+    ins4, hs4, svc4 = serve(4)
+    assert [h.mode for h in hs4] == [h.mode for h in hs1]
+    assert svc4.telemetry["groups"] == svc1.telemetry["groups"] >= 1
+    for (b1, _, _), (b4, _, _) in zip(ins1, ins4):
+        for k in b1:
+            np.testing.assert_array_equal(b1[k], b4[k])
+    for h1, h4 in zip(hs1, hs4):
+        assert _stats_sig(h1.result()) == _stats_sig(h4.result())
